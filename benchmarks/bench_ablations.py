@@ -1,0 +1,61 @@
+"""Paper Figures 7/8/10/11: branch preference, individual lower bounds,
+time profile, leaf-size sensitivity."""
+from __future__ import annotations
+
+from repro.core.api import P2HIndex
+
+from benchmarks.common import ground_truth, load, timeit
+
+
+def run(csv):
+    x, q = load("Synth-Cluster")
+    k = 10
+    gtd, gti = ground_truth(x, q, k)
+
+    # --- Fig 7: center vs lower-bound branch preference (DFS) ---
+    bc = P2HIndex.build(x, n0=128, variant="bc")
+    for branch in ("center", "bound"):
+        t, (bd, bi, st) = timeit(bc.query, q, k, method="dfs", branch=branch,
+                                 normalize=False, return_stats=True)
+        csv(f"branch_pref,{branch},{t/len(q)*1e3:.3f}ms,"
+            f"nodes={st['nodes_visited']},verified={st['verified']}")
+
+    # --- Fig 8: individual point-level bounds ---
+    variants = {
+        "bc": dict(use_ball=True, use_cone=True),
+        "bc-wo-C": dict(use_ball=True, use_cone=False),
+        "bc-wo-B": dict(use_ball=False, use_cone=True),
+        "bc-wo-BC": dict(use_ball=False, use_cone=False),
+    }
+    for vname, kw in variants.items():
+        t, (bd, bi, st) = timeit(bc.query, q, k, method="dfs",
+                                 normalize=False, return_stats=True, **kw)
+        csv(f"bounds,{vname},{t/len(q)*1e3:.3f}ms,"
+            f"verified={st['verified']},ball_pruned={st['ball_pruned']},"
+            f"cone_pruned={st['cone_pruned']}")
+
+    # --- Fig 10: time-profile proxy (counter breakdown) ---
+    _, (bd, bi, st) = timeit(bc.query, q, k, method="dfs", normalize=False,
+                             return_stats=True)
+    csv(f"profile,bc,ip_ops={st['ip_ops']},verified={st['verified']},"
+        f"leaves={st['leaves_scanned']},pruned_nodes={st['nodes_pruned']}")
+    ball = P2HIndex.build(x, n0=128, variant="ball")
+    _, (bd2, bi2, st2) = timeit(ball.query, q, k, method="dfs",
+                                normalize=False, return_stats=True)
+    csv(f"profile,ball,ip_ops={st2['ip_ops']},verified={st2['verified']},"
+        f"leaves={st2['leaves_scanned']},pruned_nodes={st2['nodes_pruned']}")
+
+    # --- Fig 11: leaf size sweep ---
+    for n0 in (64, 128, 256, 512):
+        idx = P2HIndex.build(x, n0=n0, variant="bc")
+        t, (bd, bi, st) = timeit(idx.query, q, k, method="dfs",
+                                 normalize=False, return_stats=True)
+        csv(f"leaf_size,N0={n0},{t/len(q)*1e3:.3f}ms,"
+            f"verified={st['verified']}")
+
+    # --- Theorem 5: collaborative inner-product computing ---
+    for collab in (True, False):
+        _, (bd, bi, st) = timeit(bc.query, q, k, method="dfs",
+                                 use_collab=collab, normalize=False,
+                                 return_stats=True)
+        csv(f"collab_ip,{'on' if collab else 'off'},ip_ops={st['ip_ops']}")

@@ -1,0 +1,42 @@
+"""Paper Figures 5/6/9: query time vs recall (candidate-fraction sweep for
+the trees, probe-budget sweep for NH/FH), and sensitivity to k."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.api import P2HIndex
+from repro.core.fh import FHIndex
+from repro.core.nh import NHIndex
+
+from benchmarks.common import DATASETS, ground_truth, load, recall, timeit
+
+
+def run(csv):
+    for name in list(DATASETS)[:3]:
+        x, q = load(name)
+        d = x.shape[1]
+        for k in (1, 10):
+            gtd, gti = ground_truth(x, q, k)
+            bc = P2HIndex.build(x, n0=128, variant="bc")
+            for frac in (0.01, 0.05, 0.2, 1.0):
+                t, (bd, bi) = timeit(bc.query, q, k, method="beam",
+                                     frac=frac, normalize=False)
+                csv(f"query,{name},bc-tree(frac={frac}),k={k},"
+                    f"{t/len(q)*1e3:.3f}ms,recall={recall(bi, gti):.3f}")
+            t, (bd, bi) = timeit(bc.query, q, k, method="dfs",
+                                 normalize=False)
+            csv(f"query,{name},bc-tree(dfs-exact),k={k},"
+                f"{t/len(q)*1e3:.3f}ms,recall={recall(bi, gti):.3f}")
+            nh = NHIndex.build(x, m=16, lam=4 * d)
+            fh = FHIndex.build(x, m=16, lam=4 * d)
+            for budget in (256, 2048):
+                _, (nd, ni, _) = timeit(nh.query, q, k, budget=budget,
+                                        normalize=False)
+                t_nh, _ = timeit(nh.query, q, k, budget=budget,
+                                 normalize=False)
+                csv(f"query,{name},nh(budget={budget}),k={k},"
+                    f"{t_nh/len(q)*1e3:.3f}ms,recall={recall(ni, gti):.3f}")
+                t_fh, (fd, fi, _) = timeit(fh.query, q, k, budget=budget,
+                                           normalize=False)
+                csv(f"query,{name},fh(budget={budget}),k={k},"
+                    f"{t_fh/len(q)*1e3:.3f}ms,recall={recall(fi, gti):.3f}")

@@ -1,0 +1,50 @@
+"""Shared benchmark helpers: datasets, recall, timing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import exact_search
+from repro.core.balltree import append_ones, normalize_query
+from repro.data import make_p2h_dataset
+
+# container-scale stand-ins for the paper's dataset grid (Table II):
+# name -> (n, d, kind). Kinds span the paper's regimes: clustered image-like
+# data, isotropic, unit-norm (the pre-NH/FH hashing regime), heavy tails.
+DATASETS = {
+    "Synth-Normal": (20000, 32, "normal"),
+    "Synth-Cluster": (20000, 64, "clustered"),
+    "Synth-Unit": (20000, 48, "unit"),
+    "Synth-Heavy": (10000, 96, "heavy"),
+}
+N_QUERIES = 20
+
+
+def load(name, seed=0):
+    n, d, kind = DATASETS[name]
+    x, q = make_p2h_dataset(n, d, kind=kind, n_queries=N_QUERIES, seed=seed)
+    return x, normalize_query(q)
+
+
+def ground_truth(x, q, k):
+    import jax.numpy as jnp
+
+    d, i = exact_search(jnp.asarray(append_ones(x)), jnp.asarray(q), k=k)
+    return np.asarray(d), np.asarray(i)
+
+
+def recall(ids, gt_ids):
+    hits = sum(len(set(a.tolist()) & set(b.tolist()))
+               for a, b in zip(ids, gt_ids))
+    return hits / gt_ids.size
+
+
+def timeit(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out

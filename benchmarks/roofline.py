@@ -1,0 +1,129 @@
+"""Roofline table builder (deliverable g): reads the dry-run artifacts and
+derives the three terms per (arch x shape) on the single-pod mesh.
+
+  compute term    = metered FLOPs / peak_FLOPs          [s]
+  memory term     = metered HBM bytes / HBM_bw           [s]
+  collective term = metered wire bytes / link_bw         [s]
+
+All metered quantities are PER DEVICE (XLA reports post-SPMD shapes); the
+hardware constants are per chip, so the terms are directly comparable.
+MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill) or 2*N_active*B (decode)
+with N_active excluding embeddings and unrouted experts.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12     # TPU v5e bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+CHIPS = 256             # single-pod mesh
+
+
+def model_flops_analytic(arch, shape):
+    """Useful-FLOPs estimate per device: 6ND (matmul params; MoE counts
+    routed experts only; the LM head counts fully) + the PaLM-style
+    attention term 2*B*S*Skv*H*Dh per attention matmul pair, halved for
+    causal masks and windowed for local layers; x3 for the backward."""
+    from repro.configs import SHAPES, get_config
+    import numpy as np
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    # active (non-embedding) params
+    from repro.configs import get_model
+    import jax
+    model, _ = get_model(arch)
+    aparams, _ = model.abstract_params()
+    flat = jax.tree_util.tree_flatten_with_path(aparams)[0]
+    total = emb = expert = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        total += n
+        if name == "embed" or "pos" in name:
+            emb += n
+        if "ffn/w" in name and cfg.num_experts:
+            expert += n
+    active = total - emb
+    if cfg.tie_embed:  # tied head still does the logits matmul
+        active += cfg.vocab * cfg.d_model
+    if cfg.num_experts:
+        active -= expert * (1 - cfg.top_k / cfg.num_experts)
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    tokens = B * (S if kind != "decode" else 1)
+    mult = {"train": 6, "prefill": 2, "decode": 2}[kind]
+    f = mult * active * tokens
+
+    # attention score+value matmuls (only attn mixers)
+    Dh, Hq = cfg.hd, cfg.n_heads
+    fa = 0.0
+    for i in range(cfg.n_layers):
+        spec = cfg.pattern[i % len(cfg.pattern)]
+        if spec.mixer != "attn":
+            continue
+        if kind == "decode":
+            skv = min(S, spec.window or S)
+            fa += 4 * B * 1 * skv * Hq * Dh
+        else:
+            skv = min(S, spec.window or S)
+            # causal: each query sees ~skv/2 (full) or ~W (local)
+            eff = (skv / 2) if spec.window is None else skv
+            fa += 4 * B * S * eff * Hq * Dh
+    fa *= 3 if kind == "train" else 1
+    return (f + fa) / CHIPS
+
+
+def build_table(dryrun_dir="artifacts/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*__single.json"))):
+        r = json.load(open(path))
+        if r.get("status") != "ok" or "metered" not in r \
+                or "total" not in r.get("metered", {}):
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             status=r.get("status", "?"),
+                             reason=r.get("reason", r.get("error", ""))[:60]))
+            continue
+        tot = r["metered"]["total"]
+        t_c = tot["flops"] / PEAK_FLOPS
+        t_m = tot["bytes"] / HBM_BW
+        t_x = tot["wire"] / LINK_BW
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                  key=lambda kv: kv[1])
+        mf = model_flops_analytic(r["arch"], r["shape"])
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], status="ok",
+            compute_s=t_c, memory_s=t_m, collective_s=t_x,
+            bottleneck=dom[0],
+            model_flops=mf, hlo_flops=tot["flops"],
+            useful_frac=mf / max(tot["flops"], 1),
+            roofline_frac=max(t_c, 1e-30) / max(t_c, t_m, t_x),
+            temp_gb=r["memory"]["temp_size_in_bytes"] / 1e9,
+            arg_gb=r["memory"]["argument_size_in_bytes"] / 1e9,
+        ))
+    return rows
+
+
+def run(csv):
+    rows = build_table()
+    for r in rows:
+        if r["status"] != "ok":
+            csv(f"roofline,{r['arch']},{r['shape']},{r['status']},"
+                f"{r.get('reason','')}")
+            continue
+        csv(f"roofline,{r['arch']},{r['shape']},"
+            f"compute={r['compute_s']*1e3:.2f}ms,"
+            f"memory={r['memory_s']*1e3:.2f}ms,"
+            f"collective={r['collective_s']*1e3:.2f}ms,"
+            f"bottleneck={r['bottleneck']},"
+            f"useful_flops_frac={r['useful_frac']:.2f},"
+            f"roofline_frac={r['roofline_frac']:.2f},"
+            f"temp={r['temp_gb']:.1f}GB")
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,0 +1,46 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+table from the dry-run artifacts.  Prints CSV lines; ``python -m
+benchmarks.run`` is the bench_output.txt entry point."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_ablations, bench_distributed,
+                            bench_indexing, bench_kernel, bench_query)
+
+    t0 = time.time()
+    emitted = []
+
+    def csv(line: str):
+        emitted.append(line)
+        print(line, flush=True)
+
+    mods = [
+        ("Table III (indexing overhead)", bench_indexing),
+        ("Figs 5/6 (query time vs recall, k)", bench_query),
+        ("Figs 7/8/10/11 (+Thm 5) ablations", bench_ablations),
+        ("Kernel path", bench_kernel),
+        ("Distributed lambda exchange", bench_distributed),
+    ]
+    for title, mod in mods:
+        print(f"# === {title} ===", flush=True)
+        try:
+            mod.run(csv)
+        except Exception as e:  # keep the suite going; record the failure
+            csv(f"ERROR,{mod.__name__},{type(e).__name__}: {e}")
+    print("# === Roofline (from dry-run artifacts) ===", flush=True)
+    try:
+        from benchmarks import roofline
+        roofline.run(csv)
+    except Exception as e:
+        csv(f"ERROR,roofline,{type(e).__name__}: {e}")
+    print(f"# done in {time.time()-t0:.1f}s; {len(emitted)} rows")
+    if any(r.startswith("ERROR") for r in emitted):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

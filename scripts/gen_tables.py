@@ -1,0 +1,43 @@
+"""Generate the dry-run + roofline markdown tables from artifacts."""
+import glob, json, os, sys
+sys.path.insert(0, "src")
+
+def dryrun_table():
+    rows = []
+    for path in sorted(glob.glob("artifacts/dryrun/*.json")):
+        if "__opt-" in path:
+            continue
+        r = json.load(open(path))
+        mem = r.get("memory", {})
+        rows.append((r["arch"], r["shape"], r["mesh"], r["status"],
+                     mem.get("temp_size_in_bytes", 0) / 1e9,
+                     mem.get("argument_size_in_bytes", 0) / 1e9,
+                     r.get("compile_s", ""),
+                     len(r.get("fallbacks", [])) if r["status"] == "ok" else ""))
+    out = ["| arch | shape | mesh | status | temp GB/dev | args GB/dev | compile s | shard fallbacks |",
+           "|---|---|---|---|---|---|---|---|"]
+    for a, s, m, st, t, g, c, f in rows:
+        tg = f"{t:.1f}" if st == "ok" else "-"
+        ag = f"{g:.2f}" if st == "ok" else "-"
+        out.append(f"| {a} | {s} | {m} | {st} | {tg} | {ag} | {c} | {f} |")
+    return "\n".join(out)
+
+def roofline_table():
+    from benchmarks.roofline import build_table
+    rows = build_table()
+    out = ["| arch | shape | compute s | memory s | collective s | bottleneck | MODEL/HLO flops | roofline frac | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | {r['status']} | - | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['bottleneck']} | {r['useful_frac']:.2f} | "
+            f"{r['roofline_frac']:.2f} | {r['temp_gb']:.1f} |")
+    return "\n".join(out)
+
+if __name__ == "__main__":
+    which = sys.argv[1]
+    print(dryrun_table() if which == "dryrun" else roofline_table())

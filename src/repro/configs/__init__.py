@@ -1,0 +1,26 @@
+"""One config module per assigned architecture (exact numbers from the
+brief) plus the paper's own P2HNNS experiment grid (bctree_paper).
+
+Each module exposes ``CONFIG`` (full size -- dry-run only, never
+allocated on CPU) and ``SMOKE`` (reduced same-family config for CPU
+tests).  ``SHAPES`` maps the assigned input-shape ids to (kind, seq,
+global_batch); applicability skips live in ``shape_applicable``.
+"""
+from repro.models.registry import ARCH_IDS, MODEL_FAMILIES, get_config, get_model  # noqa: F401
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention / O(1)-state decode: run it
+    for the SSM/hybrid archs, skip for pure full-attention archs (brief)."""
+    if shape == "long_500k" and MODEL_FAMILIES[arch] not in ("ssm", "hybrid"):
+        return False, ("skip: pure full-attention architecture -- 500k-token "
+                       "KV-cache decode requires sub-quadratic attention "
+                       "(see DESIGN.md table)")
+    return True, ""

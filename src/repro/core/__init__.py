@@ -1,0 +1,25 @@
+"""Core library: the paper's contribution (Ball-Tree / BC-Tree P2HNNS).
+
+Public API:
+  * :class:`~repro.core.api.P2HIndex` -- build/query/save/load.
+  * :func:`~repro.core.exact.exact_search` -- brute-force oracle.
+  * :mod:`~repro.core.bounds` -- Theorem 2 / Corollary 1 / Theorem 3 bounds.
+  * :mod:`~repro.core.distributed` -- shard_map multi-device index.
+  * :mod:`~repro.core.nh` / :mod:`~repro.core.fh` -- hashing baselines.
+"""
+from repro.core.api import P2HIndex
+from repro.core.balltree import FlatTree, append_ones, build_tree, normalize_query
+from repro.core.exact import exact_search
+from repro.core.search import beam_search, dfs_search, sweep_search
+
+__all__ = [
+    "P2HIndex",
+    "FlatTree",
+    "append_ones",
+    "build_tree",
+    "normalize_query",
+    "exact_search",
+    "dfs_search",
+    "sweep_search",
+    "beam_search",
+]

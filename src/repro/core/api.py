@@ -1,0 +1,147 @@
+"""High-level P2HNNS index API.
+
+``P2HIndex`` is the user-facing entry point of the paper's contribution:
+
+    >>> idx = P2HIndex.build(data, n0=256, variant="bc")
+    >>> dists, ids = idx.query(q, k=10)                  # exact, DFS
+    >>> dists, ids = idx.query(q, k=10, method="sweep")  # exact, TPU-native
+    >>> dists, ids = idx.query(q, k=10, method="beam", frac=0.05)  # approx
+
+Variants:
+  * ``"ball"`` -- plain Ball-Tree (Algorithm 3): node-level bound only.
+  * ``"bc"``   -- BC-Tree (Algorithm 5): + point-level ball & cone bounds
+                  and collaborative inner-product computing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import search
+from repro.core.balltree import FlatTree, build_tree, normalize_query
+
+__all__ = ["P2HIndex", "BuildReport"]
+
+
+@dataclasses.dataclass
+class BuildReport:
+    build_seconds: float
+    index_bytes: int
+    num_nodes: int
+    num_leaves: int
+    max_depth: int
+
+
+@dataclasses.dataclass
+class P2HIndex:
+    tree: FlatTree
+    variant: str  # "ball" | "bc"
+    report: BuildReport
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        data: np.ndarray,
+        n0: int = 256,
+        *,
+        variant: str = "bc",
+        seed: int = 0,
+        append_one: bool = True,
+    ) -> "P2HIndex":
+        assert variant in ("ball", "bc"), variant
+        t0 = time.perf_counter()
+        tree = build_tree(data, n0=n0, seed=seed, append_one=append_one)
+        dt = time.perf_counter() - t0
+        report = BuildReport(
+            build_seconds=dt,
+            index_bytes=tree.index_bytes(bc=variant == "bc"),
+            num_nodes=tree.num_nodes,
+            num_leaves=tree.num_leaves,
+            max_depth=tree.max_depth,
+        )
+        return cls(tree=tree, variant=variant, report=report)
+
+    # ------------------------------------------------------------------
+    def query(
+        self,
+        queries: np.ndarray,
+        k: int = 1,
+        *,
+        method: str = "dfs",
+        frac: float = 1.0,
+        branch: str = "center",
+        normalize: bool = True,
+        return_stats: bool = False,
+        **kw: Any,
+    ):
+        """Top-k P2HNNS. ``queries`` is (B, d) (or (d,)).
+
+        With ``normalize=True`` the hyperplane coefficient vectors are
+        rescaled so the normal has unit norm (paper Section II) -- distances
+        are then true point-to-hyperplane distances.
+        """
+        q = np.atleast_2d(np.asarray(queries))
+        if normalize:
+            q = normalize_query(q)
+        q = q.astype(np.float32)
+        is_bc = self.variant == "bc"
+        common = dict(use_ball=is_bc and kw.pop("use_ball", True),
+                      use_cone=is_bc and kw.pop("use_cone", True))
+        if method == "dfs":
+            bd, bi, cnt = search.dfs_search(
+                self.tree, q, k, branch=branch,
+                use_collab=is_bc and kw.pop("use_collab", True),
+                max_candidates=kw.pop("max_candidates", None), **common)
+        elif method == "sweep":
+            bd, bi, cnt = search.sweep_search(
+                self.tree, q, k, order=branch if branch == "bound" else "center",
+                frac=1.0, **common, **kw)
+        elif method == "beam":
+            bd, bi, cnt = search.sweep_search(
+                self.tree, q, k, order=branch if branch == "bound" else "center",
+                frac=frac, **common, **kw)
+        elif method == "pallas":
+            from repro.kernels import ops  # local import: optional backend
+
+            bd, bi, cnt = ops.sweep_search_pallas(
+                self.tree, q, k, frac=frac, **common, **kw)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        if return_stats:
+            return np.asarray(bd), np.asarray(bi), search.SearchStats(cnt)
+        return np.asarray(bd), np.asarray(bi)
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        import jax
+
+        arrays = {
+            f.name: np.asarray(getattr(self.tree, f.name))
+            for f in dataclasses.fields(FlatTree)
+            if not f.metadata.get("static", False)
+        }
+        meta = {
+            f.name: getattr(self.tree, f.name)
+            for f in dataclasses.fields(FlatTree)
+            if f.metadata.get("static", False)
+        }
+        del jax
+        with open(path, "wb") as fh:
+            pickle.dump(
+                dict(arrays=arrays, meta=meta, variant=self.variant,
+                     report=dataclasses.asdict(self.report)),
+                fh,
+            )
+
+    @classmethod
+    def load(cls, path: str) -> "P2HIndex":
+        with open(path, "rb") as fh:
+            blob = pickle.load(fh)
+        tree = FlatTree(**blob["arrays"], **blob["meta"])
+        return cls(tree=tree, variant=blob["variant"],
+                   report=BuildReport(**blob["report"]))

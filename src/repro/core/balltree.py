@@ -1,0 +1,244 @@
+"""Flat-array Ball-Tree / BC-Tree construction (paper Algorithms 1, 2, 4).
+
+Construction runs on host in numpy (it is one-time O(d n log n) index-build
+work, inherently sequential) and produces a :class:`FlatTree` of device
+arrays laid out for TPU consumption:
+
+  * nodes in preorder: ``centers (m,d)``, ``radii (m,)``, ``counts (m,)``,
+    ``left/right (m,)`` child ids (-1 for leaves), ``node_leaf (m,)`` leaf
+    slot (-1 for internal nodes);
+  * leaves padded to exactly ``n0`` points each; leaf ``j`` owns rows
+    ``[j*n0, (j+1)*n0)`` of the reordered ``points`` array (pad rows are
+    zeros with ``point_ids == -1``) -- leaves are scan *tiles*;
+  * BC-Tree cone tables aligned with ``points``: ``rx = ||x - N.c||``,
+    ``xcos = ||x|| cos(phi_x)``, ``xsin = ||x|| sin(phi_x)``; within a leaf,
+    points are sorted by descending ``rx`` (paper Alg. 4 line 9) so the
+    point-level ball bound prunes in batches / whole remaining tiles.
+
+Internal-node centers are computed via the linearity of the centroid
+(Lemma 1) from the children's centers, exactly as BC-Tree's Alg. 4 line 16.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["FlatTree", "build_tree", "append_ones", "normalize_query"]
+
+
+def append_ones(data: np.ndarray) -> np.ndarray:
+    """Paper Section II: x = (p; 1)."""
+    n = data.shape[0]
+    return np.concatenate([data, np.ones((n, 1), dtype=data.dtype)], axis=1)
+
+
+def normalize_query(q: np.ndarray) -> np.ndarray:
+    """Rescale hyperplane coefficients so ||q[:-1]|| = 1 (paper Section II)."""
+    q = np.asarray(q, dtype=np.float64)
+    scale = np.linalg.norm(q[..., :-1], axis=-1, keepdims=True)
+    scale = np.where(scale == 0, 1.0, scale)
+    return (q / scale).astype(np.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlatTree:
+    """Flattened Ball/BC-Tree. Array fields are pytree leaves."""
+
+    # --- node arrays (length m, preorder) ---
+    centers: Any  # (m, d) f32
+    radii: Any  # (m,) f32
+    counts: Any  # (m,) i32  -- |N|
+    left: Any  # (m,) i32  -- child node id or -1
+    right: Any  # (m,) i32
+    node_leaf: Any  # (m,) i32  -- leaf slot or -1
+    # --- leaf arrays (length L = num leaves) ---
+    leaf_centers: Any  # (L, d) f32  (duplicated rows of `centers` for sweep)
+    leaf_radii: Any  # (L,) f32
+    leaf_cnorm: Any  # (L,) f32  -- ||leaf center|| (clamped)
+    # --- point arrays (length L * n0, leaf-tiled) ---
+    points: Any  # (L*n0, d) f32, zero pad rows
+    point_ids: Any  # (L*n0,) i32, -1 for pad
+    rx: Any  # (L*n0,) f32, descending within each leaf (pad = -1)
+    xcos: Any  # (L*n0,) f32
+    xsin: Any  # (L*n0,) f32
+    # --- static metadata ---
+    n0: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    d: int = dataclasses.field(metadata=dict(static=True))
+    num_nodes: int = dataclasses.field(metadata=dict(static=True))
+    num_leaves: int = dataclasses.field(metadata=dict(static=True))
+    max_depth: int = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    def index_bytes(self, bc: bool = True) -> int:
+        """Index size in bytes (Table III metric).
+
+        The Ball-Tree index stores nodes + the reordered data layout
+        bookkeeping; BC-Tree adds the three n-sized cone/radius tables
+        (paper Theorem 6: O(nd + 3n)).  The raw data points themselves are
+        counted as *data*, not index, matching the paper's accounting.
+        """
+        node_bytes = (
+            self.centers.nbytes
+            + self.radii.nbytes
+            + self.counts.nbytes
+            + self.left.nbytes
+            + self.right.nbytes
+            + self.node_leaf.nbytes
+            + self.point_ids.nbytes
+        )
+        if bc:
+            node_bytes += self.rx.nbytes + self.xcos.nbytes + self.xsin.nbytes
+        return int(node_bytes)
+
+
+# ----------------------------------------------------------------------
+# Construction
+# ----------------------------------------------------------------------
+
+
+def _split(points: np.ndarray, idx: np.ndarray, rng: np.random.Generator):
+    """Paper Algorithm 2 (seed-grow rule) with a degenerate-split guard."""
+    sub = points[idx]
+    v = sub[rng.integers(len(idx))]
+    xl = sub[np.argmax(((sub - v) ** 2).sum(axis=1))]
+    xr = sub[np.argmax(((sub - xl) ** 2).sum(axis=1))]
+    dl = ((sub - xl) ** 2).sum(axis=1)
+    dr = ((sub - xr) ** 2).sum(axis=1)
+    left_mask = dl <= dr
+    if left_mask.all() or (~left_mask).all():
+        # all points coincide (duplicates) -- split in half arbitrarily
+        half = len(idx) // 2
+        left_mask = np.zeros(len(idx), dtype=bool)
+        left_mask[:half] = True
+    return idx[left_mask], idx[~left_mask]
+
+
+def build_tree(
+    data: np.ndarray,
+    n0: int = 256,
+    *,
+    seed: int = 0,
+    append_one: bool = True,
+    dtype=np.float32,
+) -> FlatTree:
+    """Build a flat BC-Tree (superset of Ball-Tree) from raw data.
+
+    Args:
+      data: (n, d-1) raw points, or (n, d) if ``append_one=False``.
+      n0: max leaf size == scan tile size (multiples of 128 recommended).
+    """
+    data = np.asarray(data, dtype=np.float64)
+    if append_one:
+        data = append_ones(data)
+    n, d = data.shape
+    rng = np.random.default_rng(seed)
+
+    nodes = []  # (center, radius, count, left, right, leaf_slot, depth)
+    leaf_point_idx: list[np.ndarray] = []
+
+    sys.setrecursionlimit(max(10000, sys.getrecursionlimit()))
+    max_depth = [0]
+
+    def rec(idx: np.ndarray, depth: int) -> int:
+        node_id = len(nodes)
+        nodes.append(None)  # reserve preorder slot
+        max_depth[0] = max(max_depth[0], depth)
+        sub = data[idx]
+        if len(idx) <= n0:  # leaf
+            center = sub.mean(axis=0)
+            radius = float(np.sqrt(((sub - center) ** 2).sum(axis=1).max()))
+            slot = len(leaf_point_idx)
+            leaf_point_idx.append(idx)
+            nodes[node_id] = (center, radius, len(idx), -1, -1, slot, depth)
+        else:
+            li, ri = _split(data, idx, rng)
+            lid = rec(li, depth + 1)
+            rid = rec(ri, depth + 1)
+            # Lemma 1: centroid linearity (BC-Tree Alg. 4 line 16)
+            cl, _, nl = nodes[lid][0], nodes[lid][1], nodes[lid][2]
+            cr, nr = nodes[rid][0], nodes[rid][2]
+            center = (cl * nl + cr * nr) / (nl + nr)
+            radius = float(np.sqrt(((sub - center) ** 2).sum(axis=1).max()))
+            nodes[node_id] = (center, radius, len(idx), lid, rid, -1, depth)
+        return node_id
+
+    rec(np.arange(n), 0)
+
+    m = len(nodes)
+    L = len(leaf_point_idx)
+    centers = np.zeros((m, d), dtype=dtype)
+    radii = np.zeros((m,), dtype=dtype)
+    counts = np.zeros((m,), dtype=np.int32)
+    left = np.full((m,), -1, dtype=np.int32)
+    right = np.full((m,), -1, dtype=np.int32)
+    node_leaf = np.full((m,), -1, dtype=np.int32)
+    for i, (c, r, cnt, lc, rc, slot, _) in enumerate(nodes):
+        centers[i] = c
+        radii[i] = r
+        counts[i] = cnt
+        left[i] = lc
+        right[i] = rc
+        node_leaf[i] = slot
+
+    points = np.zeros((L * n0, d), dtype=dtype)
+    point_ids = np.full((L * n0,), -1, dtype=np.int32)
+    rx = np.full((L * n0,), -1.0, dtype=dtype)  # pad sorts to the end (desc)
+    xcos = np.zeros((L * n0,), dtype=dtype)
+    xsin = np.zeros((L * n0,), dtype=dtype)
+    leaf_centers = np.zeros((L, d), dtype=dtype)
+    leaf_radii = np.zeros((L,), dtype=dtype)
+
+    leaf_node_ids = np.where(node_leaf >= 0)[0]
+    for node_id in leaf_node_ids:
+        slot = int(node_leaf[node_id])
+        idx = leaf_point_idx[slot]
+        c = np.asarray(nodes[node_id][0])
+        sub = data[idx]
+        r_x = np.sqrt(((sub - c) ** 2).sum(axis=1))
+        order = np.argsort(-r_x, kind="stable")  # descending rx (Alg. 4 l.9)
+        idx, sub, r_x = idx[order], sub[order], r_x[order]
+        xn = np.sqrt((sub**2).sum(axis=1))
+        cn = max(float(np.sqrt((c**2).sum())), 1e-12)
+        x_cos = (sub @ c) / cn  # ||x|| cos(phi_x)
+        x_sin = np.sqrt(np.maximum(xn**2 - x_cos**2, 0.0))
+        s, e = slot * n0, slot * n0 + len(idx)
+        points[s:e] = sub
+        point_ids[s:e] = idx
+        rx[s:e] = r_x
+        xcos[s:e] = x_cos
+        xsin[s:e] = x_sin
+        leaf_centers[slot] = c
+        leaf_radii[slot] = nodes[node_id][1]
+
+    leaf_cnorm = np.maximum(
+        np.sqrt((leaf_centers.astype(np.float64) ** 2).sum(axis=1)), 1e-12
+    ).astype(dtype)
+
+    return FlatTree(
+        centers=centers,
+        radii=radii,
+        counts=counts,
+        left=left,
+        right=right,
+        node_leaf=node_leaf,
+        leaf_centers=leaf_centers,
+        leaf_radii=leaf_radii,
+        leaf_cnorm=leaf_cnorm,
+        points=points,
+        point_ids=point_ids,
+        rx=rx,
+        xcos=xcos,
+        xsin=xsin,
+        n0=n0,
+        n=n,
+        d=d,
+        num_nodes=m,
+        num_leaves=L,
+        max_depth=max_depth[0],
+    )

@@ -1,0 +1,247 @@
+"""Distributed P2HNNS: the index sharded over a mesh axis via shard_map.
+
+The paper motivates Ball-Tree partly because "we can leverage it to split
+massive data sets into fine granularities for scalable and distributed
+P2HNNS" (Section III-A, point 4).  This module is that scale-out story:
+
+  * the database is partitioned into ``S`` shards along the ``data`` mesh
+    axis (composed with the ``pod`` axis on multi-pod meshes);
+  * each device builds/holds an independent local BC-Tree over its shard
+    (flat arrays padded to common shapes and stacked with a leading shard
+    dimension, so the stacked index is an ordinary sharded pytree);
+  * a query is answered with a **two-round lambda exchange**:
+
+      round 1:  every shard sweeps a small prefix (``frac1``) of its most
+                promising leaves -> local top-k -> ``pmin`` over shards
+                gives lambda0, a *valid upper bound on the global k-th
+                distance* (the union of shards contains >= k candidates
+                below any shard's local k-th);
+      round 2:  every shard runs the full exact sweep with
+                ``lambda_cap=lambda0`` -- distant shards prune almost all
+                of their tiles immediately;
+
+    followed by an ``all_gather`` of the per-shard top-k and a replicated
+    merge.  Exact: round-2 pruning only ever discards candidates whose
+    lower bound exceeds an upper bound on the global k-th distance.
+
+This is a beyond-paper distributed optimization; its pruning win is
+measured in ``benchmarks/bench_distributed.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import search
+from repro.core.balltree import FlatTree, build_tree
+
+__all__ = ["ShardedP2HIndex"]
+
+_ARRAY_FIELDS = [
+    f.name for f in dataclasses.fields(FlatTree) if not f.metadata.get("static", False)
+]
+_STATIC_FIELDS = [
+    f.name for f in dataclasses.fields(FlatTree) if f.metadata.get("static", False)
+]
+
+
+def _pad_tree(t: FlatTree, m: int, L: int, n0: int) -> FlatTree:
+    """Pad node arrays to m nodes and leaf/point arrays to L leaves.
+
+    Pad leaves replicate leaf 0's geometry but contain no valid points
+    (point_ids == -1), so every search scheme treats them as empty tiles.
+    """
+    pn = m - t.num_nodes
+    pl = L - t.num_leaves
+
+    def padn(a):  # node arrays
+        w = [(0, pn)] + [(0, 0)] * (a.ndim - 1)
+        return np.pad(np.asarray(a), w)
+
+    def padl(a):  # leaf arrays: replicate row 0 geometry
+        if pl == 0:
+            return np.asarray(a)
+        rep = np.broadcast_to(np.asarray(a)[:1], (pl,) + a.shape[1:])
+        return np.concatenate([np.asarray(a), rep], axis=0)
+
+    def padp(a, fill):  # point arrays
+        pad_rows = pl * n0
+        w = [(0, pad_rows)] + [(0, 0)] * (a.ndim - 1)
+        return np.pad(np.asarray(a), w, constant_values=fill)
+
+    return FlatTree(
+        centers=padn(t.centers),
+        radii=padn(t.radii),
+        counts=padn(t.counts),
+        left=padn(t.left),
+        right=padn(t.right),
+        node_leaf=padn(t.node_leaf),
+        leaf_centers=padl(t.leaf_centers),
+        leaf_radii=padl(t.leaf_radii),
+        leaf_cnorm=padl(t.leaf_cnorm),
+        points=padp(t.points, 0.0),
+        point_ids=padp(t.point_ids, -1),
+        rx=padp(t.rx, -1.0),
+        xcos=padp(t.xcos, 0.0),
+        xsin=padp(t.xsin, 0.0),
+        n0=t.n0,
+        n=t.n,
+        d=t.d,
+        num_nodes=m,
+        num_leaves=L,
+        max_depth=t.max_depth,
+    )
+
+
+@dataclasses.dataclass
+class ShardedP2HIndex:
+    """A BC-Tree forest sharded across devices."""
+
+    stacked: FlatTree  # arrays have leading shard dim S; statics are common
+    mesh: Mesh
+    axes: tuple  # mesh axis name(s) the shard dim is mapped to
+    num_shards: int
+    shard_n: int  # points per shard (before leaf padding)
+    true_n: int  # database size before shard padding
+
+    @classmethod
+    def build(
+        cls,
+        data: np.ndarray,
+        mesh: Mesh,
+        *,
+        axes: Sequence[str] | str = ("data",),
+        n0: int = 256,
+        seed: int = 0,
+        append_one: bool = True,
+    ) -> "ShardedP2HIndex":
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        S = int(np.prod([mesh.shape[a] for a in axes]))
+        n = data.shape[0]
+        shard_n = -(-n // S)
+        # pad the database by repeating row 0; duplicates are de-duplicated
+        # at merge time by global id (pad ids map to id % n).
+        pad = S * shard_n - n
+        if pad:
+            data = np.concatenate([data, data[:pad]], axis=0)
+        trees = [
+            build_tree(
+                data[s * shard_n : (s + 1) * shard_n],
+                n0=n0,
+                seed=seed + s,
+                append_one=append_one,
+            )
+            for s in range(S)
+        ]
+        m = max(t.num_nodes for t in trees)
+        L = max(t.num_leaves for t in trees)
+        depth = max(t.max_depth for t in trees)
+        trees = [
+            dataclasses.replace(_pad_tree(t, m, L, n0), max_depth=depth)
+            for t in trees
+        ]
+        stacked_arrays = {
+            f: np.stack([np.asarray(getattr(t, f)) for t in trees])
+            for f in _ARRAY_FIELDS
+        }
+        statics = {f: getattr(trees[0], f) for f in _STATIC_FIELDS}
+        stacked = FlatTree(**stacked_arrays, **statics)
+        # place each shard's tree on its devices (replicated over other axes)
+        spec = P(axes)
+        sharding = NamedSharding(mesh, spec)
+        stacked = jax.tree.map(
+            lambda a: jax.device_put(
+                a, NamedSharding(mesh, P(axes, *(None,) * (a.ndim - 1)))
+            ),
+            stacked,
+        )
+        del sharding, spec
+        return cls(
+            stacked=stacked,
+            mesh=mesh,
+            axes=axes,
+            num_shards=S,
+            shard_n=shard_n,
+            true_n=n,
+        )
+
+    # ------------------------------------------------------------------
+    def query(
+        self, queries, k: int = 1, *, frac1: float = 0.02, normalize: bool = True, **kw
+    ):
+        """Exact distributed top-k with the two-round lambda exchange."""
+        q = np.atleast_2d(queries)
+        if normalize:
+            from repro.core.balltree import normalize_query
+
+            q = normalize_query(q)
+        q = jnp.asarray(q, dtype=jnp.float32)
+        bd, bi, cnt = _sharded_query(
+            self.stacked,
+            q,
+            mesh=self.mesh,
+            axes=self.axes,
+            k=k,
+            frac1=frac1,
+            shard_n=self.shard_n,
+            n=self.true_n,
+            **kw,
+        )
+        return np.asarray(bd), np.asarray(bi), search.SearchStats(cnt)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "axes", "k", "frac1", "shard_n", "n")
+)
+def _sharded_query(stacked: FlatTree, queries, *, mesh, axes, k, frac1, shard_n, n):
+    statics = {f: getattr(stacked, f) for f in _STATIC_FIELDS}
+
+    def local(tree_arrays, q):
+        tree = FlatTree(**{f: a[0] for f, a in tree_arrays.items()}, **statics)
+        sidx = jax.lax.axis_index(axes[0])
+        if len(axes) > 1:
+            for a in axes[1:]:
+                sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+        # round 1: cheap local prefix sweep -> global lambda0
+        bd1, _, cnt1 = search.sweep_search(tree, q, k, frac=frac1)
+        lam0 = jax.lax.pmin(bd1[:, k - 1], axes)
+        # round 2: full exact sweep, pruned by lambda0
+        bd, bi, cnt = search.sweep_search(tree, q, k, lambda_cap=lam0)
+        gid = sidx * shard_n + bi
+        gid = jnp.where(bi >= 0, gid % n, -1)  # pad duplicates -> true id
+        all_d = jax.lax.all_gather(bd, axes, tiled=False)  # (S, B, k)
+        all_i = jax.lax.all_gather(gid, axes, tiled=False)
+        S = all_d.shape[0]
+        B = q.shape[0]
+        md = jnp.moveaxis(all_d, 0, 1).reshape(B, S * k)
+        mi = jnp.moveaxis(all_i, 0, 1).reshape(B, S * k)
+        # de-duplicate shard-padding copies: sort by (id primary, dist
+        # secondary), mark repeats of the same id as +inf, then merge.
+        order = jnp.lexsort((md, mi), axis=1)
+        md = jnp.take_along_axis(md, order, axis=1)
+        mi = jnp.take_along_axis(mi, order, axis=1)
+        dup = jnp.concatenate(
+            [jnp.zeros((B, 1), bool), mi[:, 1:] == mi[:, :-1]], axis=1
+        )
+        md = jnp.where(dup, jnp.inf, md)
+        neg, arg = jax.lax.top_k(-md, k)
+        total_cnt = jax.lax.psum(cnt + cnt1, axes)
+        return -neg, jnp.take_along_axis(mi, arg, axis=1), total_cnt
+
+    arrays = {f: getattr(stacked, f) for f in _ARRAY_FIELDS}
+    in_spec = jax.tree.map(lambda _: P(axes), arrays)
+    out = jax.shard_map(
+        lambda t, q: local(t, q),
+        mesh=mesh,
+        in_specs=(in_spec, P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,  # scan carries are per-shard varying by design
+    )(arrays, queries)
+    return out

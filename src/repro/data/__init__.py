@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLMDataset, make_p2h_dataset, global_batch_for_step,
+)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spot: the fused
+tile-sweep candidate-verification scan (|QX^T| + bound pruning + running
+top-k).  ``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp
+oracles, ``p2h_scan`` the pl.pallas_call kernel itself.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import sweep_search_pallas  # noqa: F401
+
+__all__ = ["ops", "ref", "sweep_search_pallas"]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the Pallas P2H sweep kernel.
+
+Mirrors :func:`repro.kernels.p2h_scan.p2h_sweep` *exactly* -- same operands,
+same visit order, same block-granular skip semantics, same pruning math --
+so every kernel behaviour (including which tiles are skipped) can be
+asserted against it in ``interpret=True`` tests.  Results are additionally
+cross-checked against the global brute-force oracle
+(:func:`repro.core.exact.exact_search`) because the sweep is *exact* at any
+visit order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.p2h_scan import _cone_cases
+
+__all__ = ["p2h_sweep_ref"]
+
+
+def p2h_sweep_ref(
+    pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm,
+    queries, qnorm, cap, leaf_ip, leaf_lb, visit,
+    *, k: int, bq: int = 8, use_ball: bool = True, use_cone: bool = True,
+):
+    """Reference with identical semantics. Returns (dists, ids) unsorted-ish
+    (sorted ascending here, callers sort kernel output before comparing)."""
+    pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm = (
+        jnp.asarray(a) for a in
+        (pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm))
+    B = queries.shape[0]
+    nqb, n_visit = visit.shape
+    assert B == nqb * bq
+
+    def one_block(qb, qnb, capb, ipb, lbb, order):
+        # qb (bq, dp); ipb/lbb (bq, L); order (n_visit,)
+        topd = jnp.full((bq, k), jnp.inf, jnp.float32)
+        topi = jnp.full((bq, k), -1, jnp.int32)
+
+        def step(carry, leaf):
+            td, ti = carry
+            lam = jnp.minimum(jnp.max(td, axis=1), capb[:, 0])
+            active = lbb[:, leaf] < lam
+            ids = ids_tiles[leaf]
+            keep = (ids >= 0)[None, :] & active[:, None]
+            ip = ipb[:, leaf]
+            qn = qnb[:, 0]
+            if use_ball:
+                pb = jnp.maximum(
+                    jnp.abs(ip)[:, None] - qn[:, None] * rx_tiles[leaf][None, :], 0.0)
+                keep &= pb < lam[:, None]
+            if use_cone:
+                cn = jnp.maximum(leaf_cnorm[leaf, 0], 1e-12)
+                qcos = ip / cn
+                qsin = jnp.sqrt(jnp.maximum(qn * qn - qcos * qcos, 0.0))
+                cb = _cone_cases(qcos[:, None], qsin[:, None],
+                                 xc_tiles[leaf][None, :], xs_tiles[leaf][None, :])
+                keep &= cb < lam[:, None]
+            absip = jnp.abs(qb @ pts_tiles[leaf].T)
+            cand = jnp.where(keep, absip, jnp.inf)
+            md = jnp.concatenate([td, cand], axis=1)
+            mi = jnp.concatenate(
+                [ti, jnp.broadcast_to(ids, (bq, ids.shape[0]))], axis=1)
+            neg, arg = jax.lax.top_k(-md, k)
+            return (-neg, jnp.take_along_axis(mi, arg, axis=1)), None
+
+        (td, ti), _ = jax.lax.scan(step, (topd, topi), order)
+        return td, ti
+
+    qb = queries.reshape(nqb, bq, -1)
+    qn = qnorm.reshape(nqb, bq, 1)
+    cp = cap.reshape(nqb, bq, 1)
+    ipb = leaf_ip.reshape(nqb, bq, -1)
+    lbb = leaf_lb.reshape(nqb, bq, -1)
+    td, ti = jax.vmap(one_block)(qb, qn, cp, ipb, lbb, visit)
+    return td.reshape(B, k), ti.reshape(B, k)

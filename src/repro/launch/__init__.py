@@ -1,0 +1,2 @@
+"""Launchers: production mesh, step builders, dry-run driver, train/serve
+entry points."""

@@ -1,0 +1,12 @@
+"""Pure-JAX model library (no flax): parameters are nested dicts of
+arrays; each model exposes ``init``, ``param_logical`` (logical sharding
+axes, congruent with params), ``apply`` (train forward), ``prefill`` and
+``decode_step`` (serving), and cache constructors.
+
+Families: dense/vlm decoder-only (:mod:`transformer`), MoE
+(:mod:`moe` blocks inside transformer), SSM (:mod:`mamba2`),
+hybrid RG-LRU (:mod:`recurrentgemma`), enc-dec audio (:mod:`whisper`).
+"""
+from repro.models.registry import get_model, MODEL_FAMILIES  # noqa: F401
+
+__all__ = ["get_model", "MODEL_FAMILIES"]

@@ -1,0 +1,461 @@
+"""Attention: GQA/MQA with RoPE, memory-efficient double-chunked
+online-softmax (flash-style scan over Q and KV blocks), block-local
+sliding-window attention, cross-attention, and single-token decode against
+a KV cache.
+
+TPU/GSPMD notes (the why of the shapes):
+
+  * KV heads are **repeated to the full query head count** before the
+    score einsum (a broadcast -- XLA fuses it, no 16x HBM copy).  The
+    alternative -- reshaping Q to (Hkv, G) groups -- splits the sharded
+    head dimension and forces GSPMD to all-gather; with the repeat, every
+    attention einsum carries a clean ``heads -> model`` sharding.
+  * Both Q and KV are chunked with an online-softmax scan, so the live
+    score block is (B, H/tp, Cq, Ck) f32 instead of (B, H/tp, S, S) --
+    prefill_32k would otherwise materialize ~4 GB/head.  Causal masking is
+    applied per block; the ~2x masked-block waste at long S is a recorded
+    hillclimb item (EXPERIMENTS.md section Perf).
+  * On real hardware this schedule is what a fused splash/flash Pallas
+    kernel implements; in pure jnp XLA pipelines the per-block matmuls.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import shard
+
+__all__ = [
+    "attn_init", "gqa_attention", "local_attention", "decode_attention",
+    "attn_apply", "attn_decode", "init_kv_cache",
+]
+
+_NEG = -1e30
+
+
+def _mask_pad_heads(o, n_valid):
+    """Zero the outputs of padded attention heads (config ``pad_heads_to``):
+    keeps the padded parameterization mathematically identical to the
+    unpadded model -- pad heads receive zero gradient through the mask."""
+    if n_valid is None or n_valid >= o.shape[-2]:
+        return o
+    mask = (jnp.arange(o.shape[-2]) < n_valid).astype(o.dtype)
+    return o * mask[..., :, None]
+
+
+def attn_init(pi, d_model, n_heads, n_kv, head_dim, *, qkv_bias=False,
+              out_bias=False):
+    p = {
+        "wq": pi.normal((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": pi.normal((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": pi.normal((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": pi.normal((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+    if qkv_bias:
+        p["bq"] = pi.zeros((n_heads, head_dim), ("heads", "head_dim"))
+        p["bk"] = pi.zeros((n_kv, head_dim), ("kv_heads", "head_dim"))
+        p["bv"] = pi.zeros((n_kv, head_dim), ("kv_heads", "head_dim"))
+    if out_bias:
+        p["bo"] = pi.zeros((d_model,), ("embed",))
+    return p
+
+
+def _proj(x, w, b=None, compute_dtype=jnp.bfloat16):
+    y = jnp.einsum("bsd,dhk->bshk", x.astype(compute_dtype),
+                   w.astype(compute_dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def _repeat_kv(k, n_heads, compute_dtype):
+    """(B, S, Hkv, D) -> (B, S, Hq, D) via broadcast; heads-sharded."""
+    B, S, Hkv, D = k.shape
+    G = n_heads // Hkv
+    k = k.astype(compute_dtype)
+    if G > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, Hkv, G, D))
+        k = k.reshape(B, S, Hkv * G, D)
+    return shard(k, "batch", None, "heads", None)
+
+
+def _mask_block(pq, pk, causal, window):
+    """(B,Cq),(Ck,) -> (B,1,Cq,Ck) validity mask from absolute positions."""
+    pqb = pq[:, None, :, None]
+    pkb = pk[None, None, None, :]
+    mask = (pkb >= 0) & (pqb >= 0)
+    if causal:
+        mask = mask & (pkb <= pqb)
+    if window is not None:
+        mask = mask & (pqb - pkb < window)
+    return mask
+
+
+def _chunk(x, n, c):
+    """(B, n*c, ...) -> (n, B, c, ...)"""
+    return jnp.moveaxis(x.reshape(x.shape[0], n, c, *x.shape[2:]), 1, 0)
+
+
+def _flash_fwd(q, k, v, pos_q, pos_k, *, causal, window, nq, nk, Cq, Ck,
+               compute_dtype):
+    """Double-chunked online-softmax forward; q pre-scaled & padded.
+
+    Returns out (B,Sq,H,D) compute_dtype and lse (B,H,Sq) f32.
+    """
+    B, Sq, Hq, D = q.shape
+    qs, pqs = _chunk(q, nq, Cq), _chunk(pos_q, nq, Cq)
+    ks, vs = _chunk(k, nk, Ck), _chunk(v, nk, Ck)
+    pks = pos_k.reshape(nk, Ck)
+
+    def q_block(_, xs):
+        qc, pq = xs
+
+        def kv_step(carry, kxs):
+            m, l, acc = carry
+            kc, vc, pk = kxs
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32)
+            s = jnp.where(_mask_block(pq, pk, causal, window), s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(compute_dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + pv
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, Hq, Cq), _NEG, jnp.float32),
+                jnp.zeros((B, Hq, Cq), jnp.float32),
+                jnp.zeros((B, Cq, Hq, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (ks, vs, pks))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))               # (B,H,Cq)
+        lt = jnp.maximum(jnp.moveaxis(l, 1, 2), 1e-30)
+        return None, ((acc / lt[..., None]).astype(compute_dtype), lse)
+
+    _, (out, lse) = jax.lax.scan(q_block, None, (qs, pqs))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hq, D)
+    lse = jnp.moveaxis(lse, 0, 2).reshape(B, Hq, Sq)
+    return out, lse
+
+
+def _flash_bwd(do, q, k, v, pos_q, pos_k, out, lse, *, causal, window,
+               nq, nk, Cq, Ck, compute_dtype):
+    """Blockwise backward (flash-style): recompute p per block from lse;
+    O(S) live memory instead of stacking every block's probabilities."""
+    B, Sq, Hq, D = q.shape
+    delta = jnp.einsum("bqhd,bqhd->bhq", do.astype(jnp.float32),
+                       out.astype(jnp.float32))               # (B,H,Sq)
+    qs, pqs = _chunk(q, nq, Cq), _chunk(pos_q, nq, Cq)
+    dos = _chunk(do.astype(compute_dtype), nq, Cq)
+    lses = jnp.moveaxis(lse.reshape(B, Hq, nq, Cq), 2, 0)      # (nq,B,H,Cq)
+    deltas = jnp.moveaxis(delta.reshape(B, Hq, nq, Cq), 2, 0)
+    ks, vs = _chunk(k, nk, Ck), _chunk(v, nk, Ck)
+    pks = pos_k.reshape(nk, Ck)
+
+    def q_block(carry, xs):
+        dk, dv = carry                                         # (nk,B,Ck,H,D)
+        qc, pq, doc, lsec, dltc = xs
+
+        def kv_step(dq, kxs):
+            kc, vc, pk, dkc, dvc = kxs
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32)
+            s = jnp.where(_mask_block(pq, pk, causal, window), s, 2.0 * _NEG)
+            p = jnp.exp(s - lsec[..., None])                   # (B,H,Cq,Ck)
+            pc = p.astype(compute_dtype)
+            dvc = dvc + jnp.einsum("bhqk,bqhd->bkhd", pc, doc,
+                                   preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", doc, vc,
+                            preferred_element_type=jnp.float32)
+            ds = (p * (dp - dltc[..., None])).astype(compute_dtype)
+            dq = dq + jnp.einsum("bhqk,bkhd->bqhd", ds, kc,
+                                 preferred_element_type=jnp.float32)
+            dkc = dkc + jnp.einsum("bhqk,bqhd->bkhd", ds, qc,
+                                   preferred_element_type=jnp.float32)
+            return dq, (dkc, dvc)
+
+        dq0 = jnp.zeros((B, Cq, Hq, D), jnp.float32)
+        dqc, (dk, dv) = jax.lax.scan(kv_step, dq0, (ks, vs, pks, dk, dv))
+        return (dk, dv), dqc
+
+    dk0 = jnp.zeros((nk, B, Ck, Hq, D), jnp.float32)
+    dv0 = jnp.zeros((nk, B, Ck, Hq, D), jnp.float32)
+    (dk, dv), dq = jax.lax.scan(q_block, (dk0, dv0),
+                                (qs, pqs, dos, lses, deltas))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, Sq, Hq, D)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, nk * Ck, Hq, D)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, nk * Ck, Hq, D)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(causal, window, nq, nk, Cq, Ck, compute_dtype):
+    """custom_vjp'd padded flash attention (q pre-scaled)."""
+    kw = dict(causal=causal, window=window, nq=nq, nk=nk, Cq=Cq, Ck=Ck,
+              compute_dtype=compute_dtype)
+
+    @jax.custom_vjp
+    def flash(q, k, v, pos_q, pos_k):
+        out, _ = _flash_fwd(q, k, v, pos_q, pos_k, **kw)
+        return out
+
+    def fwd(q, k, v, pos_q, pos_k):
+        out, lse = _flash_fwd(q, k, v, pos_q, pos_k, **kw)
+        return out, (q, k, v, pos_q, pos_k, out, lse)
+
+    def bwd(res, do):
+        q, k, v, pos_q, pos_k, out, lse = res
+        dq, dk, dv = _flash_bwd(do, q, k, v, pos_q, pos_k, out, lse, **kw)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                None, None)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def gqa_attention(q, k, v, pos_q, pos_k, *, causal=True, window=None,
+                  kv_len=None, q_chunk=1024, kv_chunk=1024, scale=None,
+                  compute_dtype=jnp.bfloat16):
+    """Double-chunked online-softmax attention with a flash-style
+    custom-VJP backward (blockwise recompute from saved lse -- without it
+    the scan backward stacks every block's probabilities: measured 8.6
+    GB/layer at train_4k).
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D); Hq % Hkv == 0.
+    pos_q: (Sq,) or (B, Sq); pos_k: (Sk,) global positions.
+    kv_len: optional (B,) valid prefix length of k/v (plain non-VJP path).
+    Returns (B, Sq, Hq, D) in compute dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = _repeat_kv(k, Hq, compute_dtype)
+    v = _repeat_kv(v, Hq, compute_dtype)
+    Sk = k.shape[1]
+    q = q.astype(compute_dtype) * jnp.asarray(scale, compute_dtype)
+    pos_q = jnp.broadcast_to(jnp.asarray(pos_q), (B, Sq)) \
+        if jnp.ndim(pos_q) <= 1 else pos_q
+    pos_k = jnp.asarray(pos_k)
+
+    Cq = min(q_chunk, Sq)
+    Ck = min(kv_chunk, Sk)
+    padq = (-Sq) % Cq
+    padk = (-Sk) % Ck
+    if padq:
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+        pos_q = jnp.pad(pos_q, ((0, 0), (0, padq)), constant_values=-1)
+    if padk:
+        k = jnp.pad(k, ((0, 0), (0, padk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padk), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, (0, padk), constant_values=-1)
+    nq, nk = q.shape[1] // Cq, k.shape[1] // Ck
+
+    if kv_len is not None:
+        # decode-prefill path with ragged kv: fold kv_len into pos_k mask
+        # by treating out-of-range keys as invalid (no grad needed here).
+        idx = jnp.arange(k.shape[1])
+        pos_k_eff = jnp.where(idx < jnp.max(kv_len), pos_k, -1)
+        out, _ = _flash_fwd(q, k, v, pos_q, pos_k_eff, causal=causal,
+                            window=window, nq=nq, nk=nk, Cq=Cq, Ck=Ck,
+                            compute_dtype=compute_dtype)
+    else:
+        flash = _flash_fn(causal, window, nq, nk, Cq, Ck, compute_dtype)
+        out = flash(q, k, v, pos_q, pos_k)
+    return out[:, :Sq]
+
+
+def local_attention(q, k, v, pos, *, window: int, scale=None,
+                    compute_dtype=jnp.bfloat16):
+    """Exact sliding-window causal attention via the two-block trick.
+
+    Each query block of size W attends to its own and the previous block
+    (2W keys) with the mask ``0 <= pq - pk < W``.  Identical results to
+    ``gqa_attention(..., window=W)`` at ~2W/S of the compute.
+    """
+    B, S, Hq, D = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = _repeat_kv(k, Hq, compute_dtype)
+    v = _repeat_kv(v, Hq, compute_dtype)
+    W = min(window, S)
+    pad = (-S) % W
+    q = q.astype(compute_dtype) * jnp.asarray(scale, compute_dtype)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(jnp.asarray(pos), (0, pad), constant_values=-10 * S)
+    Sp = q.shape[1]
+    nb = Sp // W
+
+    qb = q.reshape(B, nb, W, Hq, D)
+    kb = k.reshape(B, nb, W, Hq, D)
+    vb = v.reshape(B, nb, W, Hq, D)
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # (B, nb, 2W, H, D)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    pb = pos.reshape(nb, W)
+    pprev = jnp.pad(pb, ((1, 0), (0, 0)), constant_values=-10 * S)[:-1]
+    p2 = jnp.concatenate([pprev, pb], axis=1)  # (nb, 2W)
+
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qb, k2,
+                   preferred_element_type=jnp.float32)
+    dq = pb[None, :, None, :, None]
+    dk = p2[None, :, None, None, :]
+    mask = (dq >= dk) & (dq - dk < W)
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p.astype(compute_dtype), v2,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, Sp, Hq, D)[:, :S]
+    return out.astype(compute_dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len=None, *, window=None,
+                     key_pos=None, pos_q=None, scale=None,
+                     compute_dtype=jnp.bfloat16):
+    """One-token attention vs a (B, Smax, Hkv, D) cache. q: (B, 1, Hq, D).
+
+    Masking: either by valid prefix ``cache_len (B,)`` (contiguous cache)
+    or by per-slot absolute positions ``key_pos (B, Smax)`` with the query
+    at ``pos_q (B,)`` (ring caches for sliding-window layers; -1 = empty).
+    """
+    B, _, Hq, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = (q.astype(compute_dtype) * jnp.asarray(scale, compute_dtype)
+          ).reshape(B, Hq, D)
+    if Hkv == 1:
+        # MQA fast path: contract against the single shared KV head
+        # directly -- no (B, Smax, Hq, D) repeated-cache materialization
+        # (gemma decode_32k: the repeat dominated bytes accessed).
+        kr = k_cache[:, :, 0].astype(compute_dtype)
+        vr = v_cache[:, :, 0].astype(compute_dtype)
+        s = jnp.einsum("bhd,bkd->bhk", qh, kr,
+                       preferred_element_type=jnp.float32)
+    else:
+        kr = _repeat_kv(k_cache, Hq, compute_dtype)
+        vr = _repeat_kv(v_cache, Hq, compute_dtype)
+        s = jnp.einsum("bhd,bkhd->bhk", qh, kr,
+                       preferred_element_type=jnp.float32)
+    if key_pos is not None:
+        kp = key_pos[:, None, :]
+        pq = pos_q[:, None, None]
+        mask = (kp >= 0) & (kp <= pq)
+        if window is not None:
+            mask &= kp > pq - window
+    else:
+        idx = jnp.arange(Smax)[None, None, :]
+        mask = idx < cache_len[:, None, None]
+        if window is not None:
+            mask &= idx >= (cache_len[:, None, None] - window)
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    if Hkv == 1:
+        out = jnp.einsum("bhk,bkd->bhd", p.astype(compute_dtype), vr,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhk,bkhd->bhd", p.astype(compute_dtype), vr,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(compute_dtype)
+
+
+# ----------------------------------------------------------------------
+# full attention sublayer (proj + rope + attend + out-proj)
+# ----------------------------------------------------------------------
+
+
+def attn_apply(p, x, sin, cos, *, causal=True, window=None, kv=None,
+               pos_q=None, pos_k=None, kv_len=None, use_local_path=True,
+               q_chunk=1024, kv_chunk=1024, scale=None,
+               compute_dtype=jnp.bfloat16, rope_on=True,
+               n_valid_heads=None):
+    """Self- (kv=None) or cross- (kv=enc_out) attention sublayer on (B,S,E).
+
+    Returns (out (B,S,E), (k, v)) -- k/v (pre-repeat, Hkv heads) returned
+    for cache population.
+    """
+    from repro.models.layers import apply_rope
+
+    B, S, E = x.shape
+    q = _proj(x, p["wq"], p.get("bq"), compute_dtype)
+    src = x if kv is None else kv
+    k = _proj(src, p["wk"], p.get("bk"), compute_dtype)
+    v = _proj(src, p["wv"], p.get("bv"), compute_dtype)
+    if rope_on and kv is None:
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    q = shard(q.astype(compute_dtype), "batch", "seq", "heads", None)
+    k = shard(k.astype(compute_dtype), "batch", "seq", "kv_heads", None)
+    v = shard(v.astype(compute_dtype), "batch", "seq", "kv_heads", None)
+    if pos_q is None:
+        pos_q = jnp.arange(S)
+    if pos_k is None:
+        pos_k = jnp.arange(k.shape[1])
+    if window is not None and kv is None and use_local_path:
+        o = local_attention(q, k, v, pos_q, window=window, scale=scale,
+                            compute_dtype=compute_dtype)
+    else:
+        o = gqa_attention(q, k, v, pos_q, pos_k, causal=causal and kv is None,
+                          window=window, kv_len=kv_len, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, scale=scale,
+                          compute_dtype=compute_dtype)
+    o = shard(o, "batch", "seq", "heads", None)
+    o = _mask_pad_heads(o, n_valid_heads)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(compute_dtype),
+                     p["wo"].astype(compute_dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(out.dtype)
+    return out.astype(x.dtype), (k, v)
+
+
+def attn_decode(p, x, sin, cos, cache, cache_len, *, window=None, scale=None,
+                compute_dtype=jnp.bfloat16, rope_on=True, cross=False,
+                kv_len=None, n_valid_heads=None):
+    """Single-token decode sublayer. x: (B, 1, E); cache: dict(k, v).
+
+    For self-attention the new k/v are written at ``cache_len``; for cross
+    attention the cache is the encoder projection, read-only.
+    """
+    from repro.models.layers import apply_rope
+
+    B = x.shape[0]
+    q = _proj(x, p["wq"], p.get("bq"), compute_dtype)
+    if rope_on and not cross:
+        q = apply_rope(q, sin, cos)
+    q = q.astype(compute_dtype)
+    if cross:
+        k_cache, v_cache = cache["k"], cache["v"]
+        new_cache = cache
+        eff_len = kv_len if kv_len is not None else jnp.full(
+            (B,), k_cache.shape[1], jnp.int32)
+    else:
+        k = _proj(x, p["wk"], p.get("bk"), compute_dtype)
+        v = _proj(x, p["wv"], p.get("bv"), compute_dtype)
+        if rope_on:
+            k = apply_rope(k, sin, cos)
+        k_cache = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+        )(cache["k"], k.astype(cache["k"].dtype), cache_len)
+        v_cache = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+        )(cache["v"], v.astype(cache["v"].dtype), cache_len)
+        new_cache = {"k": k_cache, "v": v_cache}
+        eff_len = cache_len + 1
+    o = decode_attention(q, k_cache, v_cache, eff_len, window=window,
+                         scale=scale, compute_dtype=compute_dtype)
+    o = _mask_pad_heads(o, n_valid_heads)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(compute_dtype),
+                     p["wo"].astype(compute_dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(out.dtype)
+    return out.astype(x.dtype), new_cache
+
+
+def init_kv_cache(n_layers, batch, max_len, n_kv, head_dim,
+                  dtype=jnp.bfloat16):
+    shape = (n_layers, batch, max_len, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,227 @@
+"""Shared layers: norms, embeddings, MLPs, rotary embeddings, scan-over-
+layers helper.  Conventions:
+
+  * params are nested dicts; every leaf is created by ``_init`` helpers
+    that also record the *logical sharding axes* in a congruent tree;
+  * compute dtype (usually bf16) is applied by the caller casting inputs;
+    matmuls accumulate in f32 via ``preferred_element_type``;
+  * activation sharding uses :func:`repro.parallel.shard` logical names.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import shard
+
+__all__ = [
+    "ParamInit", "dense", "rmsnorm", "layernorm", "mlp_init", "mlp_apply",
+    "embed_init", "rope", "apply_rope", "scan_layers", "Initializer",
+]
+
+Initializer = Callable[[jax.Array, tuple[int, ...]], jax.Array]
+
+
+@dataclasses.dataclass
+class ParamInit:
+    """Collects params + logical axes during init.
+
+    With ``abstract=True`` every leaf is a ``jax.ShapeDtypeStruct`` -- used
+    by the dry-run / sharding-resolution paths so no memory is allocated.
+    """
+
+    key: jax.Array | None
+    param_dtype: Any = jnp.float32
+    abstract: bool = False
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape, logical, scale=None):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), self.param_dtype), tuple(logical)
+        scale = scale if scale is not None else 1.0 / math.sqrt(shape[-2] if len(shape) > 1 else shape[-1])
+        w = (jax.random.normal(self._next(), shape, jnp.float32) * scale)
+        return w.astype(self.param_dtype), tuple(logical)
+
+    def zeros(self, shape, logical):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), self.param_dtype), tuple(logical)
+        return jnp.zeros(shape, self.param_dtype), tuple(logical)
+
+    def ones(self, shape, logical):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), self.param_dtype), tuple(logical)
+        return jnp.ones(shape, self.param_dtype), tuple(logical)
+
+    def const(self, value, logical):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(jnp.shape(value), self.param_dtype), tuple(logical)
+        return jnp.asarray(value, self.param_dtype), tuple(logical)
+
+
+def split_tree(tree):
+    """Split a tree of (array, logical) pairs into (params, logical)."""
+    params = jax.tree.map(lambda t: t[0], tree,
+                          is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                          and not isinstance(t[0], dict))
+    logical = jax.tree.map(lambda t: t[1], tree,
+                           is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                           and not isinstance(t[0], dict))
+    return params, logical
+
+
+# ----------------------------------------------------------------------
+# primitives
+# ----------------------------------------------------------------------
+
+
+def dense(x, w, compute_dtype=None):
+    """x @ w contracting x's last dim; output stays in compute dtype.
+
+    The MXU accumulates in f32 internally regardless of output dtype;
+    emitting bf16 halves every saved activation (the remat policy saves
+    batch-dim-free dot outputs, so f32 outputs here would double the
+    checkpoint footprint -- measured: 38 GB -> ~5 GB on llama3.2 train_4k).
+    Pass ``compute_dtype=jnp.float32`` where the *consumer* needs f32
+    (router logits, recurrence gates).
+    """
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        w = w.astype(compute_dtype)
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())))
+
+
+def rmsnorm(x, scale, eps=1e-6, offset=0.0):
+    """RMSNorm that never materializes an f32 copy of x.
+
+    Upcasting x to f32 here poisons the whole-model memory plan: XLA
+    reorders ``convert(dynamic-slice(residuals))`` into
+    ``dynamic-slice(convert(residuals))`` in the scan backward, converting
+    the entire stacked (L,B,S,D) residual to f32 at once (measured: a 17 GB
+    buffer on llama3.2 train_4k).  Instead the sum of squares is computed
+    by an f32-accumulating dot (no f32 (B,S,D) tensor exists) and the
+    normalization stays in x.dtype.
+    """
+    if x.dtype == jnp.float32:
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(var + eps) * (offset + scale.astype(x.dtype))
+    nb = x.ndim - 1
+    strict = (os.environ.get("REPRO_STRICT_BF16_DOTS") == "1"
+              or jax.default_backend() == "tpu")
+    if strict:
+        ss = jax.lax.dot_general(
+            x, x, (((nb,), (nb,)), (tuple(range(nb)), tuple(range(nb)))),
+            preferred_element_type=jnp.float32)
+    else:  # CPU runtime lacks bf16 batched dots; transient f32 is fine here
+        xf = x.astype(jnp.float32)
+        ss = jnp.sum(xf * xf, axis=-1)
+    var = ss / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * (offset + scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_init(pi: ParamInit, d_model: int, d_ff: int, act: str = "silu",
+             gated: bool = True):
+    p = {"wi": pi.normal((d_model, d_ff), ("embed", "mlp")),
+         "wo": pi.normal((d_ff, d_model), ("mlp", "embed"))}
+    if gated:
+        p["wg"] = pi.normal((d_model, d_ff), ("embed", "mlp"))
+    return p
+
+
+def mlp_apply(p, x, act: str = "silu", compute_dtype=jnp.bfloat16):
+    a = _ACTS[act]
+    h = dense(x, p["wi"], compute_dtype)
+    if "wg" in p:
+        h = a(dense(x, p["wg"], compute_dtype)) * h
+    else:
+        h = a(h)
+    h = shard(h.astype(compute_dtype), "batch", "seq", "mlp")
+    return dense(h, p["wo"], compute_dtype)
+
+
+def embed_init(pi: ParamInit, vocab: int, d_model: int):
+    # 0.02 (GPT-2-style): with tied output heads a unit-variance embedding
+    # puts initial logits at O(sqrt(d)) and the initial loss ~4x ln V.
+    return pi.normal((vocab, d_model), ("vocab", "embed"), scale=0.02)
+
+
+# ----------------------------------------------------------------------
+# rotary position embeddings
+# ----------------------------------------------------------------------
+
+
+def rope(positions, head_dim: int, theta: float = 10000.0):
+    """(..., S) int positions -> (sin, cos) of shape (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, H, D); sin/cos: (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# scan over layers
+# ----------------------------------------------------------------------
+
+
+def scan_layers(stacked_params, fn, x, *, carry=None, remat: str | None = "dots",
+                unroll: int = 1):
+    """Run ``fn(layer_params, x, carry_slice) -> (x, new_carry_slice)`` over
+    a stack of layers via ``lax.scan`` with optional rematerialization.
+
+    ``carry`` is an optional per-layer stacked pytree (e.g. KV caches) that
+    is threaded as scan xs/ys -- fn receives one layer's slice and returns
+    the updated slice.
+    """
+    policy = {
+        None: None,
+        "none": None,
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.checkpoint_dots,
+        "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    }[remat]
+
+    def body(h, xs):
+        lp, cslice = xs
+        h, new_c = fn(lp, h, cslice)
+        return h, new_c
+
+    if remat is not None:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    xs = (stacked_params, carry)
+    h, new_carry = jax.lax.scan(body, x, xs, unroll=unroll)
+    return h, new_carry

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with capacity, sort-
+based dispatch (dense, jittable), grouped expert einsums, optional shared
+expert (llama4-style).
+
+Sharding: the expert dimension maps to the ``expert`` logical axis
+(default: "model" mesh axis -- EP coincident with TP).  For expert counts
+that do not divide the axis (granite's 40 on a 16-way axis) the per-arch
+rule override switches to TP *inside* each expert (``expert_mlp`` ->
+"model"), avoiding weight replication; see configs/granite_moe_3b.py.
+
+Routing math (f32): softmax router, top-k renormalized gates, Switch-style
+load-balance auxiliary loss + router z-loss, deterministic capacity drop
+(first-come by token order within each expert).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamInit, dense, _ACTS
+from repro.parallel import shard
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def _gdot(eq, a, b):
+    """Grouped expert einsum with f32 accumulation.
+
+    The XLA *CPU runtime* (DotThunk) cannot execute bf16 x bf16 -> f32 for
+    this batched layout, so CPU smoke tests upcast; the dry-run sets
+    REPRO_STRICT_BF16_DOTS=1 (it only lowers/compiles, never executes) so
+    the metered HLO keeps the TPU-faithful mixed-precision dots.
+    """
+    strict = (os.environ.get("REPRO_STRICT_BF16_DOTS") == "1"
+              or jax.default_backend() == "tpu")
+    if strict:
+        return jnp.einsum(eq, a, b)
+    return jnp.einsum(eq, a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def moe_init(pi: ParamInit, d_model: int, d_ff: int, num_experts: int,
+             *, gated: bool = True, shared_ff: int = 0):
+    p = {
+        "router": pi.normal((d_model, num_experts), ("embed", None), scale=0.02),
+        "wi": pi.normal((num_experts, d_model, d_ff),
+                        ("expert", "embed", "expert_mlp")),
+        "wo": pi.normal((num_experts, d_ff, d_model),
+                        ("expert", "expert_mlp", "embed")),
+    }
+    if gated:
+        p["wg"] = pi.normal((num_experts, d_model, d_ff),
+                            ("expert", "embed", "expert_mlp"))
+    if shared_ff:
+        p["shared"] = {
+            "wi": pi.normal((d_model, shared_ff), ("embed", "mlp")),
+            "wg": pi.normal((d_model, shared_ff), ("embed", "mlp")),
+            "wo": pi.normal((shared_ff, d_model), ("mlp", "embed")),
+        }
+    return p
+
+
+def moe_apply(p, x, *, top_k: int, act: str = "silu",
+              capacity_factor: float = 1.25, compute_dtype=jnp.bfloat16):
+    """x: (B, S, E) -> (out (B,S,E), aux dict(load_loss, z_loss)).
+
+    Dispatch is **per sequence** (capacity = cf * S * k / E per row): the
+    (B, E, C, d) dispatch buffer then inherits the batch sharding and never
+    crosses data shards -- no global sort / no replicated T-sized buffer
+    (a global-capacity variant would materialize an all-token buffer on
+    every device under GSPMD).  Per-row capacity is also what Switch/GShard
+    use per device-batch.
+
+    Pipeline per row: stable-sort (token,choice) assignments by expert ->
+    rank within expert = slot -> drop beyond C -> scatter into (E, C, d)
+    -> grouped expert einsum -> gather back with gate weights.
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    a = _ACTS[act]
+
+    # ---- router (f32) ----
+    logits = dense(x, p["router"], jnp.float32)  # (B, S, E) f32 accum
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_v, gate_e = jax.lax.top_k(probs, top_k)  # (B, S, k)
+    gate_v = gate_v / jnp.maximum(
+        jnp.sum(gate_v, axis=-1, keepdims=True), 1e-9)
+
+    # aux losses (Switch): load balance + z-loss
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_e, E, dtype=jnp.float32),
+                          axis=2), axis=(0, 1))
+    load_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- per-row dispatch indices ----
+    A = S * top_k  # assignments per row
+    C = int(capacity_factor * S * top_k / E)
+    C = max(8, -(-C // 8) * 8)
+    C = min(C, A)
+    flat_e = gate_e.reshape(B, A)                      # (B, A)
+    flat_t = jnp.broadcast_to(
+        (jnp.arange(A, dtype=jnp.int32) // top_k)[None], (B, A))
+    flat_w = gate_v.reshape(B, A)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sw = jnp.take_along_axis(flat_w, order, axis=1)
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E, dtype=row.dtype)))(se)
+    pos = (jnp.arange(A, dtype=jnp.int32)[None]
+           - jnp.take_along_axis(seg_start, se, axis=1).astype(jnp.int32))
+    keep = pos < C
+    e_idx = se.astype(jnp.int32)
+    p_idx = jnp.minimum(pos, C - 1)
+
+    # ---- scatter -> (B, E, C, D) ----
+    xv = jnp.take_along_axis(x, st[..., None], axis=1)  # (B, A, D)
+    vals = xv.astype(compute_dtype) * keep[..., None].astype(compute_dtype)
+    buf = jnp.zeros((B, E, C, D), compute_dtype)
+    bi = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, A))
+    buf = buf.at[bi, e_idx, p_idx].add(vals)
+    buf = shard(buf, "batch", "expert", None, "embed")
+
+    # ---- grouped expert FFN ----
+    h = _gdot("becd,edf->becf", buf, p["wi"].astype(compute_dtype))
+    if "wg" in p:
+        g = _gdot("becd,edf->becf", buf, p["wg"].astype(compute_dtype))
+        h = a(g) * h
+    else:
+        h = a(h)
+    h = shard(h.astype(compute_dtype), "batch", "expert", None, "expert_mlp")
+    y = _gdot("becf,efd->becd", h, p["wo"].astype(compute_dtype))  # (B,E,C,D)
+
+    # ---- combine ----
+    back = y[bi, e_idx, p_idx] * (sw * keep)[..., None]  # (B, A, D) f32
+    out = jnp.zeros((B, S, D), jnp.float32)
+    out = out.at[bi, st].add(back)
+    if "shared" in p:
+        sp = p["shared"]
+        sh = a(dense(x, sp["wg"], compute_dtype)) * dense(x, sp["wi"],
+                                                          compute_dtype)
+        out = out + dense(sh.astype(compute_dtype), sp["wo"], compute_dtype)
+    return out.astype(x.dtype), {"load_loss": load_loss, "z_loss": z_loss}

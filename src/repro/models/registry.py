@@ -1,0 +1,50 @@
+"""Architecture registry: maps --arch ids to (config, model builder)."""
+from __future__ import annotations
+
+import importlib
+
+__all__ = ["get_model", "get_config", "ARCH_IDS", "MODEL_FAMILIES"]
+
+ARCH_IDS = [
+    "granite-moe-3b-a800m",
+    "llama4-scout-17b-a16e",
+    "phi-3-vision-4.2b",
+    "mamba2-780m",
+    "gemma-2b",
+    "smollm-360m",
+    "glm4-9b",
+    "llama3.2-1b",
+    "whisper-tiny",
+    "recurrentgemma-9b",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+MODEL_FAMILIES = {
+    "granite-moe-3b-a800m": "moe",
+    "llama4-scout-17b-a16e": "moe",
+    "phi-3-vision-4.2b": "vlm",
+    "mamba2-780m": "ssm",
+    "gemma-2b": "dense",
+    "smollm-360m": "dense",
+    "glm4-9b": "dense",
+    "llama3.2-1b": "dense",
+    "whisper-tiny": "audio",
+    "recurrentgemma-9b": "hybrid",
+}
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def get_model(arch: str, smoke: bool = False):
+    """Returns (model, config). Model is StackedLM or WhisperED."""
+    cfg = get_config(arch, smoke)
+    if cfg.enc_dec:
+        from repro.models.whisper import WhisperED
+        return WhisperED(cfg), cfg
+    from repro.models.transformer import StackedLM
+    return StackedLM(cfg), cfg

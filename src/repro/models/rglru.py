@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The temporal core is a diagonal gated linear recurrence
+
+    a_t = exp(-c * softplus(Lambda) * r_t),   r_t = sigmoid(W_a x_t + b_a)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+evaluated with ``jax.lax.associative_scan`` (O(log S) depth -- the
+TPU-native schedule for diagonal recurrences; the GPU reference uses a
+custom linear-scan kernel, see DESIGN.md hardware-adaptation notes).
+
+The surrounding block follows RecurrentGemma's recurrent layer: two input
+branches (one conv1d(4) + RG-LRU, one GeLU gate), multiplied, projected
+out.  Decode carries O(1) state: (B, d_rnn) hidden + (K-1)-step conv ring.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamInit, dense
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode", "rglru_state"]
+
+_C = 8.0
+
+
+def rglru_init(pi: ParamInit, d_model: int, d_rnn: int, *, d_conv: int = 4):
+    return {
+        "wx": pi.normal((d_model, d_rnn), ("embed", "rnn")),
+        "wy": pi.normal((d_model, d_rnn), ("embed", "rnn")),
+        "conv_w": pi.normal((d_conv, d_rnn), ("conv", "rnn"), scale=0.5),
+        "conv_b": pi.zeros((d_rnn,), ("rnn",)),
+        "wa": pi.normal((d_rnn, d_rnn), ("rnn", None), scale=0.02),
+        "ba": pi.zeros((d_rnn,), ("rnn",)),
+        "wi": pi.normal((d_rnn, d_rnn), ("rnn", None), scale=0.02),
+        "bi": pi.zeros((d_rnn,), ("rnn",)),
+        "lam": pi.const(jnp.linspace(0.5, 4.0, d_rnn), ("rnn",)),
+        "out": pi.normal((d_rnn, d_model), ("rnn", "embed")),
+    }
+
+
+def _gates(p, x):
+    """x: (..., d_rnn) post-conv branch -> (a, b) recurrence coefficients."""
+    r = jax.nn.sigmoid(dense(x, p["wa"], jnp.float32) +
+                       p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(x, p["wi"], jnp.float32) +
+                       p["bi"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * x.astype(jnp.float32))
+    return a, b
+
+
+def _conv(x, w, b):
+    K = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def rglru_apply(p, u, *, compute_dtype=jnp.bfloat16, init_state=None,
+                return_state: bool = False):
+    """u: (B,S,E) -> (B,S,E)."""
+    x = dense(u, p["wx"], compute_dtype)                       # (B,S,R) f32
+    g = jax.nn.gelu(dense(u, p["wy"], compute_dtype))
+    x = _conv(x.astype(compute_dtype), p["conv_w"].astype(compute_dtype),
+              p["conv_b"].astype(compute_dtype))
+    a, b = _gates(p, x)
+    if init_state is not None:
+        # fold the carried state into step 0: h_0 = a_0 h_init + b_0
+        b = b.at[:, 0].add(a[:, 0] * init_state.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(compute_dtype) * g.astype(compute_dtype))
+    out = dense(y, p["out"], compute_dtype).astype(u.dtype)
+    if return_state:
+        return out, h[:, -1]
+    return out
+
+
+def rglru_state(p, batch: int):
+    d_rnn = p["lam"].shape[0]
+    K = p["conv_w"].shape[0]
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, d_rnn), jnp.bfloat16),
+    }
+
+
+def rglru_decode(p, u, state, *, compute_dtype=jnp.bfloat16):
+    """One-token step. u: (B,1,E)."""
+    x = dense(u, p["wx"], compute_dtype)                     # (B,1,R)
+    g = jax.nn.gelu(dense(u, p["wy"], compute_dtype))
+    win = jnp.concatenate(
+        [state["conv"].astype(compute_dtype), x.astype(compute_dtype)], axis=1)
+    xc = jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(compute_dtype))
+    xc = (xc + p["conv_b"].astype(xc.dtype))[:, None]
+    a, b = _gates(p, xc)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (h[:, None].astype(compute_dtype) * g.astype(compute_dtype))
+    out = dense(y, p["out"], compute_dtype).astype(u.dtype)
+    return out, {"h": h, "conv": win[:, 1:].astype(state["conv"].dtype)}

@@ -1,0 +1,191 @@
+"""Mamba-2 (SSD, state-space duality -- arXiv:2405.21060) in pure JAX.
+
+The TPU-native schedule is the *chunked* SSD form: within chunks of length
+Q the token-mixing is a masked (attention-like) matmul on the MXU; across
+chunks a tiny ``lax.scan`` carries the (H, N, P) recurrent state.  This is
+the paper's own blocked decomposition and maps directly onto MXU tiles
+(Q=256 default, a multiple of 128).
+
+Decode carries O(1) state per layer: the SSM state (B, H, N, P) plus a
+(K-1)-step depthwise-conv ring -- no KV cache, which is why mamba2 is a
+``long_500k``-capable architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamInit, dense, rmsnorm
+from repro.parallel import shard
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode", "mamba2_state"]
+
+
+def mamba2_init(pi: ParamInit, d_model: int, *, d_state: int = 128,
+                headdim: int = 64, expand: int = 2, d_conv: int = 4,
+                n_groups: int = 1):
+    d_inner = expand * d_model
+    nheads = d_inner // headdim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + nheads
+    return {
+        "in_proj": pi.normal((d_model, d_in_proj), ("embed", "rnn")),
+        "conv_w": pi.normal((d_conv, conv_dim), ("conv", "rnn"), scale=0.5),
+        "conv_b": pi.zeros((conv_dim,), ("rnn",)),
+        "A_log": pi.const(jnp.log(jnp.linspace(1.0, 16.0, nheads)), ("heads",)),
+        "dt_bias": pi.const(jnp.log(jnp.expm1(jnp.full((nheads,), 1e-2))),
+                            ("heads",)),
+        "D": pi.ones((nheads,), ("heads",)),
+        "norm": pi.ones((d_inner,), ("rnn",)),
+        "out_proj": pi.normal((d_inner, d_model), ("rnn", "embed")),
+    }
+
+
+def _dims(p):
+    d_model, d_in_proj = p["in_proj"].shape
+    nheads = p["A_log"].shape[0]
+    d_conv, conv_dim = p["conv_w"].shape
+    d_inner = p["norm"].shape[0]
+    gn = (conv_dim - d_inner) // 2  # n_groups * d_state
+    headdim = d_inner // nheads
+    return d_model, d_inner, nheads, headdim, gn, d_conv
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv along seq. xBC (B,S,C); w (K,C)."""
+    K = w.shape[0]
+    pads = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int = 256, init_state=None,
+                return_state: bool = False, unroll: int = 1):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N) (single group, broadcast over heads).
+    Returns y (B,S,H,P) [, final_state (B,H,N,P)].
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, Q, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, Q, H).astype(jnp.float32), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nc, Q, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nc, Q, N), 1, 0)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(s_prev, xs):
+        """One chunk: intra-chunk masked matmul + inter-chunk state read."""
+        xk, dk, Bk, Ck = xs  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        dA = dk * A[None, None, :]
+        csum = jnp.cumsum(dA, axis=1)                   # (B,Q,H) L_t
+        CB = jnp.einsum("btn,bsn->bts", Ck, Bk,
+                        preferred_element_type=jnp.float32)
+        seg = csum[:, :, None, :] - csum[:, None, :, :]  # (B,t,s,H)
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        M = CB[..., None] * decay * dk[:, None, :, :]    # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xk.astype(jnp.float32))
+        y_inter = jnp.einsum("btn,bth,bhnp->bthp",
+                             Ck.astype(jnp.float32), jnp.exp(csum), s_prev)
+        wts = dk * jnp.exp(csum[:, -1:, :] - csum)       # (B,Q,H)
+        st = jnp.einsum("bsn,bsh,bshp->bhnp", Bk.astype(jnp.float32),
+                        wts, xk.astype(jnp.float32))
+        s_new = s_prev * jnp.exp(csum[:, -1])[:, :, None, None] + st
+        return s_new, y_intra + y_inter
+
+    s0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    s_final, yc = jax.lax.scan(step, s0, (xc, dtc, Bc, Cc),
+                               unroll=min(max(unroll, 1), nc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, Sp, H, P)[:, :S]
+    if return_state:
+        return y.astype(x.dtype), s_final
+    return y.astype(x.dtype)
+
+
+def mamba2_apply(p, u, *, chunk: int = 256, compute_dtype=jnp.bfloat16,
+                 init_state=None, return_state: bool = False,
+                 unroll: int = 1):
+    """Full Mamba-2 block. u: (B,S,E) -> (B,S,E)."""
+    d_model, d_inner, H, P, gn, K = _dims(p)
+    N = gn  # single group
+    zxbcdt = dense(u, p["in_proj"], compute_dtype)  # (B,S,·) f32
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + d_inner + 2 * gn]
+    dt_raw = zxbcdt[..., -H:]
+    xBC = _causal_conv(xBC.astype(compute_dtype), p["conv_w"].astype(compute_dtype),
+                       p["conv_b"].astype(compute_dtype))
+    x = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + N].astype(jnp.float32)
+    Cm = xBC[..., d_inner + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Bsz, S = u.shape[:2]
+    xh = shard(x.reshape(Bsz, S, H, P), "batch", "seq", "heads", None)
+    res = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk, init_state=init_state,
+                      return_state=return_state, unroll=unroll)
+    y, s_final = res if return_state else (res, None)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(Bsz, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm"])
+    out = dense(y.astype(compute_dtype), p["out_proj"], compute_dtype)
+    out = out.astype(u.dtype)
+    if return_state:
+        return out, s_final
+    return out
+
+
+def mamba2_state(p, batch: int):
+    """Zero decode state: (ssm_state, conv_ring)."""
+    d_model, d_inner, H, P, gn, K = _dims(p)
+    return {
+        "ssm": jnp.zeros((batch, H, gn, P), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, d_inner + 2 * gn), jnp.bfloat16),
+    }
+
+
+def mamba2_decode(p, u, state, *, compute_dtype=jnp.bfloat16):
+    """One-token step. u: (B,1,E); state from :func:`mamba2_state`."""
+    d_model, d_inner, H, P, gn, K = _dims(p)
+    N = gn
+    zxbcdt = dense(u, p["in_proj"], compute_dtype)  # (B,1,·)
+    z = zxbcdt[..., :d_inner]
+    xBC_new = zxbcdt[..., d_inner:d_inner + d_inner + 2 * gn]
+    dt_raw = zxbcdt[..., -H:]
+    # conv ring: window = [ring, new]
+    win = jnp.concatenate(
+        [state["conv"].astype(compute_dtype), xBC_new.astype(compute_dtype)],
+        axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(compute_dtype))
+    xBC = jax.nn.silu(conv_out + p["conv_b"].astype(conv_out.dtype))[:, None]
+    new_conv = win[:, 1:].astype(state["conv"].dtype)
+    x = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + N].astype(jnp.float32)[:, 0]   # (B,N)
+    Cm = xBC[..., d_inner + N:].astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(-1, H, P).astype(jnp.float32)                   # (B,H,P)
+    dA = jnp.exp(dt * A[None, :])                                  # (B,H)
+    s = state["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm, dt, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, s)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, d_inner)
+    y = rmsnorm(y.astype(u.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                p["norm"])
+    out = dense(y.astype(compute_dtype), p["out_proj"], compute_dtype)
+    return out.astype(u.dtype), {"ssm": s, "conv": new_conv}

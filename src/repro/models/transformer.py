@@ -1,0 +1,568 @@
+"""StackedLM: the generic decoder-only backbone covering the dense, MoE,
+SSM, hybrid and VLM-stub architecture families.
+
+A model is ``n_periods`` repetitions of a *period pattern* (tuple of
+:class:`LayerSpec`) plus an explicit tail of leftover layers (e.g.
+recurrentgemma's 38 = 12 x (rec, rec, local-attn) + (rec, rec)).  The
+period stack is scanned with ``lax.scan`` (+ remat) so the compiled HLO is
+O(period), not O(depth) -- essential for the 80-cell dry-run matrix.
+
+Modes:
+  * ``apply``        -- training forward, returns (logits f32, aux losses);
+  * ``prefill``      -- forward + cache construction (full KV for global
+    attention, ring KV for sliding-window layers, O(1) states for rec/ssm);
+  * ``decode_step``  -- one token against the cache pytree.
+
+Families are expressed purely via configs (see repro/configs) -- e.g.
+mamba2 is ``pattern=(LayerSpec(mixer="ssm", mlp=False),)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as R
+from repro.models import ssm as SSM
+from repro.parallel import shard
+
+__all__ = ["LayerSpec", "ArchConfig", "StackedLM", "_remat_policy"]
+
+
+def _remat_policy(name):
+    """Remat policy by name. ``dots_no_batch`` (default) saves only
+    batch-dim-free dots (param matmuls); attention scores / MoE buffers are
+    recomputed in the backward pass -- the memory/recompute trade measured
+    in EXPERIMENTS.md section Perf."""
+    return {
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.checkpoint_dots,
+        "dots_no_batch":
+            jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    }[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"          # attn | rec | ssm
+    window: int | None = None    # sliding-window size for local attention
+    rope: bool = True
+    moe: bool = False
+    mlp: bool = True             # has an FFN sublayer at all
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    act: str = "silu"
+    gated_mlp: bool = True
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    shared_expert_ff: int = 0
+    capacity_factor: float = 1.25
+    # ssm / rnn
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    rnn_width: int = 0
+    # misc
+    rope_theta: float = 10000.0
+    tie_embed: bool = True
+    embed_scale: bool = False    # gemma-style sqrt(d) embedding scale
+    norm: str = "rms"
+    qkv_bias: bool = False
+    logit_softcap: float | None = None
+    vlm_patches: int = 0         # phi-3-vision stub: image tokens prepended
+    enc_dec: bool = False        # whisper (handled by WhisperED)
+    enc_frames: int = 0
+    # numerics / schedule
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    cache_dtype: Any = jnp.bfloat16
+    # "full" fits 16 GB HBM at the assigned scales; "dots_no_batch" trades
+    # +9 GB saved activations for no recompute -- measured in §Perf.
+    remat: str | None = "full"
+    kv_chunk: int = 1024
+    ssd_chunk: int = 256
+    ssd_unroll: int = 1   # metering: unroll the SSD chunk scan
+    rules: dict | None = None    # per-arch sharding rule overrides
+    moe_aux_weight: float = 0.01
+    # Head padding (beyond-paper sharding optimization, EXPERIMENTS §Perf):
+    # pad Q/O attention weights to a multiple of `pad_heads_to` so the
+    # heads axis shards on meshes the real count does not divide (e.g.
+    # llama4's 40 heads on a 16-way axis).  Pad-head outputs are masked to
+    # zero before the out-projection, so the model is mathematically
+    # identical to the unpadded spec (zero gradients flow into pads).
+    pad_heads_to: int = 0
+    n_micro: int = 1             # microbatched gradient accumulation
+
+    @property
+    def hq_padded(self) -> int:
+        if self.pad_heads_to <= 1:
+            return self.n_heads
+        return -(-self.n_heads // self.pad_heads_to) * self.pad_heads_to
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail_specs(self) -> tuple[LayerSpec, ...]:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        import numpy as np
+        model = StackedLM(self)
+        shapes = jax.eval_shape(lambda k: model.init(k)[0],
+                                jax.random.PRNGKey(0))
+        return int(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)))
+
+
+class StackedLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def _norm_init(self, pi):
+        c = self.cfg
+        if c.norm == "rms":
+            return {"scale": pi.ones((c.d_model,), ("embed",))}
+        return {"scale": pi.ones((c.d_model,), ("embed",)),
+                "bias": pi.zeros((c.d_model,), ("embed",))}
+
+    def _norm(self, p, x):
+        if self.cfg.norm == "rms":
+            return L.rmsnorm(x, p["scale"])
+        return L.layernorm(x, p["scale"], p["bias"])
+
+    def _slot_init(self, pi, spec: LayerSpec):
+        c = self.cfg
+        p = {"ln1": self._norm_init(pi)}
+        if spec.mixer == "attn":
+            p["attn"] = A.attn_init(pi, c.d_model, c.hq_padded, c.n_kv, c.hd,
+                                    qkv_bias=c.qkv_bias, out_bias=c.qkv_bias)
+        elif spec.mixer == "ssm":
+            p["ssm"] = SSM.mamba2_init(pi, c.d_model, d_state=c.ssm_state,
+                                       headdim=c.ssm_headdim)
+        elif spec.mixer == "rec":
+            p["rec"] = R.rglru_init(pi, c.d_model, c.rnn_width or c.d_model)
+        else:
+            raise ValueError(spec.mixer)
+        if spec.mlp:
+            p["ln2"] = self._norm_init(pi)
+            if spec.moe:
+                p["ffn"] = MOE.moe_init(pi, c.d_model, c.d_ff, c.num_experts,
+                                        gated=c.gated_mlp,
+                                        shared_ff=c.shared_expert_ff)
+            else:
+                p["ffn"] = L.mlp_init(pi, c.d_model, c.d_ff, gated=c.gated_mlp)
+        return p
+
+    def init(self, key, *, abstract: bool = False):
+        """Returns (params, logical_axes) congruent pytrees.
+
+        ``abstract=True`` returns ShapeDtypeStructs (no allocation) -- the
+        dry-run path.
+        """
+        c = self.cfg
+        pi = L.ParamInit(key, c.param_dtype, abstract=abstract)
+        tree: dict = {
+            "embed": L.embed_init(pi, c.vocab, c.d_model),
+            "final_norm": self._norm_init(pi),
+        }
+        if not c.tie_embed:
+            tree["head"] = pi.normal((c.d_model, c.vocab), ("embed", "vocab"))
+
+        def _stack(n, leaves):
+            x0 = leaves[0]
+            if isinstance(x0, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct((n,) + tuple(x0.shape), x0.dtype)
+            return jnp.stack(leaves)
+
+        def stack_slot(spec, n):
+            """Init n copies of a slot and stack leaves on a new axis 0."""
+            inits = [self._slot_init(pi, spec) for _ in range(n)]
+            pairs = jax.tree.map(
+                lambda *xs: (_stack(n, [x[0] for x in xs]),
+                             ("stack",) + xs[0][1]),
+                *inits,
+                is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                and not isinstance(t[0], dict))
+            return pairs
+
+        if c.n_periods:
+            tree["periods"] = {
+                f"slot{i}": stack_slot(spec, c.n_periods)
+                for i, spec in enumerate(c.pattern)
+            }
+        for i, spec in enumerate(c.tail_specs):
+            tree[f"tail{i}"] = self._slot_init(pi, spec)
+        return L.split_tree(tree)
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct tree, logical tree) without any allocation."""
+        return self.init(None, abstract=True)
+
+    # ------------------------------------------------------------------
+    # forward pieces
+    # ------------------------------------------------------------------
+    def _slot_apply(self, spec: LayerSpec, p, x, sin, cos, *, mode,
+                    cache=None, pos_dec=None):
+        """Apply one layer. Returns (x, new_cache, aux (2,))."""
+        c = self.cfg
+        cd = c.compute_dtype
+        aux = jnp.zeros((2,), jnp.float32)
+        h = self._norm(p["ln1"], x)
+        new_cache = cache
+        if spec.mixer == "attn":
+            nvh = c.n_heads if c.hq_padded != c.n_heads else None
+            if mode in ("train", "prefill"):
+                o, (k, v) = A.attn_apply(
+                    p["attn"], h, sin, cos, causal=True, window=spec.window,
+                    q_chunk=c.kv_chunk, kv_chunk=c.kv_chunk,
+                    compute_dtype=cd, rope_on=spec.rope, n_valid_heads=nvh)
+                if mode == "prefill":
+                    S = h.shape[1]
+                    if spec.window is not None:      # ring cache
+                        W = spec.window
+                        ks, vs = k[:, -W:], v[:, -W:]
+                        ps = jnp.arange(S)[-W:]
+                        if S < W:
+                            padw = W - S
+                            ks = jnp.pad(ks, ((0, 0), (0, padw), (0, 0), (0, 0)))
+                            vs = jnp.pad(vs, ((0, 0), (0, padw), (0, 0), (0, 0)))
+                            ps = jnp.pad(ps, (0, padw), constant_values=-1)
+                        # ring layout: slot = pos % W
+                        roll = jnp.argsort(ps % W) if S >= W else jnp.arange(W)
+                        new_cache = {
+                            "k": ks[:, roll].astype(c.cache_dtype),
+                            "v": vs[:, roll].astype(c.cache_dtype),
+                            "pos": jnp.broadcast_to(ps[roll], (h.shape[0], W)),
+                        }
+                    else:
+                        padc = (0, self._prefill_max_len - S)
+                        new_cache = {
+                            "k": jnp.pad(k.astype(c.cache_dtype),
+                                         ((0, 0), padc, (0, 0), (0, 0))),
+                            "v": jnp.pad(v.astype(c.cache_dtype),
+                                         ((0, 0), padc, (0, 0), (0, 0))),
+                        }
+            else:  # decode
+                if spec.window is not None:
+                    o, new_cache = self._ring_decode(spec, p["attn"], h, sin,
+                                                     cos, cache, pos_dec)
+                else:
+                    o, new_cache = A.attn_decode(
+                        p["attn"], h, sin, cos, cache, pos_dec,
+                        compute_dtype=cd, rope_on=spec.rope,
+                        n_valid_heads=nvh)
+        elif spec.mixer == "ssm":
+            if mode == "train":
+                o = SSM.mamba2_apply(p["ssm"], h, chunk=c.ssd_chunk,
+                                     compute_dtype=cd, unroll=c.ssd_unroll)
+            elif mode == "prefill":
+                o, s = SSM.mamba2_apply(p["ssm"], h, chunk=c.ssd_chunk,
+                                        compute_dtype=cd, return_state=True,
+                                        unroll=c.ssd_unroll)
+                new_cache = self._ssm_prefill_cache(p["ssm"], h, s)
+            else:
+                o, new_cache = SSM.mamba2_decode(p["ssm"], h, cache,
+                                                 compute_dtype=cd)
+        elif spec.mixer == "rec":
+            if mode == "train":
+                o = R.rglru_apply(p["rec"], h, compute_dtype=cd)
+            elif mode == "prefill":
+                o, hstate = R.rglru_apply(p["rec"], h, compute_dtype=cd,
+                                          return_state=True)
+                new_cache = self._rec_prefill_cache(p["rec"], h, hstate)
+            else:
+                o, new_cache = R.rglru_decode(p["rec"], h, cache,
+                                              compute_dtype=cd)
+        else:
+            raise ValueError(spec.mixer)
+        x = x + o
+        if spec.mlp:
+            h2 = self._norm(p["ln2"], x)
+            if spec.moe:
+                o2, mo = MOE.moe_apply(p["ffn"], h2, top_k=c.top_k, act=c.act,
+                                       capacity_factor=c.capacity_factor,
+                                       compute_dtype=cd)
+                aux = aux + jnp.stack([mo["load_loss"], mo["z_loss"]])
+            else:
+                o2 = L.mlp_apply(p["ffn"], h2, act=c.act, compute_dtype=cd)
+            x = x + o2.astype(x.dtype)
+        return x, new_cache, aux
+
+    def _ssm_prefill_cache(self, p, h, s):
+        """Conv ring = last K-1 post-inproj xBC rows of the prefix."""
+        c = self.cfg
+        d_model, d_in_proj = p["in_proj"].shape
+        d_inner = p["norm"].shape[0]
+        K = p["conv_w"].shape[0]
+        gn = (p["conv_w"].shape[1] - d_inner) // 2
+        zx = L.dense(h[:, -(K - 1):], p["in_proj"], c.compute_dtype)
+        xBC = zx[..., d_inner:2 * d_inner + 2 * gn]
+        S = h.shape[1]
+        if S < K - 1:
+            xBC = jnp.pad(xBC, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return {"ssm": s, "conv": xBC.astype(jnp.bfloat16)}
+
+    def _rec_prefill_cache(self, p, h, hstate):
+        c = self.cfg
+        K = p["conv_w"].shape[0]
+        x = L.dense(h[:, -(K - 1):], p["wx"], c.compute_dtype)
+        S = h.shape[1]
+        if S < K - 1:
+            x = jnp.pad(x, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return {"h": hstate, "conv": x.astype(jnp.bfloat16)}
+
+    def _ring_decode(self, spec, p, h, sin, cos, cache, pos_dec):
+        """Sliding-window decode against a ring cache keyed by pos % W."""
+        c = self.cfg
+        cd = c.compute_dtype
+        W = cache["k"].shape[1]
+        q = A._proj(h, p["wq"], p.get("bq"), cd)
+        k = A._proj(h, p["wk"], p.get("bk"), cd)
+        v = A._proj(h, p["wv"], p.get("bv"), cd)
+        if spec.rope:
+            q = L.apply_rope(q, sin, cos)
+            k = L.apply_rope(k, sin, cos)
+        idx = pos_dec % W  # (B,)
+        kc = jax.vmap(lambda cch, u, i: jax.lax.dynamic_update_slice(
+            cch, u, (i, 0, 0)))(cache["k"], k.astype(cache["k"].dtype), idx)
+        vc = jax.vmap(lambda cch, u, i: jax.lax.dynamic_update_slice(
+            cch, u, (i, 0, 0)))(cache["v"], v.astype(cache["v"].dtype), idx)
+        pc = jax.vmap(lambda cch, u, i: jax.lax.dynamic_update_slice(
+            cch, u, (i,)))(cache["pos"], pos_dec[:, None], idx)
+        o = A.decode_attention(q.astype(cd), kc, vc, key_pos=pc,
+                               pos_q=pos_dec, window=W, compute_dtype=cd)
+        o = A._mask_pad_heads(o, c.n_heads if c.hq_padded != c.n_heads
+                              else None)
+        out = jnp.einsum("bshk,hkd->bsd", o.astype(cd), p["wo"].astype(cd))
+        if "bo" in p:
+            out = out + p["bo"].astype(out.dtype)
+        return out.astype(h.dtype), {"k": kc, "v": vc, "pos": pc}
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens, extra=None):
+        c = self.cfg
+        # cast the table BEFORE the gather: with a vocab-sharded table the
+        # lookup is an all-reduce of (B,S,D) -- at compute dtype it is half
+        # the bytes of the f32-param path (glm4 train_4k: 1.07 -> 0.54 GB).
+        x = jnp.take(params["embed"].astype(c.compute_dtype), tokens, axis=0)
+        if c.embed_scale:
+            x = x * jnp.asarray(math.sqrt(c.d_model), x.dtype)
+        if c.vlm_patches and extra is not None:
+            x = jnp.concatenate([extra.astype(c.compute_dtype), x], axis=1)
+        # "seq_res": the residual stream's sequence axis; mapping it to
+        # "model" (RULES override) turns the TP all-reduces into
+        # reduce-scatter/all-gather pairs with sequence-sharded norms --
+        # Megatron sequence parallelism (measured in EXPERIMENTS §Perf).
+        return shard(x, "batch", "seq_res", "embed")
+
+    def _logits(self, params, x):
+        """Logits stay in compute dtype: a full f32 (B,S,V) buffer is the
+        single largest activation at scale (glm4 train_4k: 2.5 GB/device);
+        the loss upcasts inside its fused logsumexp instead."""
+        c = self.cfg
+        x = self._norm(params["final_norm"], x)
+        w = params["embed"].T if c.tie_embed else params["head"]
+        logits = L.dense(x.astype(c.compute_dtype), w.astype(c.compute_dtype))
+        if c.logit_softcap:
+            logits = jnp.tanh(logits / c.logit_softcap) * c.logit_softcap
+        return shard(logits.astype(c.compute_dtype), "batch", "seq", "vocab")
+
+    # ------------------------------------------------------------------
+    # modes
+    # ------------------------------------------------------------------
+    def apply(self, params, tokens, *, image_embeds=None):
+        """Training forward: (B, S) tokens -> (logits (B, S', V) f32, aux)."""
+        c = self.cfg
+        x = self._embed(params, tokens, image_embeds)
+        S = x.shape[1]
+        sin, cos = L.rope(jnp.arange(S), c.hd, c.rope_theta)
+
+        def body(carry, lp):
+            h, aux = carry
+            for i, spec in enumerate(c.pattern):
+                h, _, a = self._slot_apply(spec, lp[f"slot{i}"], h, sin, cos,
+                                           mode="train")
+                h = shard(h, "batch", "seq_res", "embed")
+                aux = aux + a
+            return (h, aux), None
+
+        if c.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(c.remat),
+                                  prevent_cse=False)
+        aux0 = jnp.zeros((2,), jnp.float32)
+        if c.n_periods:
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), params["periods"])
+        else:
+            aux = aux0
+        for i, spec in enumerate(c.tail_specs):
+            x, _, a = self._slot_apply(spec, params[f"tail{i}"], x, sin, cos,
+                                       mode="train")
+            aux = aux + a
+        return self._logits(params, x), aux
+
+    def prefill(self, params, tokens, *, image_embeds=None, max_len=None):
+        """Forward + cache build. Returns (logits, cache_pytree).
+
+        ``max_len`` sizes the global-attention caches for subsequent
+        decoding (defaults to the prefill length + 1).
+        """
+        c = self.cfg
+        x = self._embed(params, tokens, image_embeds)
+        S = x.shape[1]
+        # cache must hold at least the prefix (+1 for the next decode step);
+        # vlm prefixes extend S beyond the caller's token count
+        self._prefill_max_len = max(max_len or 0, S + 1)
+        sin, cos = L.rope(jnp.arange(S), c.hd, c.rope_theta)
+
+        def body(h, lp):
+            caches = {}
+            for i, spec in enumerate(c.pattern):
+                h, cch, _ = self._slot_apply(spec, lp[f"slot{i}"], h, sin,
+                                             cos, mode="prefill")
+                caches[f"slot{i}"] = cch
+            return h, caches
+
+        cache: dict = {}
+        if c.n_periods:
+            x, cache["periods"] = jax.lax.scan(body, x, params["periods"])
+        for i, spec in enumerate(c.tail_specs):
+            x, cch, _ = self._slot_apply(spec, params[f"tail{i}"], x, sin,
+                                         cos, mode="prefill")
+            cache[f"tail{i}"] = cch
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B, 1), pos (B,) -> (logits (B,1,V), new cache)."""
+        c = self.cfg
+        x = self._embed(params, tokens)
+        sin, cos = L.rope(pos[:, None], c.hd, c.rope_theta)
+
+        def body(h, xs):
+            lp, cc = xs
+            new_c = {}
+            for i, spec in enumerate(c.pattern):
+                h, ncc, _ = self._slot_apply(spec, lp[f"slot{i}"], h, sin,
+                                             cos, mode="decode",
+                                             cache=cc[f"slot{i}"],
+                                             pos_dec=pos)
+                new_c[f"slot{i}"] = ncc
+            return h, new_c
+
+        new_cache: dict = {}
+        if c.n_periods:
+            x, new_cache["periods"] = jax.lax.scan(
+                body, x, (params["periods"], cache["periods"]))
+        for i, spec in enumerate(c.tail_specs):
+            x, ncc, _ = self._slot_apply(spec, params[f"tail{i}"], x, sin,
+                                         cos, mode="decode",
+                                         cache=cache[f"tail{i}"], pos_dec=pos)
+            new_cache[f"tail{i}"] = ncc
+        return self._logits(params, x), new_cache
+
+    # ------------------------------------------------------------------
+    # cache constructors (ShapeDtypeStruct-compatible: pure shape math)
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        """Zero decode cache for (batch, max_len)."""
+        c = self.cfg
+
+        def slot_cache(spec: LayerSpec, lead=()):
+            if spec.mixer == "attn":
+                W = spec.window
+                if W is not None:
+                    return {
+                        "k": jnp.zeros(lead + (batch, W, c.n_kv, c.hd), c.cache_dtype),
+                        "v": jnp.zeros(lead + (batch, W, c.n_kv, c.hd), c.cache_dtype),
+                        "pos": jnp.full(lead + (batch, W), -1, jnp.int32),
+                    }
+                return {
+                    "k": jnp.zeros(lead + (batch, max_len, c.n_kv, c.hd), c.cache_dtype),
+                    "v": jnp.zeros(lead + (batch, max_len, c.n_kv, c.hd), c.cache_dtype),
+                }
+            if spec.mixer == "ssm":
+                d_inner = 2 * c.d_model
+                H = d_inner // c.ssm_headdim
+                return {
+                    "ssm": jnp.zeros(lead + (batch, H, c.ssm_state, c.ssm_headdim), jnp.float32),
+                    "conv": jnp.zeros(lead + (batch, 3, d_inner + 2 * c.ssm_state), jnp.bfloat16),
+                }
+            if spec.mixer == "rec":
+                R_ = c.rnn_width or c.d_model
+                return {
+                    "h": jnp.zeros(lead + (batch, R_), jnp.float32),
+                    "conv": jnp.zeros(lead + (batch, 3, R_), jnp.bfloat16),
+                }
+            raise ValueError(spec.mixer)
+
+        cache: dict = {}
+        if c.n_periods:
+            cache["periods"] = {
+                f"slot{i}": slot_cache(spec, (c.n_periods,))
+                for i, spec in enumerate(c.pattern)
+            }
+        for i, spec in enumerate(c.tail_specs):
+            cache[f"tail{i}"] = slot_cache(spec)
+        return cache
+
+    def abstract_cache(self, batch: int, max_len: int):
+        """ShapeDtypeStruct cache (dry-run path, no allocation)."""
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def cache_logical(self, batch: int, max_len: int):
+        """Logical sharding axes congruent with init_cache's pytree."""
+        c = self.cfg
+
+        def slot_logical(spec: LayerSpec, stacked: bool):
+            lead = ("stack",) if stacked else ()
+            if spec.mixer == "attn":
+                kv = lead + ("batch", "cache_seq", "kv_heads", None)
+                out = {"k": kv, "v": kv}
+                if spec.window is not None:
+                    out["pos"] = lead + ("batch", None)
+                return out
+            if spec.mixer == "ssm":
+                return {"ssm": lead + ("batch", "heads", None, None),
+                        "conv": lead + ("batch", None, "rnn")}
+            if spec.mixer == "rec":
+                return {"h": lead + ("batch", "rnn"),
+                        "conv": lead + ("batch", None, "rnn")}
+            raise ValueError(spec.mixer)
+
+        cache: dict = {}
+        if c.n_periods:
+            cache["periods"] = {
+                f"slot{i}": slot_logical(spec, True)
+                for i, spec in enumerate(c.pattern)
+            }
+        for i, spec in enumerate(c.tail_specs):
+            cache[f"tail{i}"] = slot_logical(spec, False)
+        return cache

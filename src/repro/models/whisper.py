@@ -1,0 +1,235 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the brief, the audio frontend (log-mel + conv downsampling) is a STUB:
+``input_specs`` provides precomputed frame embeddings (B, F, d_model), so
+this module implements the transformer backbone only -- a bidirectional
+encoder over frames with learned positional embeddings and a causal
+decoder with self- + cross-attention (LayerNorm + biased projections,
+matching Whisper's parameterization).
+
+Serving: ``prefill`` encodes frames once, projects the encoder output
+through every decoder layer's cross-attention K/V (cached), and prefills
+the decoder self-attention cache; ``decode_step`` is then decoder-only.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.transformer import ArchConfig
+from repro.parallel import shard
+
+__all__ = ["WhisperED"]
+
+
+class WhisperED:
+    """Encoder-decoder; cfg.n_layers = encoder layers = decoder layers."""
+
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.enc_dec
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    def _ln_init(self, pi):
+        c = self.cfg
+        return {"scale": pi.ones((c.d_model,), ("embed",)),
+                "bias": pi.zeros((c.d_model,), ("embed",))}
+
+    def _enc_layer_init(self, pi):
+        c = self.cfg
+        return {
+            "ln1": self._ln_init(pi),
+            "attn": A.attn_init(pi, c.d_model, c.n_heads, c.n_kv, c.hd,
+                                qkv_bias=True, out_bias=True),
+            "ln2": self._ln_init(pi),
+            "ffn": L.mlp_init(pi, c.d_model, c.d_ff, gated=False),
+        }
+
+    def _dec_layer_init(self, pi):
+        c = self.cfg
+        return {
+            "ln1": self._ln_init(pi),
+            "self_attn": A.attn_init(pi, c.d_model, c.n_heads, c.n_kv, c.hd,
+                                     qkv_bias=True, out_bias=True),
+            "ln_x": self._ln_init(pi),
+            "cross_attn": A.attn_init(pi, c.d_model, c.n_heads, c.n_kv, c.hd,
+                                      qkv_bias=True, out_bias=True),
+            "ln2": self._ln_init(pi),
+            "ffn": L.mlp_init(pi, c.d_model, c.d_ff, gated=False),
+        }
+
+    def init(self, key, *, abstract: bool = False, max_dec_len: int = 32768):
+        # max_dec_len covers the largest assigned shape (decode_32k /
+        # prefill_32k); whisper skips long_500k (full attention).
+        c = self.cfg
+        pi = L.ParamInit(key, c.param_dtype, abstract=abstract)
+        n = c.n_layers
+
+        def stack(fn):
+            inits = [fn(pi) for _ in range(n)]
+
+            def _stk(*xs):
+                arrs = [x[0] for x in xs]
+                if isinstance(arrs[0], jax.ShapeDtypeStruct):
+                    a = jax.ShapeDtypeStruct((n,) + tuple(arrs[0].shape),
+                                             arrs[0].dtype)
+                else:
+                    a = jnp.stack(arrs)
+                return a, ("stack",) + xs[0][1]
+
+            return jax.tree.map(
+                _stk, *inits,
+                is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                and not isinstance(t[0], dict))
+
+        tree = {
+            "enc_pos": pi.normal((c.enc_frames, c.d_model),
+                                 (None, "embed"), scale=0.02),
+            "dec_embed": L.embed_init(pi, c.vocab, c.d_model),
+            "dec_pos": pi.normal((max_dec_len, c.d_model),
+                                 (None, "embed"), scale=0.02),
+            "enc_layers": stack(self._enc_layer_init),
+            "dec_layers": stack(self._dec_layer_init),
+            "enc_ln": self._ln_init(pi),
+            "dec_ln": self._ln_init(pi),
+        }
+        return L.split_tree(tree)
+
+    def abstract_params(self):
+        return self.init(None, abstract=True)
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        c = self.cfg
+        cd = c.compute_dtype
+        F = frames.shape[1]
+        x = frames.astype(cd) + params["enc_pos"][:F].astype(cd)[None]
+        x = shard(x, "batch", "seq", "embed")
+
+        def body(h, lp):
+            a = L.layernorm(h, lp["ln1"]["scale"], lp["ln1"]["bias"])
+            o, _ = A.attn_apply(lp["attn"], a, None, None, causal=False,
+                                rope_on=False, kv_chunk=c.kv_chunk,
+                                compute_dtype=cd)
+            h = h + o
+            m = L.layernorm(h, lp["ln2"]["scale"], lp["ln2"]["bias"])
+            h = h + L.mlp_apply(lp["ffn"], m, act="gelu",
+                                compute_dtype=cd).astype(h.dtype)
+            return h, None
+
+        if c.remat:
+            from repro.models.transformer import _remat_policy
+            body = jax.checkpoint(body, policy=_remat_policy(c.remat),
+                                  prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return L.layernorm(x, params["enc_ln"]["scale"],
+                           params["enc_ln"]["bias"])
+
+    def _dec_body(self, params, tokens, enc_out, *, collect_cache=False):
+        c = self.cfg
+        cd = c.compute_dtype
+        S = tokens.shape[1]
+        x = jnp.take(params["dec_embed"], tokens, axis=0).astype(cd)
+        x = x + params["dec_pos"][:S].astype(cd)[None]
+        x = shard(x, "batch", "seq", "embed")
+
+        def body(h, lp):
+            a = L.layernorm(h, lp["ln1"]["scale"], lp["ln1"]["bias"])
+            o, (k, v) = A.attn_apply(lp["self_attn"], a, None, None,
+                                     causal=True, rope_on=False,
+                                     kv_chunk=c.kv_chunk, compute_dtype=cd)
+            h = h + o
+            xx = L.layernorm(h, lp["ln_x"]["scale"], lp["ln_x"]["bias"])
+            o, (ck, cv) = A.attn_apply(lp["cross_attn"], xx, None, None,
+                                       kv=enc_out, rope_on=False,
+                                       kv_chunk=c.kv_chunk, compute_dtype=cd)
+            h = h + o
+            m = L.layernorm(h, lp["ln2"]["scale"], lp["ln2"]["bias"])
+            h = h + L.mlp_apply(lp["ffn"], m, act="gelu",
+                                compute_dtype=cd).astype(h.dtype)
+            cache = None
+            if collect_cache:
+                padc = ((0, 0), (0, self._prefill_max_len - k.shape[1]),
+                        (0, 0), (0, 0))
+                cache = {"self": {"k": jnp.pad(k.astype(c.cache_dtype), padc),
+                                  "v": jnp.pad(v.astype(c.cache_dtype), padc)},
+                         "cross": {"k": ck.astype(c.cache_dtype),
+                                   "v": cv.astype(c.cache_dtype)}}
+            return h, cache
+
+        if c.remat and not collect_cache:
+            from repro.models.transformer import _remat_policy
+            body = jax.checkpoint(body, policy=_remat_policy(c.remat),
+                                  prevent_cse=False)
+        x, caches = jax.lax.scan(body, x, params["dec_layers"])
+        x = L.layernorm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"])
+        logits = L.dense(x.astype(cd), params["dec_embed"].T.astype(cd))
+        return shard(logits.astype(jnp.float32), "batch", "seq", "vocab"), caches
+
+    # ------------------------------------------------------------------
+    def apply(self, params, tokens, *, frames):
+        """Training forward -> (logits (B, S, V) f32, aux)."""
+        enc = self.encode(params, frames)
+        logits, _ = self._dec_body(params, tokens, enc)
+        return logits, jnp.zeros((2,), jnp.float32)
+
+    def prefill(self, params, tokens, *, frames, max_len=None):
+        self._prefill_max_len = max(max_len or 0, tokens.shape[1] + 1)
+        enc = self.encode(params, frames)
+        logits, cache = self._dec_body(params, tokens, enc,
+                                       collect_cache=True)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,1), pos (B,). Self cache grows in-place at ``pos``."""
+        c = self.cfg
+        cd = c.compute_dtype
+        x = jnp.take(params["dec_embed"], tokens, axis=0).astype(cd)
+        pos_emb = jnp.take(params["dec_pos"], pos, axis=0).astype(cd)
+        x = x + pos_emb[:, None, :]
+
+        def body(h, xs):
+            lp, cc = xs
+            a = L.layernorm(h, lp["ln1"]["scale"], lp["ln1"]["bias"])
+            o, new_self = A.attn_decode(lp["self_attn"], a, None, None,
+                                        cc["self"], pos, rope_on=False,
+                                        compute_dtype=cd)
+            h = h + o
+            xx = L.layernorm(h, lp["ln_x"]["scale"], lp["ln_x"]["bias"])
+            o, _ = A.attn_decode(lp["cross_attn"], xx, None, None,
+                                 cc["cross"], pos, rope_on=False, cross=True,
+                                 compute_dtype=cd)
+            h = h + o
+            m = L.layernorm(h, lp["ln2"]["scale"], lp["ln2"]["bias"])
+            h = h + L.mlp_apply(lp["ffn"], m, act="gelu",
+                                compute_dtype=cd).astype(h.dtype)
+            return h, {"self": new_self, "cross": cc["cross"]}
+
+        x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+        x = L.layernorm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"])
+        logits = L.dense(x.astype(cd), params["dec_embed"].T.astype(cd))
+        return logits.astype(jnp.float32), new_cache
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        c = self.cfg
+        n = c.n_layers
+        kv = (n, batch, max_len, c.n_kv, c.hd)
+        ckv = (n, batch, c.enc_frames, c.n_kv, c.hd)
+        return {
+            "self": {"k": jnp.zeros(kv, c.cache_dtype),
+                     "v": jnp.zeros(kv, c.cache_dtype)},
+            "cross": {"k": jnp.zeros(ckv, c.cache_dtype),
+                      "v": jnp.zeros(ckv, c.cache_dtype)},
+        }
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def cache_logical(self, batch: int, max_len: int):
+        kv = ("stack", "batch", "cache_seq", "kv_heads", None)
+        return {"self": {"k": kv, "v": kv}, "cross": {"k": kv, "v": kv}}

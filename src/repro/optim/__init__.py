@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update, OptState  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401
+from repro.optim.grad import (  # noqa: F401
+    clip_by_global_norm, compress_int8, decompress_int8,
+)

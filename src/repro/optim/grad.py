@@ -1,0 +1,64 @@
+"""Gradient utilities: global-norm clipping and int8 error-feedback
+compression for cross-pod gradient all-reduce.
+
+Compression scheme (1-bit-Adam-family, simplified to int8):
+  * per-tensor scale = max|g| / 127; quantize to int8; the quantization
+    error is carried in an f32 *error-feedback* buffer added to the next
+    step's gradient, making the compression unbiased over time;
+  * intended use: quantize -> psum over the ``pod`` axis -> dequantize
+    (4x fewer cross-pod bytes; the within-pod reduce stays full precision).
+    The train loop applies it only when ``pods > 1`` and records the
+    collective-byte saving in EXPERIMENTS.md section Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["clip_by_global_norm", "compress_int8", "decompress_int8",
+           "ef_compress_grads"]
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    # NOTE: jnp.sum(square), NOT jnp.vdot -- vdot ravels its inputs and a
+    # 1-D reshape of a sharded gradient forces GSPMD to all-gather the
+    # whole tensor (measured: a 2.5 GB all-gather of glm4's LM-head grad
+    # per step).  Elementwise square + reduce stays sharded.
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def compress_int8(x):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads, errors):
+    """Error-feedback int8 compression of a gradient pytree.
+
+    Returns (quantized pytree of (q, scale), new error pytree).  The caller
+    all-reduces the int8 payload (summing int32-accumulated), dequantizes,
+    and averages.
+    """
+    if errors is None:
+        errors = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                              grads)
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    quant, new_err = [], []
+    for g, e in zip(flat_g, flat_e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        quant.append((q, s))
+        new_err.append(corrected - decompress_int8(q, s))
+    return jax.tree.unflatten(tree, quant), jax.tree.unflatten(tree, new_err)

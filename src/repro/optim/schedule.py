@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule"]
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps,
+                    final_frac=0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * (s + 1.0) / max(warmup_steps, 1)
+    t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                     (1.0 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup_steps, warm, cos)

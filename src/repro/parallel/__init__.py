@@ -1,0 +1,10 @@
+"""Distribution substrate: logical-axis sharding rules, activation
+constraints with divisibility fallbacks, and collective helpers."""
+from repro.parallel.sharding import (  # noqa: F401
+    shard,
+    logical_to_spec,
+    resolve_param_specs,
+    pad_vocab,
+)
+
+__all__ = ["shard", "logical_to_spec", "resolve_param_specs", "pad_vocab"]

@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    RetryPolicy, run_with_restarts, StepWatchdog, StragglerMonitor,
+)
+from repro.runtime.elastic import elastic_remesh  # noqa: F401

@@ -1,0 +1,45 @@
+"""Elastic scaling: resume a run on a different device count / mesh shape.
+
+Because checkpoints are mesh-independent (gathered leaves + logical axis
+specs) and the data pipeline is a pure function of (seed, step, shard),
+changing the data-parallel degree between runs requires only:
+
+  1. build the new mesh,
+  2. re-resolve the logical param specs against it (divisibility fallbacks
+     re-evaluated: e.g. 15 heads shard on an 8-way model axis after
+     shrinking from 16),
+  3. ``CheckpointManager.restore(..., shardings=new)``.
+
+``elastic_remesh`` also handles *in-session* resharding (live pytree ->
+new mesh), used when a pod drops and the job continues at reduced width.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.parallel.sharding import logical_to_spec
+
+__all__ = ["elastic_remesh", "specs_for_mesh"]
+
+
+def specs_for_mesh(logical_tree, shapes_tree, mesh, rules=None):
+    """Pytree of NamedShardings for ``mesh`` from logical axis names."""
+    def one(logical, sds):
+        spec = logical_to_spec(logical, sds.shape, mesh, rules=rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        one, logical_tree, shapes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(a, (str, type(None))) for a in t))
+
+
+def elastic_remesh(tree, logical_tree, new_mesh, rules=None):
+    """Reshard a live pytree onto a new mesh (device_put handles the
+    all-gather/scatter; cross-process this is the standard jax resharding
+    path)."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    shardings = specs_for_mesh(logical_tree, shapes, new_mesh, rules)
+    return jax.tree.map(jax.device_put, tree, shardings)

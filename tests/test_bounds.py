@@ -1,0 +1,125 @@
+"""Property tests: the paper's bounds are true lower bounds (Thms 2-4)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bounds
+
+floats = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+def _vec(draw, d, scale=1.0):
+    return draw(
+        hnp.arrays(np.float32, (d,), elements=st.floats(-scale, scale, width=32))
+    )
+
+
+@st.composite
+def ball_case(draw):
+    d = draw(st.integers(2, 24))
+    c = _vec(draw, d, 5.0)
+    q = _vec(draw, d, 5.0)
+    hypothesis.assume(np.linalg.norm(q) > 1e-3)
+    # points inside the ball around c
+    npts = draw(st.integers(1, 16))
+    offs = draw(
+        hnp.arrays(np.float32, (npts, d), elements=st.floats(-1, 1, width=32))
+    )
+    return c, q, offs
+
+
+@hypothesis.given(ball_case())
+@hypothesis.settings(max_examples=200, deadline=None)
+def test_node_ball_bound_is_lower_bound(case):
+    c, q, offs = case
+    pts = c[None, :] + offs
+    radius = float(np.max(np.linalg.norm(pts - c, axis=1)))
+    lb = bounds.node_ball_bound(
+        jnp.float32(pts.dtype.type(q @ c)), jnp.float32(np.linalg.norm(q)), radius
+    )
+    true_min = float(np.min(np.abs(pts @ q)))
+    assert float(lb) <= true_min + 1e-4 * (1 + abs(true_min))
+
+
+@hypothesis.given(ball_case())
+@hypothesis.settings(max_examples=200, deadline=None)
+def test_point_bounds_are_lower_bounds_and_cone_tighter(case):
+    """Cor 1 + Thm 3 validity, and Thm 4 (cone >= ball) per point."""
+    c, q, offs = case
+    pts = c[None, :] + offs
+    qn = float(np.linalg.norm(q))
+    cn = max(float(np.linalg.norm(c)), 1e-12)
+    ip_qc = float(q @ c)
+    rx = np.linalg.norm(pts - c, axis=1)
+    xn = np.linalg.norm(pts, axis=1)
+    xcos = (pts @ c) / cn
+    xsin = np.sqrt(np.maximum(xn**2 - xcos**2, 0.0))
+    true = np.abs(pts @ q)
+
+    pb = np.asarray(bounds.point_ball_bound(ip_qc, qn, rx))
+    qcos, qsin = bounds.query_angle_terms(ip_qc, qn, cn)
+    cb = np.asarray(bounds.point_cone_bound(qcos, qsin, xcos, xsin))
+    cb_sym = np.asarray(
+        bounds.point_cone_bound(qcos, qsin, xcos, xsin, symmetric=True)
+    )
+
+    tol = 1e-3 * (1 + np.abs(true)) + 1e-4
+    assert (pb <= true + tol).all(), (pb - true).max()
+    assert (cb <= true + tol).all(), (cb - true).max()
+    assert (cb_sym <= true + tol).all()
+    # Theorem 4: cone bound at least as tight as ball bound.  The cone
+    # form subtracts qsin*xsin where qsin = sqrt(qn^2 - qcos^2) cancels
+    # catastrophically when theta ~ 0 (e.g. degenerate leaves whose points
+    # coincide with the center), so the f32 slack scales with the bound's
+    # natural magnitude ||q||*||x||, not with the true distance.
+    tol4 = 1e-3 * (1 + qn * xn) + 1e-3
+    assert (cb >= pb - tol4).all(), (pb - cb).max()
+    # symmetrized cone is at least the plain cone
+    assert (cb_sym >= cb - 1e-5).all()
+
+
+@hypothesis.given(
+    st.integers(2, 50), st.integers(1, 49), st.floats(-5, 5), st.floats(-5, 5)
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_collaborative_ip_identity(nl, nr_raw, ipl, ipn):
+    """Lemma 2 algebra: reconstructed right-child IP matches direct value."""
+    nr = nr_raw
+    n = nl + nr
+    # pick arbitrary consistent values: ipn = (nl*ipl + nr*ipr)/n
+    ipr_true = 1.234
+    ipn = (nl * ipl + nr * ipr_true) / n
+    ipr = (n * ipn - nl * ipl) / nr
+    assert abs(ipr - ipr_true) < 1e-6 * (1 + abs(ipr_true))
+
+
+def test_cone_bound_paper_cases():
+    """Hand-constructed cases hitting each branch of Theorem 3."""
+    # case (a): small angles, x close to center direction, q close too
+    q = np.array([1.0, 0.1], np.float32)
+    c = np.array([2.0, 0.0], np.float32)
+    x = np.array([2.0, 0.3], np.float32)
+    qn, cn, xn = (np.linalg.norm(v) for v in (q, c, x))
+    qcos, qsin = bounds.query_angle_terms(float(q @ c), qn, cn)
+    xcos = float(x @ c) / cn
+    xsin = float(np.sqrt(xn**2 - xcos**2))
+    cb = float(bounds.point_cone_bound(qcos, qsin, xcos, xsin))
+    assert 0 < cb <= abs(float(x @ q)) + 1e-5
+
+    # case (b): q anti-aligned -> cos(theta - phi) < 0
+    q2 = -q
+    qcos2, qsin2 = bounds.query_angle_terms(float(q2 @ c), qn, cn)
+    cb2 = float(bounds.point_cone_bound(qcos2, qsin2, xcos, xsin))
+    assert 0 <= cb2 <= abs(float(x @ q2)) + 1e-5
+
+    # orthogonal-ish -> bound collapses to 0
+    q3 = np.array([0.0, 1.0], np.float32)
+    qcos3, qsin3 = bounds.query_angle_terms(float(q3 @ c), 1.0, cn)
+    x3 = np.array([1.0, 1.0], np.float32)
+    xcos3 = float(x3 @ c) / cn
+    xsin3 = float(np.sqrt(2 - xcos3**2))
+    cb3 = float(bounds.point_cone_bound(qcos3, qsin3, xcos3, xsin3))
+    assert cb3 <= abs(float(x3 @ q3)) + 1e-6

@@ -1,0 +1,126 @@
+"""Pallas kernel tests: interpret=True sweeps over shapes/dtypes/k against
+the pure-jnp oracle (ref.py) and the global brute-force oracle."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balltree import append_ones, build_tree, normalize_query
+from repro.core.exact import exact_search
+from repro.kernels.ops import prepare_operands, sweep_search_pallas
+from repro.kernels.p2h_scan import p2h_sweep
+from repro.kernels.ref import p2h_sweep_ref
+
+
+def _mkdata(n, d, seed=0, kind="normal"):
+    rng = np.random.default_rng(seed)
+    if kind == "normal":
+        x = rng.normal(size=(n, d))
+    elif kind == "clustered":
+        c = rng.normal(size=(8, d)) * 5
+        x = c[rng.integers(0, 8, n)] + rng.normal(size=(n, d)) * 0.3
+    elif kind == "unit":
+        x = rng.normal(size=(n, d))
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return x.astype(np.float32)
+
+
+def _queries(b, d, seed=1):
+    rng = np.random.default_rng(seed)
+    return normalize_query(rng.normal(size=(b, d + 1)).astype(np.float32))
+
+
+@pytest.mark.parametrize("n,d,n0,k,b", [
+    (1000, 16, 128, 1, 8),
+    (1000, 16, 128, 10, 8),
+    (4000, 100, 256, 10, 16),
+    (2000, 64, 128, 40, 4),     # b not a block multiple -> padding path
+    (513, 7, 128, 1, 3),        # odd everything
+    (3000, 200, 256, 20, 8),    # d > 128 -> multi-lane padding
+])
+def test_kernel_matches_exact(n, d, n0, k, b):
+    data = _mkdata(n, d)
+    tree = build_tree(data, n0=n0)
+    q = _queries(b, d)
+    ed, ei = exact_search(jnp.asarray(append_ones(data)), jnp.asarray(q), k=k)
+    kd, ki, _ = sweep_search_pallas(tree, jnp.asarray(q), k=k)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(ed),
+                               rtol=1e-4, atol=1e-5)
+    # ids may differ on exact ties only
+    tie = np.isclose(np.asarray(kd), np.asarray(ed), rtol=1e-4, atol=1e-5)
+    assert tie.all()
+
+
+@pytest.mark.parametrize("use_ball,use_cone", [
+    (False, False), (True, False), (False, True), (True, True)])
+def test_kernel_bound_toggles_match_ref(use_ball, use_cone):
+    data = _mkdata(2000, 32, seed=3, kind="clustered")
+    tree = build_tree(data, n0=128)
+    q = _queries(8, 32, seed=4)
+    ops, B0 = prepare_operands(tree, jnp.asarray(q))
+    kd, ki = p2h_sweep(**ops, k=5, use_ball=use_ball, use_cone=use_cone,
+                       interpret=True)
+    rd, ri = p2h_sweep_ref(**ops, k=5, use_ball=use_ball, use_cone=use_cone)
+    kd = np.sort(np.asarray(kd), axis=1)
+    rd = np.sort(np.asarray(rd), axis=1)
+    np.testing.assert_allclose(kd, rd, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_frac_budget_subsets_exact():
+    """frac<1 visits a prefix of preferred tiles: dists must be a superset
+    bound (>= exact) and frac=1.0 must equal exact."""
+    data = _mkdata(4000, 24, seed=5)
+    tree = build_tree(data, n0=128)
+    q = _queries(8, 24, seed=6)
+    ed, _ = exact_search(jnp.asarray(append_ones(data)), jnp.asarray(q), k=10)
+    prev = None
+    for frac in (0.05, 0.25, 1.0):
+        kd, _, _ = sweep_search_pallas(tree, jnp.asarray(q), k=10, frac=frac)
+        kd = np.asarray(kd)
+        assert (kd >= np.asarray(ed) - 1e-5).all()
+        if prev is not None:   # more budget never hurts
+            assert (kd <= prev + 1e-5).all()
+        prev = kd
+    np.testing.assert_allclose(prev, np.asarray(ed), rtol=1e-4, atol=1e-5)
+
+
+def test_kernel_lambda_cap_exactness():
+    """An external cap >= true kth distance must not change results
+    (the distributed two-round exchange's correctness condition)."""
+    data = _mkdata(3000, 40, seed=7)
+    tree = build_tree(data, n0=128)
+    q = _queries(8, 40, seed=8)
+    ed, _ = exact_search(jnp.asarray(append_ones(data)), jnp.asarray(q), k=5)
+    cap = jnp.asarray(np.asarray(ed)[:, -1] * 1.5 + 1e-3)
+    kd, _, _ = sweep_search_pallas(tree, jnp.asarray(q), k=5, lambda_cap=cap)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(ed),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_kernel_dtype_and_duplicate_points(dtype):
+    data = _mkdata(900, 12, seed=9).astype(dtype)
+    data[100:200] = data[0]  # heavy duplicates: degenerate-split guard path
+    tree = build_tree(data, n0=128)
+    q = _queries(4, 12, seed=10)
+    ed, _ = exact_search(jnp.asarray(append_ones(data)), jnp.asarray(q), k=3)
+    kd, _, _ = sweep_search_pallas(tree, jnp.asarray(q), k=3)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(ed),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(200, 1500),
+    d=st.integers(2, 48),
+    k=st.sampled_from([1, 4, 10]),
+    seed=st.integers(0, 10_000),
+)
+def test_kernel_property_exactness(n, d, k, seed):
+    data = _mkdata(n, d, seed=seed)
+    tree = build_tree(data, n0=128)
+    q = _queries(5, d, seed=seed + 1)
+    ed, _ = exact_search(jnp.asarray(append_ones(data)), jnp.asarray(q), k=k)
+    kd, _, _ = sweep_search_pallas(tree, jnp.asarray(q), k=k)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(ed),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,88 @@
+"""Launch-path tests: the dry-run machinery itself at smoke scale
+(subprocess with 8 forced host devices), input specs, opt knobs."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, shape_applicable
+from repro.launch.steps import batch_logical, input_specs
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_complete_and_shaped(arch, shape):
+    ok, _ = shape_applicable(arch, shape)
+    specs = input_specs(arch, shape)
+    sh = SHAPES[shape]
+    assert specs["tokens"].shape[0] == sh["batch"]
+    if sh["kind"] == "decode":
+        assert specs["tokens"].shape == (sh["batch"], 1)
+        assert "pos" in specs
+    else:
+        assert specs["tokens"].shape == (sh["batch"], sh["seq"])
+    logical = batch_logical(arch, shape)
+    assert set(logical) == set(specs)
+    for k, lg in logical.items():
+        assert len(lg) == len(specs[k].shape)
+
+
+def test_apply_opts_knobs():
+    from repro.launch.dryrun import _apply_opts
+    from repro.configs import get_config
+
+    cfg = _apply_opts(get_config("glm4-9b"),
+                      "headpad16,remat=dots_no_batch,micro=4,capacity=1.0,"
+                      "rules.embed=data")
+    assert cfg.pad_heads_to == 16 and cfg.hq_padded == 32
+    assert cfg.remat == "dots_no_batch"
+    assert cfg.n_micro == 4
+    assert cfg.rules["embed"] == "data"
+    with pytest.raises(ValueError):
+        _apply_opts(cfg, "bogus")
+
+
+_BODY = textwrap.dedent(
+    """
+    import os
+    os.environ["REPRO_STRICT_BF16_DOTS"] = "1"
+    import jax
+    from repro.launch.dryrun import _lower_cell, collective_bytes
+    from repro.configs import get_config
+    import repro.configs as C
+    import dataclasses
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # shrink the cell: smoke config + tiny shapes
+    C.SHAPES["train_4k"] = dict(kind="train", seq=32, batch=8)
+    C.SHAPES["decode_32k"] = dict(kind="decode", seq=64, batch=8)
+    for arch in ("llama3.2-1b", "mamba2-780m"):
+        cfg = get_config(arch, smoke=True)
+        for shape in ("train_4k", "decode_32k"):
+            comp = _lower_cell(arch, shape, mesh, cfg)
+            ca = comp.cost_analysis()
+            assert ca["flops"] > 0
+            cb = collective_bytes(comp.as_text())
+            assert cb["wire_bytes"] >= 0
+            ma = comp.memory_analysis()
+            assert ma.temp_size_in_bytes >= 0
+    print("DRYRUN_SMOKE_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_dryrun_lowering_smoke_8dev():
+    """The dry-run lowering machinery (shardings, metering hooks) compiles
+    smoke cells on an 8-device mesh -- CI coverage for launch/dryrun.py."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _BODY], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "DRYRUN_SMOKE_OK" in res.stdout

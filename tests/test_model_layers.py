@@ -1,0 +1,228 @@
+"""Layer-level oracle tests: every fused/chunked/scanned implementation
+against a naive reference."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+
+
+# ------------------------------------------------------------- attention
+def _dense_attn(q, k, v, causal, window, scale):
+    B, Sq, H, D = q.shape
+    G = H // k.shape[2]
+    kr = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kr)
+    i = jnp.arange(Sq)
+    mask = jnp.ones((Sq, Sq), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window:
+        mask &= (i[:, None] - i[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vr)
+
+
+@pytest.mark.parametrize("Sq,H,Hkv,D,causal,window,cq,ck", [
+    (32, 4, 2, 16, True, None, 8, 8),
+    (48, 4, 1, 8, True, 12, 16, 8),
+    (40, 6, 3, 16, False, None, 64, 64),   # no padding path
+    (33, 2, 2, 8, True, None, 8, 16),      # ragged seq
+])
+def test_gqa_attention_matches_dense(Sq, H, Hkv, D, causal, window, cq, ck):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, Sq, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, Sq, Hkv, D)), jnp.float32)
+    out = A.gqa_attention(q, k, v, jnp.arange(Sq), jnp.arange(Sq),
+                          causal=causal, window=window, q_chunk=cq,
+                          kv_chunk=ck, compute_dtype=jnp.float32)
+    ref = _dense_attn(q, k, v, causal, window, 1 / math.sqrt(D))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_local_attention_equals_windowed_gqa():
+    rng = np.random.default_rng(1)
+    Sq, H, Hkv, D, W = 64, 4, 2, 16, 16
+    q = jnp.asarray(rng.normal(size=(2, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, Sq, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, Sq, Hkv, D)), jnp.float32)
+    a = A.local_attention(q, k, v, jnp.arange(Sq), window=W,
+                          compute_dtype=jnp.float32)
+    b = A.gqa_attention(q, k, v, jnp.arange(Sq), jnp.arange(Sq),
+                        causal=True, window=W, q_chunk=32, kv_chunk=32,
+                        compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------------------------------ ssd
+def _ssd_naive(x, dt, Ac, Bm, Cm):
+    """Sequential SSM recurrence oracle."""
+    B, Sq, H, P = x.shape
+    N = Bm.shape[-1]
+    s = np.zeros((B, H, N, P))
+    ys = np.zeros_like(np.asarray(x, dtype=np.float64))
+    for t in range(Sq):
+        dA = np.exp(np.asarray(dt[:, t]) * np.asarray(Ac))     # (B,H)
+        s = s * dA[:, :, None, None] + np.einsum(
+            "bn,bh,bhp->bhnp", Bm[:, t], dt[:, t], x[:, t])
+        ys[:, t] = np.einsum("bn,bhnp->bhp", Cm[:, t], s)
+    return ys, s
+
+
+@pytest.mark.parametrize("Sq,chunk", [(16, 4), (20, 8), (32, 32)])
+def test_ssd_chunked_matches_naive_recurrence(Sq, chunk):
+    rng = np.random.default_rng(2)
+    B, H, P, N = 2, 3, 4, 8
+    x = rng.normal(size=(B, Sq, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.5, size=(B, Sq, H)).astype(np.float32)
+    Ac = -rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32)
+    Bm = rng.normal(size=(B, Sq, N)).astype(np.float32)
+    Cm = rng.normal(size=(B, Sq, N)).astype(np.float32)
+    y, s_fin = S.ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(Ac),
+                             jnp.asarray(Bm), jnp.asarray(Cm), chunk=chunk,
+                             return_state=True)
+    y_ref, s_ref = _ssd_naive(x, dt, Ac, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), s_ref, rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_mamba2_prefill_state_continues_decode():
+    """ssd state from a prefix + decode steps == full-sequence ssd."""
+    from repro.models.layers import ParamInit, split_tree
+    pi = ParamInit(jax.random.PRNGKey(3))
+    p, _ = split_tree(S.mamba2_init(pi, 32, d_state=8, headdim=8))
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.normal(size=(2, 12, 32)), jnp.float32)
+    full = S.mamba2_apply(p, u, chunk=4, compute_dtype=jnp.float32)
+    # prefix of 9, then 3 decode steps
+    pre, state = S.mamba2_apply(p, u[:, :9], chunk=4,
+                                compute_dtype=jnp.float32, return_state=True)
+    conv_dim = p["conv_w"].shape[1]
+    d_inner = p["norm"].shape[0]
+    from repro.models.layers import dense
+    zx = dense(u[:, 6:9], p["in_proj"], jnp.float32)
+    st = {"ssm": state,
+          "conv": zx[..., d_inner:d_inner + conv_dim].astype(jnp.bfloat16)}
+    outs = [pre]
+    for t in range(9, 12):
+        o, st = S.mamba2_decode(p, u[:, t:t + 1], st,
+                                compute_dtype=jnp.float32)
+        outs.append(o)
+    stitched = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stitched), np.asarray(full),
+                               rtol=5e-2, atol=5e-3)
+
+
+# ---------------------------------------------------------------- rglru
+def test_rglru_associative_scan_matches_sequential():
+    from repro.models.layers import ParamInit, split_tree
+    pi = ParamInit(jax.random.PRNGKey(4))
+    p, _ = split_tree(R.rglru_init(pi, 16, 24))
+    rng = np.random.default_rng(4)
+    u = jnp.asarray(rng.normal(size=(2, 10, 16)), jnp.float32)
+    full, h_fin = R.rglru_apply(p, u, compute_dtype=jnp.float32,
+                                return_state=True)
+    # sequential: decode step by step
+    st = R.rglru_state(p, 2)
+    outs = []
+    for t in range(10):
+        o, st = R.rglru_decode(p, u[:, t:t + 1], st,
+                               compute_dtype=jnp.float32)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    # associative (tree) vs sequential products of a_t differ by f32
+    # rounding; compare absolutely at the output scale.
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full),
+                               rtol=0, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(h_fin),
+                               rtol=0, atol=5e-3)
+
+
+# ------------------------------------------------------------------ moe
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_moe_dispatch_conservation(seed):
+    """Property: with capacity >= assignments, MoE output equals the
+    explicit per-token mixture of expert outputs (no token lost)."""
+    from repro.models.layers import ParamInit, split_tree, _ACTS
+    rng = np.random.default_rng(seed)
+    E, D, F, k = 4, 8, 16, 2
+    pi = ParamInit(jax.random.PRNGKey(seed))
+    p, _ = split_tree(M.moe_init(pi, D, F, E, gated=True))
+    x = jnp.asarray(rng.normal(size=(2, 8, D)), jnp.float32)
+    out, aux = M.moe_apply(p, x, top_k=k, capacity_factor=float(E),
+                           compute_dtype=jnp.float32)
+
+    # naive reference
+    import jax.nn as jnn
+    logits = x @ p["router"]
+    probs = jnn.softmax(logits, axis=-1)
+    gv, ge = jax.lax.top_k(probs, k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    act = _ACTS["silu"]
+    ref = jnp.zeros_like(x)
+    for e in range(E):
+        h = act(x @ p["wg"][e]) * (x @ p["wi"][e])
+        ye = h @ p["wo"][e]
+        w = jnp.where(ge == e, gv, 0.0).sum(-1)
+        ref = ref + ye * w[..., None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-4)
+    assert np.isfinite(float(aux["load_loss"]))
+
+
+def test_moe_capacity_drops_are_deterministic():
+    from repro.models.layers import ParamInit, split_tree
+    pi = ParamInit(jax.random.PRNGKey(7))
+    p, _ = split_tree(M.moe_init(pi, 8, 16, 4, gated=True))
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(1, 64, 8)),
+                    jnp.float32)
+    a, _ = M.moe_apply(p, x, top_k=2, capacity_factor=0.5,
+                       compute_dtype=jnp.float32)
+    b, _ = M.moe_apply(p, x, top_k=2, capacity_factor=0.5,
+                       compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------- norms
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rmsnorm_bf16_path_close_to_f32(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(4, 32)).astype(np.float32) * rng.uniform(0.1, 8)
+    scale = rng.normal(size=(32,)).astype(np.float32)
+    ref = np.asarray(L.rmsnorm(jnp.asarray(x), jnp.asarray(scale)))
+    got = np.asarray(L.rmsnorm(jnp.asarray(x, jnp.bfloat16),
+                               jnp.asarray(scale))).astype(np.float32)
+    np.testing.assert_allclose(got, ref, rtol=0.06, atol=0.06)
+
+
+def test_rope_rotation_preserves_norm_and_relative_angle():
+    sin, cos = L.rope(jnp.arange(16), 8)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+    y = L.apply_rope(x, sin, cos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q)_i, rope(k)_j> depends only on i-j
+    q = jnp.asarray(rng.normal(size=(1, 16, 1, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 16, 1, 8)), jnp.float32)
+    qr = L.apply_rope(jnp.broadcast_to(q[:, :1], q.shape), sin, cos)
+    kr = L.apply_rope(jnp.broadcast_to(k[:, :1], k.shape), sin, cos)
+    ips = np.asarray(jnp.einsum("bqhd,bkhd->bqk", qr, kr))[0]
+    d1 = np.diag(ips, k=3)   # pairs with i-j = -3
+    assert np.allclose(d1, d1[0], rtol=1e-4, atol=1e-5)

@@ -1,0 +1,159 @@
+"""Search correctness: every scheme vs. the brute-force oracle."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import (
+    P2HIndex,
+    append_ones,
+    build_tree,
+    dfs_search,
+    exact_search,
+    sweep_search,
+)
+from repro.core.balltree import normalize_query
+from repro.core.search import SearchStats
+
+
+def _mk(seed=0, n=4000, d=16, clusters=8, scale=5.0):
+    rng = np.random.default_rng(seed)
+    cents = rng.normal(size=(clusters, d)) * scale
+    data = (cents[rng.integers(0, clusters, n)] + rng.normal(size=(n, d))).astype(
+        np.float32
+    )
+    q = rng.normal(size=(12, d + 1)).astype(np.float32)
+    return data, normalize_query(q)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data, q = _mk()
+    tree = build_tree(data, n0=128)
+    X = append_ones(data)
+    return tree, X, q
+
+
+@pytest.mark.parametrize("k", [1, 10, 20, 40])
+def test_dfs_exact_all_k(setup, k):
+    tree, X, q = setup
+    ed, ei = exact_search(X, q, k=k)
+    bd, bi, _ = dfs_search(tree, q, k)
+    assert np.array_equal(np.asarray(ei), np.asarray(bi))
+    np.testing.assert_allclose(np.asarray(bd), np.asarray(ed), rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("k", [1, 10])
+@pytest.mark.parametrize("order", ["center", "bound"])
+def test_sweep_exact(setup, k, order):
+    tree, X, q = setup
+    ed, ei = exact_search(X, q, k=k)
+    bd, bi, _ = sweep_search(tree, q, k, order=order)
+    assert np.array_equal(np.asarray(ei), np.asarray(bi))
+    np.testing.assert_allclose(np.asarray(bd), np.asarray(ed), rtol=1e-2, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "flags",
+    [
+        dict(use_ball=False, use_cone=False),  # plain Ball-Tree (Alg. 3)
+        dict(use_ball=True, use_cone=False),  # BC-wo-C
+        dict(use_ball=False, use_cone=True),  # BC-wo-B
+        dict(use_collab=False),  # no Lemma 2
+        dict(branch="bound"),  # lower-bound preference
+    ],
+)
+def test_dfs_variants_all_exact(setup, flags):
+    """Fig. 7/8 ablations change cost, never results."""
+    tree, X, q = setup
+    ed, ei = exact_search(X, q, k=10)
+    bd, bi, _ = dfs_search(tree, q, 10, **flags)
+    assert np.array_equal(np.asarray(ei), np.asarray(bi))
+
+
+def test_collaborative_ip_halves_ip_ops(setup):
+    """Theorem 5: C_N -> (C_N + 1)/2 with Lemma 2."""
+    tree, X, q = setup
+    _, _, c_with = dfs_search(tree, q, 10, use_collab=True)
+    _, _, c_wo = dfs_search(tree, q, 10, use_collab=False)
+    s_with, s_wo = SearchStats(c_with), SearchStats(c_wo)
+    assert s_with["nodes_visited"] == s_wo["nodes_visited"]
+    # per query: C_N odd, reduced to (C_N+1)/2
+    assert s_with["ip_ops"] <= s_wo["ip_ops"] // 2 + q.shape[0]
+
+
+def test_point_pruning_reduces_verification(setup):
+    tree, X, q = setup
+    _, _, c_bc = dfs_search(tree, q, 1)
+    _, _, c_ball = dfs_search(tree, q, 1, use_ball=False, use_cone=False)
+    assert SearchStats(c_bc)["verified"] < SearchStats(c_ball)["verified"]
+
+
+def test_beam_recall_monotone(setup):
+    """The candidate-fraction knob: recall grows with frac (Fig. 5 analog)."""
+    tree, X, q = setup
+    _, ei = exact_search(X, q, k=10)
+    ei = np.asarray(ei)
+    recalls = []
+    for frac in (0.05, 0.3, 1.0):
+        _, bi, _ = sweep_search(tree, q, 10, frac=frac)
+        bi = np.asarray(bi)
+        recalls.append(
+            np.mean([len(set(a) & set(b)) / 10 for a, b in zip(ei, bi)])
+        )
+    assert recalls[-1] == 1.0
+    assert recalls[0] <= recalls[1] <= recalls[2] + 1e-9
+
+
+def test_max_candidates_budget(setup):
+    tree, X, q = setup
+    _, _, cnt = dfs_search(tree, q, 1, max_candidates=500)
+    st = SearchStats(cnt)
+    # budget is per query and approximately respected (checked at loop head)
+    assert st["verified"] <= (500 + tree.n0) * q.shape[0]
+
+
+def test_lambda_cap_exactness(setup):
+    """sweep with a valid cap (the true k-th dist) stays exact."""
+    tree, X, q = setup
+    ed, ei = exact_search(X, q, k=5)
+    cap = np.asarray(ed)[:, -1] * 1.0001
+    bd, bi, _ = sweep_search(tree, q, 5, lambda_cap=cap)
+    assert np.array_equal(np.asarray(ei), np.asarray(bi))
+
+
+@hypothesis.given(st.integers(0, 2**31 - 1), st.sampled_from([1, 5, 10]))
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_dfs_exact_property(seed, k):
+    """Property: DFS == oracle on random clustered instances."""
+    data, q = _mk(seed=seed, n=800, d=8, clusters=4)
+    tree = build_tree(data, n0=64, seed=seed)
+    X = append_ones(data)
+    ed, ei = exact_search(X, q, k=k)
+    bd, bi, _ = dfs_search(tree, q, k)
+    np.testing.assert_allclose(np.asarray(bd), np.asarray(ed), rtol=1e-3, atol=1e-5)
+
+
+def test_api_roundtrip(tmp_path, setup):
+    tree, X, q = setup
+    data, qraw = _mk()
+    idx = P2HIndex.build(data, n0=128)
+    d1, i1 = idx.query(qraw, k=5)
+    path = str(tmp_path / "idx.pkl")
+    idx.save(path)
+    idx2 = P2HIndex.load(path)
+    d2, i2 = idx2.query(qraw, k=5)
+    assert np.array_equal(i1, i2)
+    np.testing.assert_allclose(d1, d2, rtol=1e-6)
+
+
+def test_normalized_query_gives_true_p2h_distance():
+    """After normalization, |<x,q>| is the geometric P2H distance (Eq. 1)."""
+    rng = np.random.default_rng(7)
+    data = rng.normal(size=(500, 6)).astype(np.float32)
+    q = rng.normal(size=(1, 7)).astype(np.float32)
+    idx = P2HIndex.build(data, n0=64)
+    d, i = idx.query(q, k=1)
+    p = data[i[0, 0]]
+    geo = abs(q[0, -1] + p @ q[0, :-1]) / np.linalg.norm(q[0, :-1])
+    np.testing.assert_allclose(d[0, 0], geo, rtol=1e-3)

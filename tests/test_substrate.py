@@ -1,0 +1,152 @@
+"""Substrate unit tests: optimizer, schedule, grad utils, data pipeline,
+checkpoint manager, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLMDataset, make_p2h_dataset
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.grad import compress_int8, decompress_int8, ef_compress_grads
+from repro.optim.schedule import cosine_schedule
+from repro.parallel.sharding import logical_to_spec, pad_vocab
+
+
+# ----------------------------------------------------------------- optim
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray(2.0)}
+    opt = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(g, opt, params, lr=0.05, weight_decay=0.0)
+    assert float(loss(params)) < 1e-3
+    assert int(opt.count) == 200
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}  # norm = 10
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(gn), 10.0, rtol=1e-5)
+    total = np.sqrt(sum(float(jnp.vdot(x, x))
+                        for x in jax.tree.leaves(clipped)))
+    assert np.isclose(total, 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.asarray(s), peak_lr=1.0,
+                                 warmup_steps=10, total_steps=100))
+           for s in range(100)]
+    assert lrs[0] < lrs[9]              # warmup rises
+    assert max(lrs) <= 1.0 + 1e-6
+    assert lrs[-1] < 0.2                # decays toward final_frac
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_int8_compression_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.1, 100))
+    q, s = compress_int8(x)
+    err = np.abs(np.asarray(decompress_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6  # half-ulp of the quant grid
+
+
+def test_error_feedback_unbiased_over_time():
+    """Error feedback: the *sum* of dequantized grads converges to the sum
+    of true grads (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(128,)))}
+    errors = None
+    acc = np.zeros(128)
+    for t in range(50):
+        quant, errors = ef_compress_grads(g, errors)
+        q, s = quant["w"]
+        acc += np.asarray(decompress_int8(q, s))
+    true = 50 * np.asarray(g["w"])
+    # residual error is at most one quantization step, not O(t)
+    assert np.abs(acc - true).max() <= float(np.abs(true).max()) * 0.05 + 1.0
+
+
+# ----------------------------------------------------------------- data
+def test_data_deterministic_and_restart_stable():
+    ds = SyntheticLMDataset(vocab=128, seq=16, global_batch=8, seed=3)
+    a = ds.shard_batch(step=7, shard=1, num_shards=4)
+    b = ds.shard_batch(step=7, shard=1, num_shards=4)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # different steps/shards differ
+    c = ds.shard_batch(step=8, shard=1, num_shards=4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_data_elastic_resharding_preserves_global_batch():
+    ds = SyntheticLMDataset(vocab=128, seq=16, global_batch=8, seed=3)
+    from repro.data import global_batch_for_step
+    g4 = global_batch_for_step(ds, 5, 4)
+    g2 = global_batch_for_step(ds, 5, 2)
+    np.testing.assert_array_equal(g4["tokens"], g2["tokens"])
+
+
+@pytest.mark.parametrize("kind", ["normal", "clustered", "unit", "heavy"])
+def test_p2h_dataset_kinds(kind):
+    x, q = make_p2h_dataset(500, 20, kind=kind, n_queries=10, seed=1)
+    assert x.shape == (500, 20) and q.shape == (10, 21)
+    assert np.isfinite(x).all() and np.isfinite(q).all()
+    if kind == "unit":
+        np.testing.assert_allclose(np.linalg.norm(x, axis=1), 1.0, rtol=1e-5)
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    for s in (10, 20, 30):
+        mgr.save(s, jax.tree.map(lambda x: x * s, tree))
+    mgr.wait()
+    assert mgr.all_steps() == [20, 30]  # gc keeps last 2
+    restored = mgr.restore(30, tree)
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.arange(10.0) * 30)
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.arange(16.0)}
+    mgr.save(1, tree, blocking=True)
+    # corrupt a leaf
+    leaf = os.path.join(str(tmp_path), "step_1", "leaf_0.npy")
+    arr = np.load(leaf)
+    arr[0] = 999.0
+    np.save(leaf, arr)
+    with pytest.raises(IOError):
+        mgr.restore(1, tree)
+
+
+def test_checkpoint_interrupted_save_invisible(tmp_path):
+    """A .tmp dir from a killed save is never listed as a checkpoint."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_5.tmp"))
+    assert mgr.all_steps() == []
+    mgr.save(1, {"a": jnp.zeros(3)}, blocking=True)
+    assert mgr.latest_step() == 1
+
+
+# --------------------------------------------------------------- sharding
+def test_logical_to_spec_divisibility_fallback():
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # 15 heads % 1 == 0 -> sharded (trivially); use a fake 16-way via rules?
+    spec = logical_to_spec(("embed", "heads"), (960, 15), mesh)
+    assert spec == jax.sharding.PartitionSpec(None, "model")
+
+
+def test_pad_vocab():
+    assert pad_vocab(49155, 16) % (128 * 16) == 0
+    assert pad_vocab(49155, 16) >= 49155

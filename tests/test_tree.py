@@ -1,0 +1,107 @@
+"""Ball/BC-Tree construction invariants (paper Algorithms 1, 2, 4)."""
+import numpy as np
+import pytest
+
+from repro.core.balltree import append_ones, build_tree
+
+
+@pytest.fixture(scope="module")
+def tree_and_data():
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(3000, 12)).astype(np.float32)
+    tree = build_tree(data, n0=64, seed=0)
+    return tree, append_ones(data.astype(np.float64)).astype(np.float32)
+
+
+def test_partition_properties(tree_and_data):
+    """Eq. 4 & 5: children partition the parent; leaves partition S."""
+    tree, X = tree_and_data
+    counts = np.asarray(tree.counts)
+    left, right = np.asarray(tree.left), np.asarray(tree.right)
+    internal = left >= 0
+    assert (counts[internal] == counts[left[internal]] + counts[right[internal]]).all()
+    ids = np.asarray(tree.point_ids)
+    valid = ids[ids >= 0]
+    assert len(valid) == tree.n
+    assert len(np.unique(valid)) == tree.n  # disjoint cover
+
+
+def test_leaf_sizes_and_padding(tree_and_data):
+    tree, _ = tree_and_data
+    assert (np.asarray(tree.counts)[np.asarray(tree.node_leaf) >= 0] <= tree.n0).all()
+    ids = np.asarray(tree.point_ids).reshape(tree.num_leaves, tree.n0)
+    # valid entries are a prefix of each leaf tile
+    for row in ids:
+        nv = (row >= 0).sum()
+        assert (row[:nv] >= 0).all() and (row[nv:] == -1).all()
+
+
+def test_centers_radii_enclose(tree_and_data):
+    """Eq. 6 & 7: every point of a node is inside its ball."""
+    tree, X = tree_and_data
+    ids = np.asarray(tree.point_ids).reshape(tree.num_leaves, tree.n0)
+    lc = np.asarray(tree.leaf_centers)
+    lr = np.asarray(tree.leaf_radii)
+    for j in range(tree.num_leaves):
+        sel = ids[j][ids[j] >= 0]
+        dist = np.linalg.norm(X[sel] - lc[j], axis=1)
+        assert (dist <= lr[j] * (1 + 1e-4) + 1e-4).all()
+    # root ball encloses everything
+    c0 = np.asarray(tree.centers)[0]
+    r0 = float(np.asarray(tree.radii)[0])
+    assert (np.linalg.norm(X - c0, axis=1) <= r0 * (1 + 1e-4) + 1e-4).all()
+
+
+def test_lemma1_centroid_linearity(tree_and_data):
+    """Lemma 1: |N| N.c == |lc| lc.c + |rc| rc.c."""
+    tree, _ = tree_and_data
+    c = np.asarray(tree.centers, dtype=np.float64)
+    counts = np.asarray(tree.counts, dtype=np.float64)
+    left, right = np.asarray(tree.left), np.asarray(tree.right)
+    internal = np.where(left >= 0)[0]
+    lhs = c[internal] * counts[internal, None]
+    rhs = (
+        c[left[internal]] * counts[left[internal], None]
+        + c[right[internal]] * counts[right[internal], None]
+    )
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+def test_rx_descending_and_cone_tables(tree_and_data):
+    """Alg. 4: leaves sorted by descending r_x; cone tables consistent."""
+    tree, X = tree_and_data
+    rx = np.asarray(tree.rx).reshape(tree.num_leaves, tree.n0)
+    ids = np.asarray(tree.point_ids).reshape(tree.num_leaves, tree.n0)
+    xcos = np.asarray(tree.xcos).reshape(tree.num_leaves, tree.n0)
+    xsin = np.asarray(tree.xsin).reshape(tree.num_leaves, tree.n0)
+    lc = np.asarray(tree.leaf_centers)
+    for j in range(tree.num_leaves):
+        nv = (ids[j] >= 0).sum()
+        assert (np.diff(rx[j][:nv]) <= 1e-6).all()  # descending
+        sel = ids[j][:nv]
+        xn2 = (X[sel] ** 2).sum(axis=1)
+        # ||x||^2 == (||x|| cos phi)^2 + (||x|| sin phi)^2
+        np.testing.assert_allclose(
+            xcos[j][:nv] ** 2 + xsin[j][:nv] ** 2, xn2, rtol=1e-3, atol=1e-3
+        )
+        cn = np.linalg.norm(lc[j])
+        np.testing.assert_allclose(
+            xcos[j][:nv] * cn, X[sel] @ lc[j], rtol=1e-3, atol=1e-3
+        )
+
+
+def test_duplicate_points_degenerate_split():
+    data = np.ones((500, 8), dtype=np.float32)
+    tree = build_tree(data, n0=32)
+    assert tree.n == 500
+    ids = np.asarray(tree.point_ids)
+    assert (np.sort(ids[ids >= 0]) == np.arange(500)).all()
+
+
+def test_index_bytes_accounting():
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(2000, 16)).astype(np.float32)
+    tree = build_tree(data, n0=128)
+    ball, bc = tree.index_bytes(bc=False), tree.index_bytes(bc=True)
+    assert bc > ball  # BC adds the 3 n-sized tables (Thm 6)
+    assert bc - ball == tree.rx.nbytes + tree.xcos.nbytes + tree.xsin.nbytes
