@@ -1,0 +1,132 @@
+"""Serving-engine benchmark: micro-batched auto-dispatch vs naive
+per-request dispatch, and warm vs cold lambda cache.
+
+Measures, on a hot-repeat traffic trace:
+
+  * queries/sec and per-micro-batch p50/p99 latency for (a) naive
+    per-request dispatch (one backend call per query, B=1) and (b) the
+    engine's fixed-shape micro-batching;
+  * tile-skip / verified counters for the engine with a cold lambda cache
+    vs a warm one -- the warm cache must prune strictly more tiles (its
+    caps only ever tighten the running threshold).
+
+The workload (many loose clusters, k well above the leaf occupancy of any
+single tile) is chosen so the sweep's running top-k converges over
+several tiles; that is the window in which an a-priori cap beats the
+self-tightening threshold.  Run:
+
+    PYTHONPATH=src python benchmarks/bench_serve.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def make_workload(n=30000, d=32, n_clusters=64, scale=2.5, n_queries=32,
+                  n_hot=4, seed=7):
+    """Clustered base data + a trace that repeats ``n_hot`` hot queries."""
+    rng = np.random.default_rng(seed)
+    cents = rng.normal(size=(n_clusters, d)) * scale
+    data = (cents[rng.integers(0, n_clusters, n)]
+            + rng.normal(size=(n, d))).astype(np.float32)
+    hot = rng.normal(size=(n_hot, d + 1)).astype(np.float32)
+    trace = np.stack([hot[i % n_hot] for i in range(n_queries)])
+    return data, trace
+
+
+def pct(xs, p):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
+
+
+def bench_naive(idx, trace, k):
+    """One backend call per request (B=1), paper-style dispatch."""
+    idx.query(trace[:1], k=k)  # compile
+    lat = []
+    t0 = time.perf_counter()
+    for q in trace:
+        t1 = time.perf_counter()
+        idx.query(q[None], k=k, method="dfs")
+        lat.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    return {"qps": len(trace) / wall, "p50_ms": pct(lat, 50) * 1e3,
+            "p99_ms": pct(lat, 99) * 1e3}
+
+
+def bench_engine(idx, trace, k, *, use_cache, slot_size=8, passes=2):
+    """Micro-batched engine; ``passes`` >= 2 exercises the warm cache."""
+    from repro.serve import DispatchPolicy, P2HEngine
+
+    policy = DispatchPolicy(prefer_pallas=False)  # jnp sweep on CPU
+    engine = P2HEngine(idx, slot_size=slot_size, policy=policy,
+                       use_cache=use_cache)
+    engine.query(trace[:slot_size], k=k)  # compile
+    per_pass = []
+    for _ in range(passes):
+        engine.reset_stats()
+        t0 = time.perf_counter()
+        engine.query(trace, k=k)
+        wall = time.perf_counter() - t0
+        st = engine.stats()
+        sweep = st["counters"].get("sweep", {})
+        per_pass.append({
+            "qps": len(trace) / wall,
+            "p50_ms": st["latency_p50_ms"],
+            "p99_ms": st["latency_p99_ms"],
+            "routes": st["routes"],
+            "tiles_skipped": sweep.get("tiles_skipped", 0),
+            "verified": sweep.get("verified", 0),
+        })
+    return per_pass
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=30000)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--k", type=int, default=60)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--n0", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+
+    from repro.core import P2HIndex
+
+    data, trace = make_workload(n=args.n, d=args.d, n_queries=args.queries,
+                                seed=args.seed)
+    idx = P2HIndex.build(data, n0=args.n0)
+    print(f"index: {idx.report.num_leaves} leaves, "
+          f"{idx.report.index_bytes / 1e6:.2f} MB, "
+          f"built in {idx.report.build_seconds:.2f}s")
+
+    naive = bench_naive(idx, trace, args.k)
+    print(f"naive per-request dfs : {naive['qps']:7.1f} q/s   "
+          f"p50 {naive['p50_ms']:.1f} ms  p99 {naive['p99_ms']:.1f} ms")
+
+    cold = bench_engine(idx, trace, args.k, use_cache=False)[-1]
+    print(f"engine (cold, no cache): {cold['qps']:7.1f} q/s   "
+          f"p50 {cold['p50_ms']:.1f} ms  p99 {cold['p99_ms']:.1f} ms  "
+          f"routes {cold['routes']}  tiles_skipped {cold['tiles_skipped']}  "
+          f"verified {cold['verified']}")
+
+    passes = bench_engine(idx, trace, args.k, use_cache=True, passes=2)
+    warm = passes[-1]
+    print(f"engine (warm cache)   : {warm['qps']:7.1f} q/s   "
+          f"p50 {warm['p50_ms']:.1f} ms  p99 {warm['p99_ms']:.1f} ms  "
+          f"routes {warm['routes']}  tiles_skipped {warm['tiles_skipped']}  "
+          f"verified {warm['verified']}")
+
+    gain = warm["tiles_skipped"] - cold["tiles_skipped"]
+    print(f"warm-cache tile-skip gain: +{gain} tiles "
+          f"({cold['tiles_skipped']} -> {warm['tiles_skipped']}), "
+          f"verified -{cold['verified'] - warm['verified']}")
+    assert warm["tiles_skipped"] > cold["tiles_skipped"], \
+        "warm lambda cache must prune strictly more tiles than cold"
+    return {"naive": naive, "cold": cold, "warm": warm}
+
+
+if __name__ == "__main__":
+    main()

@@ -77,6 +77,7 @@ class P2HIndex:
         branch: str = "center",
         normalize: bool = True,
         return_stats: bool = False,
+        engine: Any = None,
         **kw: Any,
     ):
         """Top-k P2HNNS. ``queries`` is (B, d) (or (d,)).
@@ -84,7 +85,31 @@ class P2HIndex:
         With ``normalize=True`` the hyperplane coefficient vectors are
         rescaled so the normal has unit norm (paper Section II) -- distances
         are then true point-to-hyperplane distances.
+
+        ``engine``: a :class:`repro.serve.P2HEngine` to serve the call
+        through (micro-batching, backend auto-dispatch, lambda warm
+        start).  The engine's policy picks the backend; ``method`` is
+        ignored (use ``engine.query(..., method=...)`` to force a route).
+        ``return_stats`` keeps the direct path's per-call counter shape
+        (summed over whatever routes the call was dispatched to).
         """
+        recall_target = kw.pop("recall_target", 1.0)
+        if engine is not None:
+            # serve anything already pending in the engine's streaming
+            # queue first, so the counter delta below is this call's only
+            engine.flush()
+            before = engine.total_counters()
+            bd, bi = engine.query(
+                queries, k, normalize=normalize,
+                recall_target=recall_target)
+            if return_stats:
+                delta = engine.total_counters() - before
+                return bd, bi, search.SearchStats(delta)
+            return bd, bi
+        if recall_target < 1.0:
+            raise ValueError(
+                "recall_target needs a serving engine (engine=...) or an "
+                "explicit budgeted route: method='beam', frac=...")
         q = np.atleast_2d(np.asarray(queries))
         if normalize:
             q = normalize_query(q)
@@ -96,7 +121,8 @@ class P2HIndex:
             bd, bi, cnt = search.dfs_search(
                 self.tree, q, k, branch=branch,
                 use_collab=is_bc and kw.pop("use_collab", True),
-                max_candidates=kw.pop("max_candidates", None), **common)
+                max_candidates=kw.pop("max_candidates", None),
+                **common, **kw)
         elif method == "sweep":
             bd, bi, cnt = search.sweep_search(
                 self.tree, q, k, order=branch if branch == "bound" else "center",

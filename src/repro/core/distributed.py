@@ -44,6 +44,16 @@ from repro.core.balltree import FlatTree, build_tree
 
 __all__ = ["ShardedP2HIndex"]
 
+# shard_map moved to the jax top level (and check_rep was renamed to
+# check_vma) in newer releases; support both.  The check is disabled either
+# way: scan carries are per-shard varying by design.
+if hasattr(jax, "shard_map"):
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _xsm
+
+    _shard_map = functools.partial(_xsm, check_rep=False)
+
 _ARRAY_FIELDS = [
     f.name for f in dataclasses.fields(FlatTree) if not f.metadata.get("static", False)
 ]
@@ -174,18 +184,50 @@ class ShardedP2HIndex:
 
     # ------------------------------------------------------------------
     def query(
-        self, queries, k: int = 1, *, frac1: float = 0.02, normalize: bool = True, **kw
+        self, queries, k: int = 1, *, frac1: float = 0.02,
+        normalize: bool = True, lambda_cap=None, engine=None, **kw
     ):
-        """Exact distributed top-k with the two-round lambda exchange."""
+        """Exact distributed top-k with the two-round lambda exchange.
+
+        ``lambda_cap`` (optional, (B,)): externally-known upper bounds on
+        each query's *global* k-th distance (e.g. from a serving engine's
+        lambda cache).  They tighten lambda0 in **both** rounds -- hot
+        repeat traffic prunes distant shards' tiles before the round-1
+        prefix sweep even finishes.  Exact for valid caps (same argument
+        as round 2 itself).
+
+        ``engine``: route through a :class:`repro.serve.P2HEngine` whose
+        ``sharded`` index is this one -- micro-batching + lambda cache in
+        front of the two-round exchange.  The engine derives ``lambda_cap``
+        from its own cache (passing one here is an error) and uses its own
+        batching/round-1 configuration; the returned stats dict has the
+        same per-call counter shape as the direct path.
+        """
+        if engine is not None:
+            assert engine.sharded is self, "engine serves a different index"
+            if lambda_cap is not None:
+                raise ValueError(
+                    "lambda_cap is derived by the engine's cache; do not "
+                    "pass both engine= and lambda_cap=")
+            engine.flush()  # pending streaming work is not this call's
+            before = np.array(engine.route_counters("sharded"))
+            bd, bi = engine.query(queries, k, normalize=normalize)
+            delta = np.array(engine.route_counters("sharded")) - before
+            return bd, bi, search.SearchStats(delta)
         q = np.atleast_2d(queries)
         if normalize:
             from repro.core.balltree import normalize_query
 
             q = normalize_query(q)
         q = jnp.asarray(q, dtype=jnp.float32)
+        if lambda_cap is None:
+            lambda_cap = jnp.full((q.shape[0],), jnp.inf, jnp.float32)
+        else:
+            lambda_cap = jnp.asarray(lambda_cap, jnp.float32).reshape(-1)
         bd, bi, cnt = _sharded_query(
             self.stacked,
             q,
+            lambda_cap,
             mesh=self.mesh,
             axes=self.axes,
             k=k,
@@ -200,18 +242,22 @@ class ShardedP2HIndex:
 @functools.partial(
     jax.jit, static_argnames=("mesh", "axes", "k", "frac1", "shard_n", "n")
 )
-def _sharded_query(stacked: FlatTree, queries, *, mesh, axes, k, frac1, shard_n, n):
+def _sharded_query(stacked: FlatTree, queries, lambda_cap, *, mesh, axes, k,
+                   frac1, shard_n, n):
     statics = {f: getattr(stacked, f) for f in _STATIC_FIELDS}
 
-    def local(tree_arrays, q):
+    def local(tree_arrays, q, cap):
         tree = FlatTree(**{f: a[0] for f, a in tree_arrays.items()}, **statics)
         sidx = jax.lax.axis_index(axes[0])
         if len(axes) > 1:
             for a in axes[1:]:
                 sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
-        # round 1: cheap local prefix sweep -> global lambda0
-        bd1, _, cnt1 = search.sweep_search(tree, q, k, frac=frac1)
-        lam0 = jax.lax.pmin(bd1[:, k - 1], axes)
+        # round 1: cheap local prefix sweep -> global lambda0 (tightened
+        # further by any externally-supplied valid cap, e.g. the serving
+        # engine's lambda cache)
+        bd1, _, cnt1 = search.sweep_search(tree, q, k, frac=frac1,
+                                           lambda_cap=cap)
+        lam0 = jnp.minimum(jax.lax.pmin(bd1[:, k - 1], axes), cap)
         # round 2: full exact sweep, pruned by lambda0
         bd, bi, cnt = search.sweep_search(tree, q, k, lambda_cap=lam0)
         gid = sidx * shard_n + bi
@@ -237,11 +283,10 @@ def _sharded_query(stacked: FlatTree, queries, *, mesh, axes, k, frac1, shard_n,
 
     arrays = {f: getattr(stacked, f) for f in _ARRAY_FIELDS}
     in_spec = jax.tree.map(lambda _: P(axes), arrays)
-    out = jax.shard_map(
-        lambda t, q: local(t, q),
+    out = _shard_map(
+        lambda t, q, cap: local(t, q, cap),
         mesh=mesh,
-        in_specs=(in_spec, P()),
+        in_specs=(in_spec, P(), P()),
         out_specs=(P(), P(), P()),
-        check_vma=False,  # scan carries are per-shard varying by design
-    )(arrays, queries)
+    )(arrays, queries, lambda_cap)
     return out

@@ -63,6 +63,7 @@ def SearchStats(counters) -> dict:
 def _dfs_one(
     tree: FlatTree,
     q,
+    cap,
     *,
     k: int,
     branch: str,
@@ -151,7 +152,7 @@ def _dfs_one(
         sp, sn, sip, bd, bi, cnt = st
         sp = sp - 1
         node, ip = sn[sp], sip[sp]
-        lam = bd[k - 1]
+        lam = jnp.minimum(bd[k - 1], cap)
         lb = bounds.node_ball_bound(ip, qn, tree.radii[node])
         pruned = lb >= lam
         is_leaf = tree.left[node] < 0
@@ -198,12 +199,20 @@ def dfs_search(
     use_ball: bool = True,
     use_cone: bool = True,
     max_candidates: int | None = None,
+    lambda_cap=None,
 ):
     """Exact top-k P2HNNS via paper-faithful branch-and-bound.
 
     ``use_ball=use_cone=False`` gives the plain Ball-Tree of Algorithm 3;
     the defaults give BC-Tree (Algorithm 5).  Returns
     ``(dists (B,k), ids (B,k), counters (8,))``.
+
+    ``lambda_cap`` (optional, (B,)): externally-known upper bound on each
+    query's true global k-th distance (the same hook ``sweep_search``
+    exposes, used by the serving engine's lambda cache and the distributed
+    exchange).  Exact for any valid cap: pruning with ``min(running-kth,
+    cap)`` only ever discards candidates whose lower bound exceeds an
+    upper bound on the global k-th distance.
     """
     fn = functools.partial(
         _dfs_one,
@@ -215,7 +224,11 @@ def dfs_search(
         use_cone=use_cone,
         max_candidates=max_candidates,
     )
-    bd, bi, cnt = jax.vmap(fn)(queries)
+    if lambda_cap is None:
+        caps = jnp.full((queries.shape[0],), jnp.inf, queries.dtype)
+    else:
+        caps = jnp.asarray(lambda_cap, queries.dtype).reshape(-1)
+    bd, bi, cnt = jax.vmap(fn)(queries, caps)
     return bd, bi, jnp.sum(cnt, axis=0)
 
 

@@ -88,12 +88,20 @@ def _run(tree: FlatTree, queries, lambda_cap, *, k, frac, bq, use_ball,
         tree, queries, frac=frac, bq=bq, lambda_cap=lambda_cap)
     fn = ref.p2h_sweep_ref if use_ref else functools.partial(
         p2h_scan.p2h_sweep, interpret=interpret)
-    bd, bi = fn(**ops, k=k, bq=bq, use_ball=use_ball, use_cone=use_cone)
+    bd, bi, skips = fn(**ops, k=k, bq=bq, use_ball=use_ball,
+                       use_cone=use_cone)
     order = jnp.argsort(bd, axis=1)  # kernel's top-k is unsorted
     bd = jnp.take_along_axis(bd, order, axis=1)[:B0]
     bi = jnp.take_along_axis(bi, order, axis=1)[:B0]
-    counters = jnp.zeros((8,), jnp.int32).at[3].set(queries.shape[0] *
-                                                    tree.num_leaves)
+    # counters follow repro.core.search conventions where derivable.  Tile
+    # skips/visits are *block-granular* here (one count per query block,
+    # matching the kernel's pl.when DMA elision), not per query.
+    n_visit = ops["visit"].shape[0] * ops["visit"].shape[1]
+    nskip = jnp.sum(skips).astype(jnp.int32)
+    counters = (jnp.zeros((8,), jnp.int32)
+                .at[3].set(queries.shape[0] * tree.num_leaves)
+                .at[2].set(jnp.int32(n_visit) - nskip)
+                .at[7].set(nskip))
     return bd, bi, counters
 
 

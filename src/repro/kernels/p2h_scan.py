@@ -70,6 +70,7 @@ def p2h_sweep_kernel(
     # outputs
     out_d_ref,  # (bq, k) f32
     out_i_ref,  # (bq, k) i32
+    out_s_ref,  # (1, 1)  i32 -- per-query-block skipped-tile count
     # scratch
     topd,       # VMEM (bq, k) f32 -- running top-k distances (unsorted)
     topi,       # VMEM (bq, k) i32
@@ -153,6 +154,7 @@ def p2h_sweep_kernel(
     def _write_out():
         out_d_ref[...] = topd[...]
         out_i_ref[...] = topi[...]
+        out_s_ref[0, 0] = nskip[0]
 
 
 def p2h_sweep(
@@ -175,7 +177,13 @@ def p2h_sweep(
     use_cone: bool = True,
     interpret: bool | None = None,
 ):
-    """pallas_call wrapper. Returns unsorted (dists (B,k), ids (B,k), skips)."""
+    """pallas_call wrapper.
+
+    Returns unsorted ``(dists (B,k), ids (B,k), skips (B//bq, 1))`` where
+    ``skips`` is the number of tiles whose DMA'd block was skipped
+    *block-granularly* (node-level ball bound >= lambda for every query in
+    the block -- the ``pl.when`` elision in the kernel).
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, dp = queries.shape
@@ -201,7 +209,7 @@ def p2h_sweep(
     kernel = functools.partial(
         p2h_sweep_kernel, k=k, use_ball=use_ball, use_cone=use_cone)
 
-    out_d, out_i = pl.pallas_call(
+    out_d, out_i, out_s = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -222,6 +230,7 @@ def p2h_sweep(
             out_specs=[
                 pl.BlockSpec((bq, k), qmap),
                 pl.BlockSpec((bq, k), qmap),
+                pl.BlockSpec((1, 1), lambda i, j, v: (i, 0)),
             ],
             scratch_shapes=[
                 pltpu.VMEM((bq, k), jnp.float32),
@@ -232,8 +241,9 @@ def p2h_sweep(
         out_shape=[
             jax.ShapeDtypeStruct((B, k), jnp.float32),
             jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((nqb, 1), jnp.int32),
         ],
         interpret=interpret,
     )(visit, queries, qnorm, cap, leaf_ip, leaf_lb, leaf_cnorm,
       pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles)
-    return out_d, out_i
+    return out_d, out_i, out_s

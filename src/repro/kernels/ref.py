@@ -23,8 +23,10 @@ def p2h_sweep_ref(
     queries, qnorm, cap, leaf_ip, leaf_lb, visit,
     *, k: int, bq: int = 8, use_ball: bool = True, use_cone: bool = True,
 ):
-    """Reference with identical semantics. Returns (dists, ids) unsorted-ish
-    (sorted ascending here, callers sort kernel output before comparing)."""
+    """Reference with identical semantics. Returns (dists, ids, skips);
+    dists/ids are sorted ascending here (callers sort kernel output before
+    comparing) and ``skips`` (nqb, 1) counts block-granular tile skips
+    exactly like the kernel's counter."""
     pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm = (
         jnp.asarray(a) for a in
         (pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm))
@@ -38,9 +40,10 @@ def p2h_sweep_ref(
         topi = jnp.full((bq, k), -1, jnp.int32)
 
         def step(carry, leaf):
-            td, ti = carry
+            td, ti, ns = carry
             lam = jnp.minimum(jnp.max(td, axis=1), capb[:, 0])
             active = lbb[:, leaf] < lam
+            ns = ns + jnp.where(jnp.any(active), 0, 1).astype(jnp.int32)
             ids = ids_tiles[leaf]
             keep = (ids >= 0)[None, :] & active[:, None]
             ip = ipb[:, leaf]
@@ -62,15 +65,16 @@ def p2h_sweep_ref(
             mi = jnp.concatenate(
                 [ti, jnp.broadcast_to(ids, (bq, ids.shape[0]))], axis=1)
             neg, arg = jax.lax.top_k(-md, k)
-            return (-neg, jnp.take_along_axis(mi, arg, axis=1)), None
+            return (-neg, jnp.take_along_axis(mi, arg, axis=1), ns), None
 
-        (td, ti), _ = jax.lax.scan(step, (topd, topi), order)
-        return td, ti
+        (td, ti, ns), _ = jax.lax.scan(step, (topd, topi, jnp.int32(0)),
+                                       order)
+        return td, ti, ns
 
     qb = queries.reshape(nqb, bq, -1)
     qn = qnorm.reshape(nqb, bq, 1)
     cp = cap.reshape(nqb, bq, 1)
     ipb = leaf_ip.reshape(nqb, bq, -1)
     lbb = leaf_lb.reshape(nqb, bq, -1)
-    td, ti = jax.vmap(one_block)(qb, qn, cp, ipb, lbb, visit)
-    return td.reshape(B, k), ti.reshape(B, k)
+    td, ti, ns = jax.vmap(one_block)(qb, qn, cp, ipb, lbb, visit)
+    return td.reshape(B, k), ti.reshape(B, k), ns.reshape(nqb, 1)

@@ -93,6 +93,18 @@ def collective_bytes(hlo_text: str) -> dict:
     return {"payload_bytes": out, "op_counts": count, "wire_bytes": wire}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a list with one properties-dict per computation;
+    newer jax returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _mem_dict(ma) -> dict:
     keys = ["generated_code_size_in_bytes", "argument_size_in_bytes",
             "output_size_in_bytes", "alias_size_in_bytes",
@@ -180,7 +192,9 @@ def _lower_cell(arch, shape_id, mesh, cfg, *, donate=True):
         blog[k], specs[k].shape, mesh, rules=cfg.rules, name=k))
         for k in specs}
 
-    with jax.set_mesh(mesh):
+    from repro.launch.mesh import mesh_context
+
+    with mesh_context(mesh):
         if kind == "train":
             from repro.optim.schedule import cosine_schedule
             step = make_train_step(
@@ -287,7 +301,7 @@ def run_cell(arch, shape_id, mesh_kind="single", *, meter=True,
         compiled = _lower_cell(arch, shape_id, mesh, cfg)
         rec["compile_s"] = round(time.time() - t0, 1)
         rec["memory"] = _mem_dict(compiled.memory_analysis())
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         rec["cost_raw"] = {k: float(ca.get(k, 0.0))
                            for k in ("flops", "bytes accessed")}
         rec["collectives_raw"] = collective_bytes(compiled.as_text())
@@ -309,7 +323,7 @@ def run_cell(arch, shape_id, mesh_kind="single", *, meter=True,
                 if vcfg is None:
                     continue
                 comp = _lower_cell(arch, shape_id, mesh, vcfg)
-                ca = comp.cost_analysis()
+                ca = cost_analysis_dict(comp)
                 res[name] = {
                     "flops": float(ca.get("flops", 0.0)),
                     "bytes": float(ca.get("bytes accessed", 0.0)),

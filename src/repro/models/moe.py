@@ -22,7 +22,16 @@ import jax.numpy as jnp
 from repro.models.layers import ParamInit, dense, _ACTS
 from repro.parallel import shard
 
-__all__ = ["moe_init", "moe_apply"]
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(seq_len: int, top_k: int, num_experts: int,
+                 capacity_factor: float) -> int:
+    """Per-row expert capacity (static): cf * S * k / E, 8-aligned, >= 8."""
+    A = seq_len * top_k
+    C = int(capacity_factor * seq_len * top_k / num_experts)
+    C = max(8, -(-C // 8) * 8)
+    return min(C, A)
 
 
 def _gdot(eq, a, b):
@@ -62,7 +71,9 @@ def moe_init(pi: ParamInit, d_model: int, d_ff: int, num_experts: int,
 
 
 def moe_apply(p, x, *, top_k: int, act: str = "silu",
-              capacity_factor: float = 1.25, compute_dtype=jnp.bfloat16):
+              capacity_factor: float = 1.25, compute_dtype=jnp.bfloat16,
+              expert_counts=None, capacity=None, capacity_ref=None,
+              return_counts: bool = False):
     """x: (B, S, E) -> (out (B,S,E), aux dict(load_loss, z_loss)).
 
     Dispatch is **per sequence** (capacity = cf * S * k / E per row): the
@@ -75,6 +86,21 @@ def moe_apply(p, x, *, top_k: int, act: str = "silu",
     Pipeline per row: stable-sort (token,choice) assignments by expert ->
     rank within expert = slot -> drop beyond C -> scatter into (E, C, d)
     -> grouped expert einsum -> gather back with gate weights.
+
+    Capacity carry (prefill/decode consistency): the first-come drop rule
+    makes a token's treatment depend only on *earlier* tokens' routing, so
+    a chunked forward reproduces a full-length forward exactly -- provided
+    (a) later chunks know how many assignments (pre-drop) each expert
+    already received, and (b) every chunk applies the *reference* capacity
+    rather than one derived from its own (shorter) length.
+    ``expert_counts`` (B, E) i32 supplies the prefix counts (first-come
+    positions continue from them); ``capacity`` (static int) overrides
+    both the drop threshold and the dispatch-buffer size with the
+    reference forward's capacity; ``capacity_ref`` (i32 scalar/array,
+    traced) overrides only the drop threshold -- for single-token decode,
+    where the per-chunk buffer (``top_k`` distinct experts) can never
+    clamp a kept assignment.  ``return_counts=True`` additionally returns
+    the updated pre-drop counts for the next chunk.
     """
     B, S, D = x.shape
     E = p["router"].shape[1]
@@ -96,9 +122,10 @@ def moe_apply(p, x, *, top_k: int, act: str = "silu",
 
     # ---- per-row dispatch indices ----
     A = S * top_k  # assignments per row
-    C = int(capacity_factor * S * top_k / E)
-    C = max(8, -(-C // 8) * 8)
-    C = min(C, A)
+    if capacity is None:
+        C = moe_capacity(S, top_k, E, capacity_factor)
+    else:  # reference-forward capacity; buffer never needs more than A
+        C = min(int(capacity), A)
     flat_e = gate_e.reshape(B, A)                      # (B, A)
     flat_t = jnp.broadcast_to(
         (jnp.arange(A, dtype=jnp.int32) // top_k)[None], (B, A))
@@ -111,8 +138,20 @@ def moe_apply(p, x, *, top_k: int, act: str = "silu",
         lambda row: jnp.searchsorted(row, jnp.arange(E, dtype=row.dtype)))(se)
     pos = (jnp.arange(A, dtype=jnp.int32)[None]
            - jnp.take_along_axis(seg_start, se, axis=1).astype(jnp.int32))
-    keep = pos < C
     e_idx = se.astype(jnp.int32)
+    if expert_counts is not None:
+        # continue first-come positions from the carried prefix counts
+        prior = jnp.take_along_axis(expert_counts, e_idx, axis=1)
+        eff_pos = pos + prior
+    else:
+        eff_pos = pos
+    if capacity_ref is not None:
+        cap = capacity_ref
+    elif capacity is not None:
+        cap = int(capacity)  # un-clamped: eff_pos < cap implies pos < C
+    else:
+        cap = C
+    keep = (eff_pos < cap) & (pos < C)
     p_idx = jnp.minimum(pos, C - 1)
 
     # ---- scatter -> (B, E, C, D) ----
@@ -142,4 +181,12 @@ def moe_apply(p, x, *, top_k: int, act: str = "silu",
         sh = a(dense(x, sp["wg"], compute_dtype)) * dense(x, sp["wi"],
                                                           compute_dtype)
         out = out + dense(sh.astype(compute_dtype), sp["wo"], compute_dtype)
-    return out.astype(x.dtype), {"load_loss": load_loss, "z_loss": z_loss}
+    aux = {"load_loss": load_loss, "z_loss": z_loss}
+    if return_counts:
+        # pre-drop per-expert histogram via scatter-add (a one_hot would
+        # materialize a transient (B, A, E) tensor for nothing)
+        hist = jnp.zeros((B, E), jnp.int32).at[
+            jnp.arange(B, dtype=jnp.int32)[:, None], flat_e].add(1)
+        new_counts = hist if expert_counts is None else expert_counts + hist
+        return out.astype(x.dtype), aux, new_counts
+    return out.astype(x.dtype), aux

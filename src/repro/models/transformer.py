@@ -235,6 +235,13 @@ class StackedLM:
         cd = c.compute_dtype
         aux = jnp.zeros((2,), jnp.float32)
         h = self._norm(p["ln1"], x)
+        # MoE capacity carry rides in the slot cache next to the mixer's
+        # entries; strip it before handing the cache to the mixer decoders.
+        moe_state = None
+        if cache is not None and isinstance(cache, dict) and "moe_cnt" in cache:
+            moe_state = (cache["moe_cnt"], cache["moe_cap"])
+            cache = {k2: v for k2, v in cache.items()
+                     if k2 not in ("moe_cnt", "moe_cap")} or None
         new_cache = cache
         if spec.mixer == "attn":
             nvh = c.n_heads if c.hq_padded != c.n_heads else None
@@ -306,9 +313,32 @@ class StackedLM:
         if spec.mlp:
             h2 = self._norm(p["ln2"], x)
             if spec.moe:
-                o2, mo = MOE.moe_apply(p["ffn"], h2, top_k=c.top_k, act=c.act,
-                                       capacity_factor=c.capacity_factor,
-                                       compute_dtype=cd)
+                moe_kw = dict(top_k=c.top_k, act=c.act,
+                              capacity_factor=c.capacity_factor,
+                              compute_dtype=cd)
+                if mode == "prefill":
+                    # carry pre-drop expert counts + the serving horizon's
+                    # capacity so the whole prefill+decode pipeline applies
+                    # one first-come capacity rule -- the full-length
+                    # forward's, not one derived from the (shorter) prompt
+                    cap = MOE.moe_capacity(self._prefill_max_len, c.top_k,
+                                           c.num_experts, c.capacity_factor)
+                    o2, mo, cnts = MOE.moe_apply(p["ffn"], h2, capacity=cap,
+                                                 return_counts=True, **moe_kw)
+                    new_cache = dict(new_cache or {})
+                    new_cache["moe_cnt"] = cnts
+                    new_cache["moe_cap"] = jnp.full((), cap, jnp.int32)
+                elif mode == "decode" and moe_state is not None:
+                    cnts, cap = moe_state
+                    o2, mo, cnts = MOE.moe_apply(p["ffn"], h2,
+                                                 expert_counts=cnts,
+                                                 capacity_ref=cap,
+                                                 return_counts=True, **moe_kw)
+                    new_cache = dict(new_cache or {})
+                    new_cache["moe_cnt"] = cnts
+                    new_cache["moe_cap"] = cap
+                else:
+                    o2, mo = MOE.moe_apply(p["ffn"], h2, **moe_kw)
                 aux = aux + jnp.stack([mo["load_loss"], mo["z_loss"]])
             else:
                 o2 = L.mlp_apply(p["ffn"], h2, act=c.act, compute_dtype=cd)
@@ -327,7 +357,7 @@ class StackedLM:
         S = h.shape[1]
         if S < K - 1:
             xBC = jnp.pad(xBC, ((0, 0), (K - 1 - S, 0), (0, 0)))
-        return {"ssm": s, "conv": xBC.astype(jnp.bfloat16)}
+        return {"ssm": s, "conv": xBC.astype(c.cache_dtype)}
 
     def _rec_prefill_cache(self, p, h, hstate):
         c = self.cfg
@@ -336,7 +366,7 @@ class StackedLM:
         S = h.shape[1]
         if S < K - 1:
             x = jnp.pad(x, ((0, 0), (K - 1 - S, 0), (0, 0)))
-        return {"h": hstate, "conv": x.astype(jnp.bfloat16)}
+        return {"h": hstate, "conv": x.astype(c.cache_dtype)}
 
     def _ring_decode(self, spec, p, h, sin, cos, cache, pos_dec):
         """Sliding-window decode against a ring cache keyed by pos % W."""
@@ -495,6 +525,16 @@ class StackedLM:
         """Zero decode cache for (batch, max_len)."""
         c = self.cfg
 
+        def moe_entries(spec: LayerSpec, lead):
+            if not (spec.mlp and spec.moe):
+                return {}
+            cap = MOE.moe_capacity(max_len, c.top_k, c.num_experts,
+                                   c.capacity_factor)
+            return {
+                "moe_cnt": jnp.zeros(lead + (batch, c.num_experts), jnp.int32),
+                "moe_cap": jnp.full(lead + (), cap, jnp.int32),
+            }
+
         def slot_cache(spec: LayerSpec, lead=()):
             if spec.mixer == "attn":
                 W = spec.window
@@ -503,23 +543,27 @@ class StackedLM:
                         "k": jnp.zeros(lead + (batch, W, c.n_kv, c.hd), c.cache_dtype),
                         "v": jnp.zeros(lead + (batch, W, c.n_kv, c.hd), c.cache_dtype),
                         "pos": jnp.full(lead + (batch, W), -1, jnp.int32),
+                        **moe_entries(spec, lead),
                     }
                 return {
                     "k": jnp.zeros(lead + (batch, max_len, c.n_kv, c.hd), c.cache_dtype),
                     "v": jnp.zeros(lead + (batch, max_len, c.n_kv, c.hd), c.cache_dtype),
+                    **moe_entries(spec, lead),
                 }
             if spec.mixer == "ssm":
                 d_inner = 2 * c.d_model
                 H = d_inner // c.ssm_headdim
                 return {
                     "ssm": jnp.zeros(lead + (batch, H, c.ssm_state, c.ssm_headdim), jnp.float32),
-                    "conv": jnp.zeros(lead + (batch, 3, d_inner + 2 * c.ssm_state), jnp.bfloat16),
+                    "conv": jnp.zeros(lead + (batch, 3, d_inner + 2 * c.ssm_state), c.cache_dtype),
+                    **moe_entries(spec, lead),
                 }
             if spec.mixer == "rec":
                 R_ = c.rnn_width or c.d_model
                 return {
                     "h": jnp.zeros(lead + (batch, R_), jnp.float32),
-                    "conv": jnp.zeros(lead + (batch, 3, R_), jnp.bfloat16),
+                    "conv": jnp.zeros(lead + (batch, 3, R_), c.cache_dtype),
+                    **moe_entries(spec, lead),
                 }
             raise ValueError(spec.mixer)
 
@@ -543,18 +587,20 @@ class StackedLM:
 
         def slot_logical(spec: LayerSpec, stacked: bool):
             lead = ("stack",) if stacked else ()
+            moe = ({"moe_cnt": lead + ("batch", None), "moe_cap": lead}
+                   if (spec.mlp and spec.moe) else {})
             if spec.mixer == "attn":
                 kv = lead + ("batch", "cache_seq", "kv_heads", None)
-                out = {"k": kv, "v": kv}
+                out = {"k": kv, "v": kv, **moe}
                 if spec.window is not None:
                     out["pos"] = lead + ("batch", None)
                 return out
             if spec.mixer == "ssm":
                 return {"ssm": lead + ("batch", "heads", None, None),
-                        "conv": lead + ("batch", None, "rnn")}
+                        "conv": lead + ("batch", None, "rnn"), **moe}
             if spec.mixer == "rec":
                 return {"h": lead + ("batch", "rnn"),
-                        "conv": lead + ("batch", None, "rnn")}
+                        "conv": lead + ("batch", None, "rnn"), **moe}
             raise ValueError(spec.mixer)
 
         cache: dict = {}

@@ -1,0 +1,56 @@
+"""P2HNNS query-serving subsystem: micro-batching, backend auto-dispatch,
+and a lambda warm-start cache over the Ball/BC-Tree backends.
+
+The repo's north star is serving heavy P2HNNS traffic; this package is
+the layer that turns the four query backends (``dfs``, ``sweep``,
+``beam``, ``pallas``) plus the sharded two-round index into one engine:
+
+``P2HEngine`` (engine.py)
+    The front-end.  Streaming (``submit``/``flush``/``result``) or
+    drop-in (``query``, also via ``P2HIndex.query(..., engine=...)``).
+
+Micro-batching (batcher.py)
+    Incoming queries are drained into **fixed-shape slot batches**
+    (static ``slot_size`` rows, padded by replicating a live slot), the
+    same slot-refill discipline as the LM serving driver in
+    ``repro.launch.serve`` -- so each jitted backend compiles once per
+    (slot_size, k) and never retraces under traffic.
+
+Dispatch policy (dispatch.py)
+    Backend choice is workload-dependent, so it is decided per
+    micro-batch:
+
+      * ``recall_target < 1``   -> ``beam`` (candidate-fraction knob,
+        fraction chosen from the recall table);
+      * tiny occupancy          -> ``dfs`` (paper-faithful branch-and-
+        bound; best single-query latency);
+      * batched exact           -> ``pallas`` (fused tile-skipping sweep
+        kernel; Mosaic on TPU, interpret elsewhere) or the jnp ``sweep``;
+      * sharded deployments     -> the two-round lambda-exchange index.
+
+Lambda cache (lambda_cache.py)
+    ``sweep_search``/``dfs_search``/the Pallas kernel accept
+    ``lambda_cap``: an upper bound on the true global k-th distance that
+    prunes tiles and points *from the first leaf*.  The distributed index
+    derives caps across shards (round-1 exchange); the cache derives them
+    across **time**, from previously-served queries with nearby normals
+    (sign-canonical SRP buckets).  Exactness: for a cached neighbor
+    ``(q', lambda')`` and root-ball point-norm bound ``R``,
+
+        kth(q) <= lambda' + R * min(||q - q'||, ||q + q'||),
+
+    and pruning with any cap > kth(q) discards only candidates whose
+    lower bound exceeds the true k-th distance -- never a top-k member.
+    Warm answers are therefore **bit-identical** to cold ones (asserted
+    by the parity suite in tests/test_serve.py); the cache only changes
+    how many tiles are scanned, which is exactly what
+    ``benchmarks/bench_serve.py`` measures (warm tile-skip counters
+    strictly dominate cold).
+"""
+from repro.serve.batcher import MicroBatcher, MicroBatch, Request
+from repro.serve.dispatch import DispatchPolicy, Route
+from repro.serve.engine import P2HEngine
+from repro.serve.lambda_cache import LambdaCache
+
+__all__ = ["P2HEngine", "DispatchPolicy", "Route", "LambdaCache",
+           "MicroBatcher", "MicroBatch", "Request"]

@@ -1,0 +1,92 @@
+"""Fixed-shape micro-batching for the P2H serving engine.
+
+Same discipline as the LM serving driver (``repro.launch.serve``): the
+jitted programs only ever see one batch shape, so they never retrace.  A
+``MicroBatcher`` owns ``slot_size`` static slots; pending requests are
+drained into the slots, and partially-filled batches are padded by
+replicating the first live slot (replica results are dropped on
+scatter-back -- the same trick ``repro.kernels.ops`` uses for query-block
+padding).  Each drained batch reports its *occupancy* (live slots) so the
+dispatch policy can route small trailing batches to the latency backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+__all__ = ["Request", "MicroBatch", "MicroBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    ticket: int
+    query: np.ndarray          # (d,) normalized hyperplane coefficients
+    k: int
+    recall_target: float = 1.0
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    queries: np.ndarray        # (slot_size, d) -- static shape, padded
+    tickets: list              # len == occupancy, ticket per live slot
+    occupancy: int             # live slots (<= slot_size)
+    k: int
+    recall_target: float
+
+
+class MicroBatcher:
+    """FIFO request queue drained into fixed-shape slot batches.
+
+    Requests with different ``(k, recall_target)`` never share a batch
+    (they would need different jitted programs anyway); within a group the
+    arrival order is preserved so results are deterministic.
+    """
+
+    def __init__(self, d: int, slot_size: int = 8):
+        assert slot_size >= 1
+        self.d = int(d)
+        self.slot_size = int(slot_size)
+        self._queue: deque[Request] = deque()
+        self._next_ticket = 0
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------------
+    def submit(self, query: np.ndarray, k: int,
+               recall_target: float = 1.0) -> int:
+        """Enqueue one request; returns its ticket."""
+        q = np.asarray(query, np.float32).reshape(-1)
+        assert q.shape == (self.d,), (q.shape, self.d)
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append(Request(t, q, int(k), float(recall_target)))
+        return t
+
+    # ------------------------------------------------------------------
+    def drain(self, *, min_fill: int = 1):
+        """Yield ``MicroBatch``es until fewer than ``min_fill`` requests
+        remain queued.  Slot refill keeps the static shape: every yielded
+        batch is exactly ``slot_size`` rows."""
+        while len(self._queue) >= min_fill and self._queue:
+            head = self._queue[0]
+            group_key = (head.k, head.recall_target)
+            batch: list[Request] = []
+            # take the longest FIFO prefix with the same (k, recall) so
+            # arrival order is preserved within and across batches
+            while (self._queue and len(batch) < self.slot_size
+                   and (self._queue[0].k,
+                        self._queue[0].recall_target) == group_key):
+                batch.append(self._queue.popleft())
+            occ = len(batch)
+            q = np.empty((self.slot_size, self.d), np.float32)
+            for i, r in enumerate(batch):
+                q[i] = r.query
+            if occ < self.slot_size:  # pad: replicate the first live slot
+                q[occ:] = q[0]
+            yield MicroBatch(queries=q, tickets=[r.ticket for r in batch],
+                             occupancy=occ, k=head.k,
+                             recall_target=head.recall_target)

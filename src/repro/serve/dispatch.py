@@ -1,0 +1,73 @@
+"""Backend auto-dispatch policy for the P2H serving engine.
+
+Backend choice is workload-dependent (see the quantitative NNS comparison,
+arXiv:2307.05235): the paper-faithful DFS wins single-query latency (tiny
+batches, deep pruning, no wasted tile work), the matmul-shaped sweep and
+the fused Pallas kernel win batched throughput (one (B, L) phase-1 matmul
+plus MXU-friendly tile scans), and the budgeted beam trades recall for
+time when the caller allows it.  ``DispatchPolicy`` encodes those
+crossovers as explicit, test-overridable thresholds; the engine resolves
+one :class:`Route` per micro-batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Route", "DispatchPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """A resolved dispatch decision: backend + backend kwargs."""
+
+    method: str  # "dfs" | "sweep" | "beam" | "pallas" | "sharded"
+    frac: float = 1.0
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPolicy:
+    """Threshold-based router; every field is a knob.
+
+    * ``recall_target < 1``          -> ``beam`` with ``frac`` from
+      ``frac_table`` (the paper's candidate-fraction time/recall knob).
+    * occupancy <= ``small_batch``   -> ``dfs`` (single-query latency).
+    * else                           -> ``pallas`` when preferred (TPU, or
+      interpret-mode parity runs), otherwise the jnp ``sweep``.
+
+    ``sharded`` is not chosen here: a sharded index is a deployment
+    decision, so the engine routes to it whenever it serves one.
+    """
+
+    small_batch: int = 2          # <= this many live queries -> dfs
+    # batched exact work -> pallas backend.  None = auto: the engine
+    # resolves it to True on TPU (Mosaic kernel) and False elsewhere
+    # (interpret mode is a parity tool, not a serving backend).
+    prefer_pallas: bool | None = None
+    frac_table: tuple = (         # (min recall target, candidate fraction)
+        (0.99, 0.5),
+        (0.95, 0.25),
+        (0.90, 0.10),
+        (0.00, 0.05),
+    )
+
+    def frac_for_recall(self, recall_target: float) -> float:
+        for floor, frac in self.frac_table:
+            if recall_target >= floor:
+                return frac
+        return self.frac_table[-1][1]
+
+    def route(self, occupancy: int, k: int, recall_target: float = 1.0,
+              *, sharded: bool = False) -> Route:
+        """Pick a backend for a micro-batch with ``occupancy`` live slots."""
+        if recall_target < 1.0:
+            return Route("beam", frac=self.frac_for_recall(recall_target),
+                         reason=f"recall_target={recall_target:g}")
+        if sharded:
+            return Route("sharded", reason="index is sharded")
+        if occupancy <= self.small_batch:
+            return Route("dfs", reason=f"occupancy={occupancy}"
+                                       f"<={self.small_batch}")
+        if self.prefer_pallas:
+            return Route("pallas", reason=f"occupancy={occupancy}: batched")
+        return Route("sweep", reason=f"occupancy={occupancy}: batched")

@@ -1,0 +1,228 @@
+"""P2HEngine: micro-batched, auto-dispatched, lambda-warm P2HNNS serving.
+
+Composes the three serve-layer pieces over a built :class:`P2HIndex`
+(and optionally a :class:`ShardedP2HIndex`):
+
+  * :class:`~repro.serve.batcher.MicroBatcher` -- fixed-shape slot batches
+    (jitted backends never retrace);
+  * :class:`~repro.serve.dispatch.DispatchPolicy` -- per-batch backend
+    choice by occupancy / k / recall target;
+  * :class:`~repro.serve.lambda_cache.LambdaCache` -- warm-start
+    ``lambda_cap`` from previously-served neighbor queries (exactness
+    argument in that module's docstring).
+
+The engine is the host-side control loop; every device-side program it
+calls is an existing jitted backend (``dfs_search``, ``sweep_search``,
+``sweep_search_pallas``, ``_sharded_query``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import search
+from repro.core.balltree import normalize_query
+from repro.serve.batcher import MicroBatcher
+from repro.serve.dispatch import DispatchPolicy, Route
+from repro.serve.lambda_cache import LambdaCache
+
+__all__ = ["P2HEngine"]
+
+
+class P2HEngine:
+    """Serving front-end for P2HNNS query traffic.
+
+    Two APIs:
+
+      * streaming -- ``submit()`` requests, ``flush()``, ``result(ticket)``;
+      * drop-in   -- ``query(queries, k)`` (same contract as
+        ``P2HIndex.query``; also reachable as
+        ``index.query(..., engine=engine)``).
+
+    ``use_cache=False`` disables the lambda warm start (cold dispatch);
+    with it enabled, answers are still bit-identical to cold (the cache
+    only ever supplies *valid* caps, see ``lambda_cache``).
+    """
+
+    def __init__(self, index, *, sharded=None, slot_size: int = 8,
+                 policy: DispatchPolicy | None = None, use_cache: bool = True,
+                 cache_bits: int = 14, seed: int = 0):
+        import dataclasses
+
+        import jax
+
+        self.index = index
+        self.sharded = sharded
+        tree = index.tree
+        self.policy = policy or DispatchPolicy()
+        if self.policy.prefer_pallas is None:
+            self.policy = dataclasses.replace(
+                self.policy,
+                prefer_pallas=jax.default_backend() == "tpu")
+        self.batcher = MicroBatcher(tree.d, slot_size)
+        # R >= max ||x||: every point lies in the root ball
+        self.max_norm = float(np.linalg.norm(np.asarray(tree.centers[0]))
+                              + float(tree.radii[0]))
+        self.cache = (LambdaCache(tree.d, self.max_norm, n_bits=cache_bits,
+                                  seed=seed) if use_cache else None)
+        self._results: dict[int, tuple] = {}
+        self._route_counts: dict[str, int] = {}
+        self._counters: dict[str, np.ndarray] = {}
+        self._latencies_s: list[float] = []
+        self._batches = 0
+        self._queries_served = 0
+
+    # ------------------------------------------------------------------
+    # streaming API
+    # ------------------------------------------------------------------
+    def submit(self, query, k: int = 1, *, recall_target: float = 1.0,
+               normalize: bool = True) -> int:
+        """Enqueue one hyperplane query; returns a ticket for result()."""
+        q = np.asarray(query, np.float32).reshape(1, -1)
+        if normalize:
+            q = normalize_query(q)
+        return self.batcher.submit(q[0], k, recall_target)
+
+    def flush(self) -> int:
+        """Serve every pending request; returns the number of batches."""
+        n = 0
+        for mb in self.batcher.drain():
+            self._execute(mb)
+            n += 1
+        return n
+
+    def result(self, ticket: int):
+        """(dists (k,), ids (k,)) for a served ticket (pops it)."""
+        return self._results.pop(ticket)
+
+    # ------------------------------------------------------------------
+    # drop-in API
+    # ------------------------------------------------------------------
+    def query(self, queries, k: int = 1, *, recall_target: float = 1.0,
+              method: str | None = None, normalize: bool = True,
+              return_stats: bool = False):
+        """Batch query with the same contract as ``P2HIndex.query``.
+
+        ``method`` forces a dispatch route (None = auto).
+        """
+        q = np.atleast_2d(np.asarray(queries))
+        if normalize:
+            q = normalize_query(q)
+        q = q.astype(np.float32)
+        tickets = [self.batcher.submit(row, k, recall_target) for row in q]
+        for mb in self.batcher.drain():
+            self._execute(mb, method=method)
+        ds, is_ = zip(*(self._results.pop(t) for t in tickets))
+        bd, bi = np.stack(ds), np.stack(is_)
+        if return_stats:
+            return bd, bi, self.stats()
+        return bd, bi
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def _execute(self, mb, *, method: str | None = None):
+        route = (Route(method, frac=self.policy.frac_for_recall(
+                     mb.recall_target) if method == "beam" else 1.0,
+                     reason="forced")
+                 if method is not None else
+                 self.policy.route(mb.occupancy, mb.k, mb.recall_target,
+                                   sharded=self.sharded is not None))
+        # warm start: valid caps only for exact routes (a cap bounds the
+        # *exact* k-th distance; applying it to a budgeted beam could prune
+        # candidates the direct beam would have returned)
+        caps = None
+        if self.cache is not None and route.method != "beam":
+            # look up live slots only: pad rows replicate slot 0, and
+            # counting them would inflate hit/miss stats with dead work
+            c = np.full((len(mb.queries),), np.inf, np.float32)
+            c[:mb.occupancy] = self.cache.lookup(
+                mb.queries[:mb.occupancy], mb.k)
+            if np.isfinite(c).any():
+                caps = c
+        t0 = time.perf_counter()
+        bd, bi, cnt = self._run_backend(route, mb.queries, mb.k, caps)
+        bd, bi = np.asarray(bd), np.asarray(bi)
+        dt = time.perf_counter() - t0
+
+        for slot, ticket in enumerate(mb.tickets):
+            self._results[ticket] = (bd[slot], bi[slot])
+        if self.cache is not None:
+            live = slice(0, mb.occupancy)
+            self.cache.update(mb.queries[live], mb.k, bd[live, mb.k - 1])
+        # stats
+        self._route_counts[route.method] = (
+            self._route_counts.get(route.method, 0) + 1)
+        c8 = np.asarray(cnt)
+        self._counters[route.method] = (
+            self._counters.get(route.method, np.zeros(8, np.int64)) + c8)
+        self._latencies_s.append(dt)
+        self._batches += 1
+        self._queries_served += mb.occupancy
+
+    def _run_backend(self, route: Route, q: np.ndarray, k: int, caps):
+        tree = self.index.tree
+        is_bc = self.index.variant == "bc"
+        common = dict(use_ball=is_bc, use_cone=is_bc)
+        if route.method == "sharded":
+            assert self.sharded is not None, "no sharded index attached"
+            bd, bi, st = self.sharded.query(q, k, normalize=False,
+                                            lambda_cap=caps)
+            return bd, bi, np.array([st[n] for n in
+                                     search._COUNTER_NAMES], np.int64)
+        if route.method == "dfs":
+            return search.dfs_search(tree, q, k, use_collab=is_bc,
+                                     lambda_cap=caps, **common)
+        if route.method == "sweep":
+            return search.sweep_search(tree, q, k, frac=1.0,
+                                       lambda_cap=caps, **common)
+        if route.method == "beam":
+            return search.sweep_search(tree, q, k, frac=route.frac, **common)
+        if route.method == "pallas":
+            from repro.kernels import ops
+
+            return ops.sweep_search_pallas(tree, q, k, frac=1.0,
+                                           lambda_cap=caps, **common)
+        raise ValueError(f"unknown route {route.method!r}")
+
+    # ------------------------------------------------------------------
+    def route_counters(self, method: str) -> np.ndarray:
+        """Cumulative (8,) search counters for one dispatch route."""
+        return np.array(self._counters.get(method, np.zeros(8, np.int64)))
+
+    def total_counters(self) -> np.ndarray:
+        """Cumulative (8,) search counters summed over all routes."""
+        out = np.zeros(8, np.int64)
+        for c in self._counters.values():
+            out += c
+        return out
+
+    def stats(self) -> dict:
+        lat = sorted(self._latencies_s)
+
+        def pct(p):
+            if not lat:
+                return float("nan")
+            return lat[min(len(lat) - 1, int(round(p / 100 * (len(lat) - 1))))]
+
+        out: dict[str, Any] = {
+            "batches": self._batches,
+            "queries": self._queries_served,
+            "routes": dict(self._route_counts),
+            "latency_p50_ms": pct(50) * 1e3,
+            "latency_p99_ms": pct(99) * 1e3,
+            "counters": {m: search.SearchStats(c)
+                         for m, c in self._counters.items()},
+        }
+        if self.cache is not None:
+            out["lambda_cache"] = self.cache.stats()
+        return out
+
+    def reset_stats(self):
+        self._route_counts.clear()
+        self._counters.clear()
+        self._latencies_s.clear()
+        self._batches = 0
+        self._queries_served = 0

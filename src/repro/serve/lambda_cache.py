@@ -1,0 +1,129 @@
+"""LSH-bucketed lambda cache: warm-start top-k thresholds across queries.
+
+The sweep backends accept ``lambda_cap`` -- an externally-known upper
+bound on a query's true global k-th distance -- and prune every tile and
+point whose lower bound meets it *from the first leaf*.  The distributed
+index derives such caps **across shards** (round-1 exchange); this cache
+derives them **across time**: hot traffic keeps asking nearly-identical
+hyperplanes (same normal direction up to sign), so the k-th distance of a
+previously-answered neighbor query bounds the new one.
+
+Exactness argument (documented contract, asserted by the parity suite):
+for any point ``x`` and queries ``q``, ``q'``,
+
+    |<x,q>|  <=  |<x,q'>| + |<x, q - q'>|  <=  |<x,q'>| + ||x|| * ||q-q'||
+
+so with ``R >= max_x ||x||`` (root ball: ``R = ||c_root|| + r_root``) the
+k-th smallest |<x,q>| is at most ``lambda'(q') + R * ||q - q'||`` -- a
+*valid* cap for ``q`` whenever ``lambda'`` upper-bounds q''s k-th
+distance.  Because ``|<x,-q'>| = |<x,q'>|`` the sign-canonical distance
+``min(||q-q'||, ||q+q'||)`` is used.  Any exact backend's k-th returned
+distance is by definition an upper bound on its own k-th distance, and a
+*budgeted* (beam) backend's k-th returned distance is the distance of k
+real points, hence also an upper bound -- so every served batch can
+update the cache.  Caps are additionally inflated by a relative factor
+plus an additive slack covering the f32 rounding noise of the backends'
+bound arithmetic (see ``lookup``), so ``cap`` strictly exceeds every
+true top-k member's *computed* lower bound: pruning discards only
+candidates whose bound >= cap > true k-th, which can never evict a true
+top-k member -- results are bit-identical to the uncapped run.
+
+Buckets are sign-random-projection (SRP) signatures of the query
+direction: ``m`` fixed Gaussian directions, one bit each, sign-canonical
+(the signature of -q equals the signature of q).  Nearby normals collide;
+each bucket stores the last (query, lambda) pair per ``k``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["LambdaCache"]
+
+# strict inflation: keeps caps > true kth under f32 rounding so warm runs
+# stay bit-identical (see module docstring)
+_INFLATE = 1.0 + 1e-6
+
+
+class LambdaCache:
+    """Host-side cache: SRP bucket -> (query, k-th distance) per k."""
+
+    def __init__(self, d: int, max_norm: float, *, n_bits: int = 14,
+                 seed: int = 0, max_entries: int = 65536):
+        assert n_bits <= 62
+        self.d = int(d)
+        self.max_norm = float(max_norm)
+        rng = np.random.default_rng(seed)
+        # fixed projection directions; queries are (d,) incl. the appended
+        # coefficient, so bucket on the full normalized coefficient vector
+        self.proj = rng.standard_normal((self.d, n_bits)).astype(np.float32)
+        self._pow2 = (1 << np.arange(n_bits, dtype=np.int64))
+        self.max_entries = int(max_entries)
+        self._store: dict = {}  # (sig, k) -> (q (d,) f32, lam float)
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def signatures(self, queries: np.ndarray) -> np.ndarray:
+        """Sign-canonical SRP signatures for (B, d) queries -> (B,) i64."""
+        q = np.asarray(queries, np.float32)
+        bits = (q @ self.proj) >= 0  # (B, n_bits)
+        # canonicalize +/- q to the same bucket: flip all bits so bit 0 is 0
+        flip = bits[:, :1]
+        bits = np.logical_xor(bits, flip)
+        return (bits.astype(np.int64) @ self._pow2).astype(np.int64)
+
+    # ------------------------------------------------------------------
+    def lookup(self, queries: np.ndarray, k: int) -> np.ndarray:
+        """Valid per-query caps (B,) f32; +inf where the cache has nothing."""
+        q = np.asarray(queries, np.float32)
+        caps = np.full((q.shape[0],), np.inf, np.float32)
+        sigs = self.signatures(q)
+        for i, sig in enumerate(sigs):
+            ent = self._store.get((int(sig), int(k)))
+            if ent is None:
+                self.misses += 1
+                continue
+            q0, lam = ent
+            delta = min(float(np.linalg.norm(q[i] - q0)),
+                        float(np.linalg.norm(q[i] + q0)))
+            # additive slack: the backends compute their lower bounds in
+            # f32, so a true top-k member's *computed* bound can exceed its
+            # true distance by ~eps * ||q|| * R of rounding noise.  The
+            # multiplicative inflation alone cannot cover that when lambda
+            # is at or near 0 (points lying exactly on the hyperplane):
+            # cap would round to ~0 and prune everything.  1e-5*(1+||q||R)
+            # dominates the f32 noise scale with ~50x margin while staying
+            # negligible for any lambda the cap usefully prunes with.
+            slack = 1e-5 * (1.0 + float(np.linalg.norm(q[i]))
+                            * self.max_norm)
+            caps[i] = (lam + self.max_norm * delta) * _INFLATE + slack
+            self.hits += 1
+        return caps
+
+    # ------------------------------------------------------------------
+    def update(self, queries: np.ndarray, k: int, kth_dists: np.ndarray):
+        """Record served results; ``kth_dists`` are per-query k-th returned
+        distances (upper bounds on the true k-th by construction)."""
+        q = np.asarray(queries, np.float32)
+        lam = np.asarray(kth_dists, np.float32).reshape(-1)
+        sigs = self.signatures(q)
+        for i, sig in enumerate(sigs):
+            if not np.isfinite(lam[i]):
+                continue  # fewer than k valid results: not a valid bound
+            key = (int(sig), int(k))
+            prev = self._store.get(key)
+            # keep the tighter center: prefer the smaller lambda
+            if prev is None or lam[i] <= prev[1]:
+                self._store[key] = (q[i].copy(), float(lam[i]))
+        while len(self._store) > self.max_entries:  # FIFO-ish eviction
+            self._store.pop(next(iter(self._store)))
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {"entries": len(self._store), "hits": self.hits,
+                "misses": self.misses}
+
+    def clear(self):
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0

@@ -126,6 +126,36 @@ def test_smoke_prefill_decode_matches_forward(arch):
     assert (got.argmax(-1) == ref.argmax(-1)).all(), f"{arch}: argmax differs"
 
 
+def test_moe_capacity_carry_across_alignment_boundary():
+    """MoE prefill/decode parity when capacity(prompt) != capacity(full):
+    E=4, top_k=2, cf=1.25 gives capacity(14)=8 but capacity(15)=16, so a
+    15-token forward vs 14-token prefill + 1 decode step crosses the
+    8-alignment boundary.  The carry must apply the full-length capacity
+    in both phases (drop rule AND dispatch-buffer size)."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import moe as M
+
+    assert M.moe_capacity(14, 2, 4, 1.25) != M.moe_capacity(15, 2, 4, 1.25)
+    cfg = dataclasses.replace(get_config("granite-moe-3b-a800m", smoke=True),
+                              compute_dtype=jnp.float32,
+                              cache_dtype=jnp.float32,
+                              num_experts=4, top_k=2)
+    from repro.models.transformer import StackedLM
+    model = StackedLM(cfg)
+    params, _ = model.init(jax.random.PRNGKey(2))
+    Bv, Sv = 2, 15
+    toks = jnp.asarray(np.random.default_rng(9).integers(
+        0, cfg.vocab, (Bv, Sv)), jnp.int32)
+    full, _ = jax.jit(lambda p: model.apply(p, toks))(params)
+    _, cache = jax.jit(lambda p: model.prefill(p, toks[:, :-1]))(params)
+    logits, _ = jax.jit(lambda p, c: model.decode_step(
+        p, c, toks[:, -1:], jnp.full((Bv,), Sv - 1, jnp.int32)))(params,
+                                                                 cache)
+    err = float(jnp.max(jnp.abs(logits[:, 0] - full[:, -1])))
+    assert err < 1e-4, err
+
+
 def test_head_padding_exactness():
     """pad_heads_to: the padded parameterization (zero pad slices + output
     mask) computes exactly the unpadded model's logits."""

@@ -16,13 +16,13 @@ _BODY = textwrap.dedent(
     from repro.core import exact_search, append_ones
     from repro.core.balltree import normalize_query
     from repro.core.distributed import ShardedP2HIndex
+    from repro.launch.mesh import make_mesh
 
     rng = np.random.default_rng(11)
     cents = rng.normal(size=(12, 24)) * 6
     data = (cents[rng.integers(0, 12, 9003)]
             + rng.normal(size=(9003, 24))).astype(np.float32)
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     idx = ShardedP2HIndex.build(data, mesh, n0=128)
     q = rng.normal(size=(6, 25)).astype(np.float32)
     ed, ei = exact_search(append_ones(data), normalize_query(q), k=10)
@@ -38,8 +38,7 @@ _BODY = textwrap.dedent(
     check(bd, bi)
     assert st["verified"] > 0
     # 2-axis sharding (pod x data), like the production mesh
-    mesh2 = jax.make_mesh((2, 4), ("pod", "data"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh((2, 4), ("pod", "data"))
     idx2 = ShardedP2HIndex.build(data, mesh2, axes=("pod", "data"), n0=128)
     bd2, bi2, _ = idx2.query(q, k=10)
     check(bd2, bi2)
@@ -69,6 +68,7 @@ _TRAIN_BODY = textwrap.dedent(
     """
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh, mesh_context
     from repro.configs import get_model
     from repro.launch.steps import make_train_step, abstract_opt_state
     from repro.optim import adamw_init
@@ -90,8 +90,7 @@ _TRAIN_BODY = textwrap.dedent(
     p1, o1, m1 = jax.jit(step)(params, opt, batch)
 
     # 8-device (data=4, model=2) mesh with full sharding path
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     param_sh = specs_for_mesh(
         logical, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape,
                                                              x.dtype),
@@ -100,7 +99,10 @@ _TRAIN_BODY = textwrap.dedent(
     rep = NamedSharding(mesh, P())
     opt_sh = OptState(mu=param_sh, nu=param_sh, count=rep)
     batch_sh = {k: NamedSharding(mesh, P(("data",), None)) for k in batch}
-    with jax.set_mesh(mesh):
+    # mesh_context = jax.set_mesh on new jax (activation sharding
+    # constraints active); a benign Mesh context on old jax, where
+    # repro.parallel.shard degrades to a no-op anyway.
+    with mesh_context(mesh):
         jstep = jax.jit(step, in_shardings=(param_sh, opt_sh, batch_sh))
         p8, o8, m8 = jstep(
             jax.device_put(params, param_sh),
@@ -141,6 +143,7 @@ _ELASTIC_BODY = textwrap.dedent(
     import numpy as np, jax, jax.numpy as jnp, tempfile
     from repro.checkpoint import CheckpointManager
     from repro.configs import get_model
+    from repro.launch.mesh import make_mesh
     from repro.runtime.elastic import specs_for_mesh
 
     model, cfg = get_model("llama3.2-1b", smoke=True)
@@ -149,8 +152,7 @@ _ELASTIC_BODY = textwrap.dedent(
         mgr = CheckpointManager(td)
         mgr.save(1, params, blocking=True)
         # restore onto an 8-device mesh (elastic rescale path)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         shapes = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
         sh = specs_for_mesh(logical, shapes, mesh, cfg.rules)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh
 from repro.launch.train import TrainConfig, train
 from repro.runtime import StepWatchdog, StragglerMonitor
 from repro.runtime.elastic import elastic_remesh
@@ -81,8 +82,7 @@ def test_straggler_monitor_flags_outlier():
 
 
 def test_elastic_remesh_roundtrip():
-    mesh1 = jax.make_mesh((1,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh1 = make_mesh((1,), ("data",))
     tree = {"w": jnp.arange(32.0).reshape(8, 4)}
     logical = {"w": ("batch", None)}
     out = elastic_remesh(tree, logical, mesh1)

@@ -3,7 +3,7 @@ the pure-jnp oracle (ref.py) and the global brute-force oracle."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import HAVE_HYPOTHESIS, hypothesis, st
 
 from repro.core.balltree import append_ones, build_tree, normalize_query
 from repro.core.exact import exact_search
@@ -58,12 +58,15 @@ def test_kernel_bound_toggles_match_ref(use_ball, use_cone):
     tree = build_tree(data, n0=128)
     q = _queries(8, 32, seed=4)
     ops, B0 = prepare_operands(tree, jnp.asarray(q))
-    kd, ki = p2h_sweep(**ops, k=5, use_ball=use_ball, use_cone=use_cone,
-                       interpret=True)
-    rd, ri = p2h_sweep_ref(**ops, k=5, use_ball=use_ball, use_cone=use_cone)
+    kd, ki, ks = p2h_sweep(**ops, k=5, use_ball=use_ball, use_cone=use_cone,
+                           interpret=True)
+    rd, ri, rs = p2h_sweep_ref(**ops, k=5, use_ball=use_ball,
+                               use_cone=use_cone)
     kd = np.sort(np.asarray(kd), axis=1)
     rd = np.sort(np.asarray(rd), axis=1)
     np.testing.assert_allclose(kd, rd, rtol=1e-5, atol=1e-6)
+    # the block-granular tile-skip counters agree exactly
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
 
 
 def test_kernel_frac_budget_subsets_exact():
@@ -109,14 +112,7 @@ def test_kernel_dtype_and_duplicate_points(dtype):
                                rtol=1e-4, atol=1e-5)
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    n=st.integers(200, 1500),
-    d=st.integers(2, 48),
-    k=st.sampled_from([1, 4, 10]),
-    seed=st.integers(0, 10_000),
-)
-def test_kernel_property_exactness(n, d, k, seed):
+def _kernel_property_exactness(n, d, k, seed):
     data = _mkdata(n, d, seed=seed)
     tree = build_tree(data, n0=128)
     q = _queries(5, d, seed=seed + 1)
@@ -124,3 +120,23 @@ def test_kernel_property_exactness(n, d, k, seed):
     kd, _, _ = sweep_search_pallas(tree, jnp.asarray(q), k=k)
     np.testing.assert_allclose(np.asarray(kd), np.asarray(ed),
                                rtol=1e-4, atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.settings(max_examples=15, deadline=None)
+    @hypothesis.given(
+        n=st.integers(200, 1500),
+        d=st.integers(2, 48),
+        k=st.sampled_from([1, 4, 10]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_kernel_property_exactness(n, d, k, seed):
+        _kernel_property_exactness(n, d, k, seed)
+
+else:
+
+    @pytest.mark.parametrize("n,d,k,seed", [
+        (333, 5, 1, 11), (1200, 33, 4, 12), (800, 48, 10, 13)])
+    def test_kernel_property_exactness(n, d, k, seed):
+        _kernel_property_exactness(n, d, k, seed)

@@ -49,13 +49,14 @@ _BODY = textwrap.dedent(
     import os
     os.environ["REPRO_STRICT_BF16_DOTS"] = "1"
     import jax
-    from repro.launch.dryrun import _lower_cell, collective_bytes
+    from repro.launch.dryrun import (_lower_cell, collective_bytes,
+                                     cost_analysis_dict)
+    from repro.launch.mesh import make_mesh
     from repro.configs import get_config
     import repro.configs as C
     import dataclasses
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     # shrink the cell: smoke config + tiny shapes
     C.SHAPES["train_4k"] = dict(kind="train", seq=32, batch=8)
     C.SHAPES["decode_32k"] = dict(kind="decode", seq=64, batch=8)
@@ -63,7 +64,7 @@ _BODY = textwrap.dedent(
         cfg = get_config(arch, smoke=True)
         for shape in ("train_4k", "decode_32k"):
             comp = _lower_cell(arch, shape, mesh, cfg)
-            ca = comp.cost_analysis()
+            ca = cost_analysis_dict(comp)
             assert ca["flops"] > 0
             cb = collective_bytes(comp.as_text())
             assert cb["wire_bytes"] >= 0

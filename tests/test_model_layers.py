@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given_int_seed
 
 from repro.models import attention as A
 from repro.models import layers as L
@@ -152,8 +152,7 @@ def test_rglru_associative_scan_matches_sequential():
 
 
 # ------------------------------------------------------------------ moe
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 1000))
+@given_int_seed(max_examples=10, hi=1000)
 def test_moe_dispatch_conservation(seed):
     """Property: with capacity >= assignments, MoE output equals the
     explicit per-token mixture of expert outputs (no token lost)."""
@@ -198,8 +197,7 @@ def test_moe_capacity_drops_are_deterministic():
 
 
 # ---------------------------------------------------------------- norms
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 10_000))
+@given_int_seed(max_examples=25, hi=10_000)
 def test_rmsnorm_bf16_path_close_to_f32(seed):
     rng = np.random.default_rng(seed)
     x = rng.normal(size=(4, 32)).astype(np.float32) * rng.uniform(0.1, 8)

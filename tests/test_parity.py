@@ -1,0 +1,160 @@
+"""Cross-backend exactness harness.
+
+Every exact backend -- paper-faithful DFS, the TPU-native jnp sweep at
+``frac=1.0``, the Pallas kernel in interpret mode, and the sharded
+two-round lambda exchange -- must return the *same* top-k as the
+brute-force oracle (``repro.core.exact``), on every dataset shape.  The
+lambda-cap validity property (the serving engine's exactness contract) is
+checked property-based when hypothesis is available and with seeded draws
+otherwise; the true-lower-bound properties for ``node_ball_bound`` /
+``point_cone_bound`` live in tests/test_bounds.py (same guard).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from _hyp import HAVE_HYPOTHESIS, hypothesis, st
+
+from repro.core import (
+    P2HIndex,
+    append_ones,
+    dfs_search,
+    exact_search,
+    sweep_search,
+)
+from repro.core.balltree import build_tree, normalize_query
+
+DATASETS = {
+    # name -> (n, d, kind)
+    "normal": (3000, 16, "normal"),
+    "clustered": (4000, 24, "clustered"),
+    "unit": (2000, 48, "unit"),
+    "tiny-d": (513, 7, "normal"),
+}
+
+
+def _mkdata(n, d, kind, seed=0):
+    rng = np.random.default_rng(seed)
+    if kind == "normal":
+        x = rng.normal(size=(n, d))
+    elif kind == "clustered":
+        c = rng.normal(size=(8, d)) * 5
+        x = c[rng.integers(0, 8, n)] + rng.normal(size=(n, d)) * 0.5
+    else:  # unit
+        x = rng.normal(size=(n, d))
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return x.astype(np.float32)
+
+
+@pytest.fixture(scope="module", params=list(DATASETS))
+def ds(request):
+    n, d, kind = DATASETS[request.param]
+    data = _mkdata(n, d, kind, seed=3)
+    tree = build_tree(data, n0=128)
+    q = normalize_query(
+        np.random.default_rng(4).normal(size=(16, d + 1)).astype(np.float32))
+    ed, ei = exact_search(jnp.asarray(append_ones(data)), jnp.asarray(q), k=10)
+    return data, tree, q, np.asarray(ed), np.asarray(ei)
+
+
+def _run_backend(backend, tree, data, q, k):
+    if backend == "dfs":
+        bd, bi, _ = dfs_search(tree, jnp.asarray(q), k)
+    elif backend == "sweep":
+        bd, bi, _ = sweep_search(tree, jnp.asarray(q), k, frac=1.0)
+    elif backend == "pallas":
+        from repro.kernels.ops import sweep_search_pallas
+
+        bd, bi, _ = sweep_search_pallas(tree, jnp.asarray(q), k=k,
+                                        interpret=True)
+    elif backend == "sharded":
+        from repro.core.distributed import ShardedP2HIndex
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((1,), ("data",))
+        idx = ShardedP2HIndex.build(data, mesh, n0=tree.n0)
+        bd, bi, _ = idx.query(q, k=k, normalize=False)
+    else:
+        raise ValueError(backend)
+    return np.asarray(bd), np.asarray(bi)
+
+
+def _assert_topk_equal(bd, bi, ed, ei, tag):
+    """Identical top-k up to f32 near-ties: distances must agree to f32
+    reduction-order tolerance, and any id disagreement must be a swap of
+    candidates whose distances tie within that tolerance."""
+    np.testing.assert_allclose(bd, ed, rtol=1e-4, atol=1e-5, err_msg=tag)
+    tie_tol = 1e-4 * np.abs(ed) + 1e-6
+    for r in range(len(ei)):
+        mism = bi[r] != ei[r]
+        if not mism.any():
+            continue
+        # the mismatched positions must carry tied distances and the same
+        # id multiset (pure ordering swap), or differ at the k-th boundary
+        assert set(bi[r][mism]) == set(ei[r][mism]), (tag, r, bi[r], ei[r])
+        assert (np.abs(bd[r][mism] - ed[r][mism]) <= tie_tol[r][mism]).all()
+
+
+@pytest.mark.parametrize("backend", ["dfs", "sweep", "pallas", "sharded"])
+def test_backend_matches_oracle(ds, backend):
+    data, tree, q, ed, ei = ds
+    bd, bi = _run_backend(backend, tree, data, q, 10)
+    _assert_topk_equal(bd, bi, ed, ei, backend)
+
+
+@pytest.mark.parametrize("backend", ["dfs", "sweep", "pallas"])
+def test_backend_lambda_cap_is_exact(ds, backend):
+    """A valid cap (slightly above the true k-th distance) never changes
+    any backend's results -- the serving engine's warm-start contract."""
+    data, tree, q, ed, ei = ds
+    cap = jnp.asarray(ed[:, -1] * (1 + 1e-6) + 1e-30)
+    if backend == "dfs":
+        bd, bi, _ = dfs_search(tree, jnp.asarray(q), 10, lambda_cap=cap)
+    elif backend == "sweep":
+        bd, bi, _ = sweep_search(tree, jnp.asarray(q), 10, lambda_cap=cap)
+    else:
+        from repro.kernels.ops import sweep_search_pallas
+
+        bd, bi, _ = sweep_search_pallas(tree, jnp.asarray(q), k=10,
+                                        lambda_cap=cap, interpret=True)
+    _assert_topk_equal(np.asarray(bd), np.asarray(bi), ed, ei, backend)
+
+
+# ----------------------------------------------------------------------
+# lambda-cache cap validity (the triangle-inequality bound of
+# repro.serve.lambda_cache): kth(q) <= lambda'(q') + R * ||q - q'||
+# ----------------------------------------------------------------------
+
+
+def _check_cap_validity(seed):
+    rng = np.random.default_rng(seed)
+    n, d = 600, 8
+    data = rng.normal(size=(n, d)).astype(np.float32)
+    X = append_ones(data)
+    R = float(np.max(np.linalg.norm(X, axis=1)))
+    q1 = normalize_query(rng.normal(size=(1, d + 1)).astype(np.float32))
+    # a nearby query: perturbed coefficients
+    q2 = normalize_query(
+        (q1 + rng.normal(size=q1.shape).astype(np.float32) * 0.05))
+    k = 5
+    ed1, _ = exact_search(jnp.asarray(X), jnp.asarray(q1), k=k)
+    ed2, _ = exact_search(jnp.asarray(X), jnp.asarray(q2), k=k)
+    lam1 = float(np.asarray(ed1)[0, -1])
+    true2 = float(np.asarray(ed2)[0, -1])
+    delta = min(float(np.linalg.norm(q2 - q1)),
+                float(np.linalg.norm(q2 + q1)))
+    cap = lam1 + R * delta
+    assert true2 <= cap * (1 + 1e-5), (true2, cap)
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.given(st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_lambda_cache_cap_validity(seed):
+        _check_cap_validity(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_lambda_cache_cap_validity(seed):
+        _check_cap_validity(seed)

@@ -1,8 +1,7 @@
 """Search correctness: every scheme vs. the brute-force oracle."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+from _hyp import HAVE_HYPOTHESIS, hypothesis, st
 
 from repro.core import (
     P2HIndex,
@@ -122,9 +121,7 @@ def test_lambda_cap_exactness(setup):
     assert np.array_equal(np.asarray(ei), np.asarray(bi))
 
 
-@hypothesis.given(st.integers(0, 2**31 - 1), st.sampled_from([1, 5, 10]))
-@hypothesis.settings(max_examples=12, deadline=None)
-def test_dfs_exact_property(seed, k):
+def _dfs_exact_property(seed, k):
     """Property: DFS == oracle on random clustered instances."""
     data, q = _mk(seed=seed, n=800, d=8, clusters=4)
     tree = build_tree(data, n0=64, seed=seed)
@@ -132,6 +129,20 @@ def test_dfs_exact_property(seed, k):
     ed, ei = exact_search(X, q, k=k)
     bd, bi, _ = dfs_search(tree, q, k)
     np.testing.assert_allclose(np.asarray(bd), np.asarray(ed), rtol=1e-3, atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.given(st.integers(0, 2**31 - 1), st.sampled_from([1, 5, 10]))
+    @hypothesis.settings(max_examples=12, deadline=None)
+    def test_dfs_exact_property(seed, k):
+        _dfs_exact_property(seed, k)
+
+else:
+
+    @pytest.mark.parametrize("seed,k", [(3, 1), (17, 5), (23, 10)])
+    def test_dfs_exact_property(seed, k):
+        _dfs_exact_property(seed, k)
 
 
 def test_api_roundtrip(tmp_path, setup):

@@ -1,0 +1,207 @@
+"""Serving-engine tests: micro-batching, dispatch policy, lambda cache,
+and the engine parity contract -- for every dispatch route (dfs / sweep /
+pallas-interpret / sharded), cold and warm lambda cache, engine answers
+are bit-identical to direct ``P2HIndex.query`` answers."""
+import numpy as np
+import pytest
+
+from repro.core import P2HIndex, append_ones, exact_search
+from repro.core.balltree import normalize_query
+from repro.serve import DispatchPolicy, LambdaCache, MicroBatcher, P2HEngine
+
+N, D, K = 6000, 24, 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    cents = rng.normal(size=(8, D)) * 5
+    data = (cents[rng.integers(0, 8, N)]
+            + rng.normal(size=(N, D))).astype(np.float32)
+    idx = P2HIndex.build(data, n0=128)
+    q = rng.normal(size=(16, D + 1)).astype(np.float32)
+    qn = normalize_query(q)
+    ed, ei = exact_search(append_ones(data), qn, k=K)
+    return data, idx, q, np.asarray(ed), np.asarray(ei)
+
+
+# ----------------------------------------------------------------- batcher
+def test_batcher_static_shapes_and_fifo():
+    b = MicroBatcher(d=5, slot_size=4)
+    for i in range(6):
+        b.submit(np.full(5, i, np.float32), k=3)
+    batches = list(b.drain())
+    assert [mb.occupancy for mb in batches] == [4, 2]
+    for mb in batches:
+        assert mb.queries.shape == (4, 5)  # static shape incl. padding
+    # FIFO order preserved
+    assert batches[0].tickets == [0, 1, 2, 3]
+    assert batches[1].tickets == [4, 5]
+    # padding replicates the first live slot
+    assert np.array_equal(batches[1].queries[2], batches[1].queries[0])
+
+
+def test_batcher_groups_by_k_and_recall():
+    b = MicroBatcher(d=3, slot_size=8)
+    b.submit(np.zeros(3, np.float32), k=1)
+    b.submit(np.zeros(3, np.float32), k=2)
+    b.submit(np.zeros(3, np.float32), k=2, recall_target=0.9)
+    batches = list(b.drain())
+    assert [(mb.k, mb.recall_target, mb.occupancy) for mb in batches] == [
+        (1, 1.0, 1), (2, 1.0, 1), (2, 0.9, 1)]
+
+
+# ----------------------------------------------------------------- policy
+def test_dispatch_policy_routes():
+    pol = DispatchPolicy(small_batch=2, prefer_pallas=True)
+    assert pol.route(1, 10).method == "dfs"
+    assert pol.route(8, 10).method == "pallas"
+    assert DispatchPolicy(prefer_pallas=False).route(8, 10).method == "sweep"
+    assert pol.route(8, 10, recall_target=0.9).method == "beam"
+    assert pol.route(8, 10, sharded=True).method == "sharded"
+    assert pol.frac_for_recall(0.99) == 0.5
+    assert pol.frac_for_recall(0.5) == 0.05
+
+
+# ------------------------------------------------------------ lambda cache
+def test_lambda_cache_sign_canonical_and_valid(setup):
+    data, idx, q, ed, ei = setup
+    qn = normalize_query(q).astype(np.float32)
+    cache = LambdaCache(D + 1, max_norm=10.0)
+    sig_p = cache.signatures(qn)
+    sig_m = cache.signatures(-qn)
+    assert np.array_equal(sig_p, sig_m)  # +/-q share a bucket
+
+    cache.update(qn, K, ed[:, -1])
+    caps = cache.lookup(qn, K)
+    # repeat lookups hit and the cap upper-bounds the true kth strictly
+    # but stays tight: relative inflation plus the f32 bound-noise slack
+    assert np.isfinite(caps).all()
+    assert (caps > ed[:, -1]).all()
+    slack = 1e-5 * (1 + np.linalg.norm(qn, axis=1) * cache.max_norm)
+    assert (caps <= ed[:, -1] * (1 + 1e-4) + slack * (1 + 1e-6)).all()
+    # unknown k -> miss
+    assert not np.isfinite(cache.lookup(qn, K + 1)).any()
+
+
+def test_lambda_cache_skips_invalid_updates():
+    cache = LambdaCache(4, max_norm=1.0)
+    q = np.ones((1, 4), np.float32)
+    cache.update(q, 3, np.array([np.inf]))  # <k results: not a valid bound
+    assert not np.isfinite(cache.lookup(q, 3)).any()
+
+
+# ---------------------------------------------------------- engine parity
+ROUTES = ["dfs", "sweep", "pallas", "beam"]
+
+
+@pytest.mark.parametrize("route", ROUTES)
+def test_engine_route_matches_direct_cold_and_warm(setup, route):
+    """Engine answers == direct P2HIndex.query answers, bit-identical, on
+    every dispatch route, with a cold cache and again fully warm."""
+    data, idx, q, ed, ei = setup
+    kw = dict(frac=0.1) if route == "beam" else {}
+    dd, di = idx.query(q, k=K, method=route, **kw)
+    for use_cache in (False, True):
+        eng = P2HEngine(idx, slot_size=8, use_cache=use_cache)
+        rt = dict(recall_target=0.9) if route == "beam" else {}
+        gd, gi = eng.query(q, k=K, method=route, **rt)
+        assert np.array_equal(dd, gd), (route, use_cache, "cold dists")
+        assert np.array_equal(di, gi), (route, use_cache, "cold ids")
+        if use_cache:  # second pass: every lookup hits -> warm caps applied
+            gd2, gi2 = eng.query(q, k=K, method=route, **rt)
+            if route != "beam":  # beam never consumes caps (see engine)
+                assert eng.cache.hits > 0
+            assert np.array_equal(dd, gd2), (route, "warm dists")
+            assert np.array_equal(di, gi2), (route, "warm ids")
+
+
+def test_engine_sharded_route_matches_direct(setup):
+    from repro.core.distributed import ShardedP2HIndex
+    from repro.launch.mesh import make_mesh
+
+    data, idx, q, ed, ei = setup
+    mesh = make_mesh((1,), ("data",))
+    sh = ShardedP2HIndex.build(data, mesh, n0=128)
+    dd, di, _ = sh.query(q, k=K)
+    eng = P2HEngine(idx, sharded=sh, slot_size=8)
+    # auto-dispatch routes to the sharded index; the returned stats have
+    # the same per-call counter shape as the direct path
+    gd, gi, st = sh.query(q, k=K, engine=eng)
+    assert eng.stats()["routes"] == {"sharded": 2}
+    direct_st = sh.query(q[:1], k=K)[2]
+    assert set(st) == set(direct_st) and st["verified"] > 0
+    assert np.array_equal(dd, gd) and np.array_equal(di, gi)
+    with pytest.raises(ValueError):
+        sh.query(q, k=K, engine=eng, lambda_cap=np.zeros(len(q)))
+    # warm pass stays bit-identical
+    gd2, gi2, _ = sh.query(q, k=K, engine=eng)
+    assert np.array_equal(dd, gd2) and np.array_equal(di, gi2)
+
+
+def test_engine_auto_dispatch_and_api_hook(setup):
+    data, idx, q, ed, ei = setup
+    eng = P2HEngine(idx, slot_size=8)
+    # single query -> dfs (latency route); full batch -> batched route
+    d1, i1 = eng.query(q[:1], k=K)
+    assert eng.stats()["routes"].get("dfs", 0) >= 1
+    bd, bi = idx.query(q, k=K, engine=eng)  # api integration
+    assert np.array_equal(bi, ei)
+    np.testing.assert_allclose(bd, ed, rtol=1e-4, atol=1e-5)
+    # streaming API agrees with the batch API
+    tickets = [eng.submit(row, k=K) for row in q]
+    eng.flush()
+    got = np.stack([eng.result(t)[1] for t in tickets])
+    assert np.array_equal(got, ei)
+
+
+def test_engine_warm_cache_prunes_strictly_more(setup):
+    """The acceptance property behind benchmarks/bench_serve.py: on a
+    hot-repeat trace, a warm lambda cache skips strictly more tiles than
+    cold dispatch (and answers stay identical -- checked above)."""
+    rng = np.random.default_rng(7)
+    cents = rng.normal(size=(64, 32)) * 2.5
+    data = (cents[rng.integers(0, 64, 30000)]
+            + rng.normal(size=(30000, 32))).astype(np.float32)
+    idx = P2HIndex.build(data, n0=64)
+    trace = np.stack([rng.normal(size=33).astype(np.float32)
+                      for _ in range(4)] * 2)
+    pol = DispatchPolicy(prefer_pallas=False)
+    eng = P2HEngine(idx, slot_size=8, policy=pol)
+    eng.query(trace, k=60)
+    cold = eng.stats()["counters"]["sweep"]["tiles_skipped"]
+    eng.reset_stats()
+    eng.query(trace, k=60)
+    warm = eng.stats()["counters"]["sweep"]["tiles_skipped"]
+    assert warm > cold, (cold, warm)
+
+
+def test_engine_warm_repeat_exact_at_zero_lambda():
+    """Points lying exactly on the queried hyperplane: the cached k-th
+    distance is 0, and the warm cap must still admit every true member
+    despite f32 noise in the computed bounds (additive slack in
+    LambdaCache.lookup)."""
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(2000, 8)).astype(np.float32)
+    data[:50, 0] = 0.0  # on the hyperplane x0 = 0
+    idx = P2HIndex.build(data, n0=128)
+    q = np.zeros((4, 9), np.float32)
+    q[:, 0] = 1.0
+    for m in ("sweep", "dfs", "pallas"):
+        eng = P2HEngine(idx, slot_size=4)
+        d1, i1 = eng.query(q, k=10, method=m)
+        d2, i2 = eng.query(q, k=10, method=m)  # warm: cached lambda == 0
+        assert (d1 == 0).all()
+        assert np.array_equal(d1, d2) and np.array_equal(i1, i2), m
+        assert (i2 >= 0).all(), m
+
+
+def test_engine_stats_shape(setup):
+    data, idx, q, ed, ei = setup
+    eng = P2HEngine(idx, slot_size=8)
+    eng.query(q, k=K)
+    st = eng.stats()
+    assert st["queries"] == len(q)
+    assert st["batches"] == sum(st["routes"].values())
+    assert np.isfinite(st["latency_p50_ms"])
+    assert set(st["lambda_cache"]) == {"entries", "hits", "misses"}
