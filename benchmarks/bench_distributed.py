@@ -7,13 +7,10 @@ repro/core/distributed.py.  Runs on 1 device (mesh (1,)) in-process; the
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import P2HIndex
-from repro.core.exact import exact_search
-from repro.core.balltree import append_ones
 from repro.core.search import SearchStats, sweep_search
 
 from benchmarks.common import ground_truth, load, timeit

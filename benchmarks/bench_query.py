@@ -2,8 +2,6 @@
 the trees, probe-budget sweep for NH/FH), and sensitivity to k."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core.api import P2HIndex
 from repro.core.fh import FHIndex
 from repro.core.nh import NHIndex

@@ -1,0 +1,153 @@
+"""Streaming-index benchmark: interleaved insert/delete/query throughput
+and compaction pause times over ``repro.stream.MutableP2HIndex``.
+
+Measures, on a churn workload (inserts/deletes interleaved with serving
+traffic through a warm ``P2HEngine``):
+
+  * write throughput (inserts/sec, deletes/sec) and per-op p50/p99 --
+    the write path is O(delta-append) / O(segment-copy), never a tree
+    rebuild;
+  * compaction pauses (the write-path stall while the delta folds into a
+    sealed segment via the paper's cheap ``build_tree``): count, p50/max
+    wall time, and rows moved -- the number the paper's 1-3
+    orders-of-magnitude indexing advantage buys us;
+  * query p50 against the mutating index, cold vs warm epoch-tagged
+    lambda cache, verified exact against the brute-force oracle on the
+    final live set.
+
+Run:
+
+    PYTHONPATH=src python benchmarks/bench_stream.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def pct(xs, p):
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
+
+
+def run_stream(args):
+    from repro.core import exact_search
+    from repro.core.balltree import normalize_query
+    from repro.serve import DispatchPolicy, P2HEngine
+    from repro.stream import CompactionPolicy, MutableP2HIndex
+
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(args.seed)
+    data = rng.normal(size=(args.n, args.d)).astype(np.float32)
+    policy = CompactionPolicy(delta_capacity=args.delta_capacity)
+    m = MutableP2HIndex.from_data(data, n0=args.n0, policy=policy)
+    eng = P2HEngine(m, slot_size=8,
+                    policy=DispatchPolicy(prefer_pallas=False))
+
+    hot = rng.normal(size=(4, args.d + 1)).astype(np.float32)
+    live = list(range(args.n))
+    ins_lat, del_lat, q_lat = [], [], []
+    # interleave: bursts of writes, then a served query micro-batch
+    t_all = time.perf_counter()
+    for step in range(args.ops):
+        r = rng.random()
+        if r < 0.55:
+            x = rng.normal(size=args.d).astype(np.float32)
+            t0 = time.perf_counter()
+            gid = m.insert(x)
+            ins_lat.append(time.perf_counter() - t0)
+            live.append(gid)
+        elif r < 0.8 and live:
+            gid = live.pop(int(rng.integers(len(live))))
+            t0 = time.perf_counter()
+            m.delete(gid)
+            del_lat.append(time.perf_counter() - t0)
+        else:
+            trace = np.stack([hot[i % len(hot)] for i in range(8)])
+            t0 = time.perf_counter()
+            eng.query(trace, k=args.k)
+            q_lat.append(time.perf_counter() - t0)
+    wall = time.perf_counter() - t_all
+
+    # exactness spot-check on the final live set
+    snap = m.snapshot()
+    bd, bi = m.query(hot, k=args.k)
+    X, _ = snap.live_points()
+    ed, ei = exact_search(jnp.asarray(X),
+                          jnp.asarray(normalize_query(hot)), k=args.k)
+    assert np.allclose(bd, np.asarray(ed), rtol=1e-4, atol=1e-5), \
+        "stream results diverged from the brute-force oracle"
+
+    pauses = [c["wall_s"] for c in m.compaction_log]
+    return {
+        "ops": args.ops,
+        "wall_s": wall,
+        "inserts": len(ins_lat),
+        "deletes": len(del_lat),
+        "query_batches": len(q_lat),
+        "insert_p50_us": pct(ins_lat, 50) * 1e6,
+        "insert_p99_us": pct(ins_lat, 99) * 1e6,
+        "delete_p50_us": pct(del_lat, 50) * 1e6,
+        "delete_p99_us": pct(del_lat, 99) * 1e6,
+        "query_p50_ms": pct(q_lat, 50) * 1e3,
+        "write_ops_per_s": (len(ins_lat) + len(del_lat)) / max(wall, 1e-9),
+        "compactions": len(pauses),
+        "compact_p50_ms": pct(pauses, 50) * 1e3,
+        "compact_max_ms": (max(pauses) * 1e3) if pauses else float("nan"),
+        "compact_rows": sum(c["rows"] for c in m.compaction_log),
+        "final_live": m.live_count,
+        "epoch": m.epoch,
+        "segments": len(snap.segments),
+        "lambda_cache": eng.cache.stats(),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--n0", type=int, default=64)
+    ap.add_argument("--ops", type=int, default=2000)
+    ap.add_argument("--delta-capacity", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+
+    res = run_stream(args)
+    print(f"workload: {res['inserts']} inserts, {res['deletes']} deletes, "
+          f"{res['query_batches']} query batches in {res['wall_s']:.2f}s "
+          f"-> {res['write_ops_per_s']:.0f} write ops/s")
+    print(f"insert p50 {res['insert_p50_us']:.0f} us  "
+          f"p99 {res['insert_p99_us']:.0f} us   "
+          f"delete p50 {res['delete_p50_us']:.0f} us  "
+          f"p99 {res['delete_p99_us']:.0f} us")
+    print(f"query p50 {res['query_p50_ms']:.1f} ms (warm engine, "
+          f"epoch-tagged cache: {res['lambda_cache']})")
+    print(f"compactions: {res['compactions']} "
+          f"(p50 {res['compact_p50_ms']:.1f} ms, "
+          f"max pause {res['compact_max_ms']:.1f} ms, "
+          f"{res['compact_rows']} rows moved); "
+          f"final: {res['final_live']} live points in "
+          f"{res['segments']} segments, epoch {res['epoch']}")
+    return res
+
+
+def run(csv) -> None:
+    """benchmarks.run registry entry point: CSV rows for bench_output."""
+    res = main(["--n", "8000", "--ops", "600", "--delta-capacity", "256"])
+    csv("stream,metric,value")
+    for key in ("write_ops_per_s", "insert_p50_us", "insert_p99_us",
+                "delete_p50_us", "delete_p99_us", "query_p50_ms",
+                "compactions", "compact_p50_ms", "compact_max_ms",
+                "compact_rows", "final_live", "segments"):
+        csv(f"stream,{key},{res[key]:.3f}"
+            if isinstance(res[key], float) else f"stream,{key},{res[key]}")
+
+
+if __name__ == "__main__":
+    main()

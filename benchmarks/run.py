@@ -9,7 +9,8 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_ablations, bench_distributed,
-                            bench_indexing, bench_kernel, bench_query)
+                            bench_indexing, bench_kernel, bench_query,
+                            bench_serve, bench_stream)
 
     t0 = time.time()
     emitted = []
@@ -24,6 +25,8 @@ def main() -> None:
         ("Figs 7/8/10/11 (+Thm 5) ablations", bench_ablations),
         ("Kernel path", bench_kernel),
         ("Distributed lambda exchange", bench_distributed),
+        ("Serving engine (batching + lambda cache)", bench_serve),
+        ("Streaming index (insert/delete/compaction)", bench_stream),
     ]
     for title, mod in mods:
         print(f"# === {title} ===", flush=True)

@@ -1,5 +1,5 @@
 """Generate the dry-run + roofline markdown tables from artifacts."""
-import glob, json, os, sys
+import glob, json, sys
 sys.path.insert(0, "src")
 
 def dryrun_table():

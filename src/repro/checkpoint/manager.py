@@ -57,8 +57,14 @@ class CheckpointManager:
         if self._error:
             raise self._error.pop()
 
-    def save(self, step: int, tree: Any, *, blocking: bool = False):
-        """Async atomic save of an arbitrary pytree of arrays."""
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             extra_meta: dict | None = None):
+        """Async atomic save of an arbitrary pytree of arrays.
+
+        ``extra_meta``: JSON-serializable dict stored under the
+        manifest's ``"extra"`` key -- carries non-array state (static
+        shapes, counters, format tags) for callers like the streaming
+        index that reconstruct structure at restore time."""
         self.wait()
         leaves, treedef = _flatten(tree)
         # device->host snapshot now (cheap relative to disk); numpy copies
@@ -74,6 +80,8 @@ class CheckpointManager:
                 os.makedirs(tmp)
                 manifest = {"step": step, "treedef": treedef_str,
                             "leaves": [], "time": time.time()}
+                if extra_meta is not None:
+                    manifest["extra"] = extra_meta
                 for i, arr in enumerate(host):
                     path = os.path.join(tmp, f"leaf_{i}.npy")
                     dtype = str(arr.dtype)
@@ -123,6 +131,34 @@ class CheckpointManager:
     def latest_step(self):
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_manifest(self, step: int) -> dict:
+        """The manifest dict of a saved step (shapes, checksums, extra)."""
+        path = os.path.join(self.dir, f"step_{step}", "manifest.json")
+        with open(path) as fh:
+            return json.load(fh)
+
+    def restore_leaves(self, step: int, *, verify: bool = True):
+        """Load a step's flat leaf list without a ``like`` structure.
+
+        Returns ``(leaves, manifest)``; the caller owns reassembling the
+        pytree (e.g. from structure recorded in ``manifest["extra"]``).
+        Checksums are verified like :meth:`restore`."""
+        path = os.path.join(self.dir, f"step_{step}")
+        manifest = self.read_manifest(step)
+        leaves = []
+        for i, meta in enumerate(manifest["leaves"]):
+            arr = np.load(os.path.join(path, f"leaf_{i}.npy"))
+            if meta["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            if verify:
+                digest = hashlib.sha256(arr.tobytes()).hexdigest()
+                if digest != meta["sha256"]:
+                    raise IOError(f"checkpoint leaf {i} corrupt "
+                                  f"(sha mismatch) in {path}")
+            leaves.append(arr)
+        return leaves, manifest
 
     def restore(self, step: int, like: Any, *, shardings: Any = None,
                 verify: bool = True):

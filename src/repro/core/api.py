@@ -15,8 +15,9 @@ Variants:
 from __future__ import annotations
 
 import dataclasses
-import pickle
+import json
 import time
+import zipfile
 from typing import Any
 
 import numpy as np
@@ -25,6 +26,13 @@ from repro.core import search
 from repro.core.balltree import FlatTree, build_tree, normalize_query
 
 __all__ = ["P2HIndex", "BuildReport"]
+
+#: on-disk format: a plain ``.npz`` (one member per FlatTree array) plus a
+#: ``__header__`` JSON string member carrying version / statics / report.
+#: No pickle anywhere on the load path -- loading an index is not code
+#: execution.  Bump on layout changes; readers reject unknown majors.
+_FORMAT_NAME = "p2h-index"
+_FORMAT_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -95,6 +103,7 @@ class P2HIndex:
         """
         recall_target = kw.pop("recall_target", 1.0)
         if engine is not None:
+            assert engine.index is self, "engine serves a different index"
             # serve anything already pending in the engine's streaming
             # queue first, so the counter delta below is this call's only
             engine.flush()
@@ -144,28 +153,63 @@ class P2HIndex:
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
-        import jax
-
         arrays = {
             f.name: np.asarray(getattr(self.tree, f.name))
             for f in dataclasses.fields(FlatTree)
             if not f.metadata.get("static", False)
         }
-        meta = {
-            f.name: getattr(self.tree, f.name)
-            for f in dataclasses.fields(FlatTree)
-            if f.metadata.get("static", False)
+        header = {
+            "format": _FORMAT_NAME,
+            "version": _FORMAT_VERSION,
+            "variant": self.variant,
+            "report": dataclasses.asdict(self.report),
+            "tree_static": {
+                f.name: getattr(self.tree, f.name)
+                for f in dataclasses.fields(FlatTree)
+                if f.metadata.get("static", False)
+            },
         }
-        del jax
+        # np.savez munges extensions when given a str path; a file object
+        # writes exactly where asked.
         with open(path, "wb") as fh:
-            pickle.dump(
-                dict(arrays=arrays, meta=meta, variant=self.variant,
-                     report=dataclasses.asdict(self.report)),
-                fh,
-            )
+            np.savez(fh, __header__=np.asarray(json.dumps(header)), **arrays)
 
     @classmethod
-    def load(cls, path: str) -> "P2HIndex":
+    def load(cls, path: str, *, allow_pickle: bool = False) -> "P2HIndex":
+        """Load an index saved by :meth:`save`.
+
+        The current format is ``.npz`` + JSON header and loads with
+        ``allow_pickle=False`` -- no arbitrary-code-execution hazard.
+        Pre-v2 indexes were raw pickles; reading one requires explicitly
+        opting in with ``allow_pickle=True`` (only do this for files you
+        wrote yourself).
+        """
+        if not zipfile.is_zipfile(path):
+            return cls._load_legacy_pickle(path, allow_pickle=allow_pickle)
+        with np.load(path, allow_pickle=False) as z:
+            header = json.loads(str(z["__header__"][()]))
+            if header.get("format") != _FORMAT_NAME:
+                raise ValueError(f"{path}: not a {_FORMAT_NAME} file")
+            if header.get("version", 0) > _FORMAT_VERSION:
+                raise ValueError(
+                    f"{path}: format version {header['version']} is newer "
+                    f"than this reader ({_FORMAT_VERSION})")
+            arrays = {k: z[k] for k in z.files if k != "__header__"}
+        tree = FlatTree(**arrays, **header["tree_static"])
+        return cls(tree=tree, variant=header["variant"],
+                   report=BuildReport(**header["report"]))
+
+    @classmethod
+    def _load_legacy_pickle(cls, path: str, *,
+                            allow_pickle: bool) -> "P2HIndex":
+        if not allow_pickle:
+            raise ValueError(
+                f"{path} is a legacy pickle index; loading it executes "
+                "arbitrary code from the file.  Pass allow_pickle=True "
+                "only if you trust its origin, then re-save() to migrate "
+                "to the npz format.")
+        import pickle
+
         with open(path, "rb") as fh:
             blob = pickle.load(fh)
         tree = FlatTree(**blob["arrays"], **blob["meta"])

@@ -268,18 +268,10 @@ def _sharded_query(stacked: FlatTree, queries, lambda_cap, *, mesh, axes, k,
         B = q.shape[0]
         md = jnp.moveaxis(all_d, 0, 1).reshape(B, S * k)
         mi = jnp.moveaxis(all_i, 0, 1).reshape(B, S * k)
-        # de-duplicate shard-padding copies: sort by (id primary, dist
-        # secondary), mark repeats of the same id as +inf, then merge.
-        order = jnp.lexsort((md, mi), axis=1)
-        md = jnp.take_along_axis(md, order, axis=1)
-        mi = jnp.take_along_axis(mi, order, axis=1)
-        dup = jnp.concatenate(
-            [jnp.zeros((B, 1), bool), mi[:, 1:] == mi[:, :-1]], axis=1
-        )
-        md = jnp.where(dup, jnp.inf, md)
-        neg, arg = jax.lax.top_k(-md, k)
+        # de-duplicate shard-padding copies by global id and merge
+        fd, fi = search.merge_topk(md, mi, k)
         total_cnt = jax.lax.psum(cnt + cnt1, axes)
-        return -neg, jnp.take_along_axis(mi, arg, axis=1), total_cnt
+        return fd, fi, total_cnt
 
     arrays = {f: getattr(stacked, f) for f in _ARRAY_FIELDS}
     in_spec = jax.tree.map(lambda _: P(axes), arrays)

@@ -26,7 +26,6 @@ Counter conventions (returned stats, summed over the query batch):
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,8 @@ import jax.numpy as jnp
 from repro.core import bounds
 from repro.core.balltree import FlatTree
 
-__all__ = ["dfs_search", "sweep_search", "beam_search", "SearchStats"]
+__all__ = ["dfs_search", "sweep_search", "beam_search", "merge_topk",
+           "SearchStats"]
 
 # counter indices
 C_NODES, C_PRUNED, C_LEAVES, C_IP, C_BALL, C_CONE, C_VERIFIED, C_TILE_SKIP = range(8)
@@ -53,6 +53,30 @@ _COUNTER_NAMES = (
 def SearchStats(counters) -> dict:
     c = jax.device_get(counters)
     return {k: int(v) for k, v in zip(_COUNTER_NAMES, c)}
+
+
+def merge_topk(dists, ids, k: int):
+    """Merge per-source candidate lists into a global top-k, de-duplicated
+    by id.
+
+    ``dists``/``ids`` are (B, M) -- the concatenation of any number of
+    (B, k_i) partial top-k lists (invalid slots: id -1, dist +inf).  Rows
+    are sorted by (id primary, dist secondary) so repeats of the same id
+    keep only their smallest distance; the repeats are masked to +inf and
+    a plain top-k finishes the merge.  This is the merge step of the
+    sharded two-round exchange (``repro.core.distributed``), shared with
+    the streaming index's segment fan-out (``repro.stream``).
+    """
+    B = dists.shape[0]
+    order = jnp.lexsort((dists, ids), axis=1)
+    md = jnp.take_along_axis(dists, order, axis=1)
+    mi = jnp.take_along_axis(ids, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((B, 1), bool), mi[:, 1:] == mi[:, :-1]], axis=1
+    )
+    md = jnp.where(dup, jnp.inf, md)
+    neg, arg = jax.lax.top_k(-md, k)
+    return -neg, jnp.take_along_axis(mi, arg, axis=1)
 
 
 # ======================================================================

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.steps import make_decode_step
 
 __all__ = ["ServeConfig", "serve_batch", "main"]
 

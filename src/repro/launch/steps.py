@@ -12,7 +12,6 @@ launch/train.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -169,7 +168,9 @@ def make_decode_step(model, cfg):
 
 
 def abstract_opt_state(abstract_params):
-    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    def f32(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32)
+
     return OptState(
         mu=jax.tree.map(f32, abstract_params),
         nu=jax.tree.map(f32, abstract_params),

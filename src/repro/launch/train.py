@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +70,7 @@ def train(cfg: TrainConfig, *, fail_at_step: int | None = None):
 
     ``fail_at_step`` injects a one-shot failure (fault-tolerance tests).
     """
-    from repro.configs import get_config, get_model
+    from repro.configs import get_model
 
     model, mcfg = get_model(cfg.arch, cfg.smoke)
     ds = SyntheticLMDataset(vocab=mcfg.vocab, seq=cfg.seq,

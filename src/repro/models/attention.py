@@ -114,7 +114,7 @@ def _flash_fwd(q, k, v, pos_q, pos_k, *, causal, window, nq, nk, Cq, Ck,
         qc, pq = xs
 
         def kv_step(carry, kxs):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kc, vc, pk = kxs
             s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
                            preferred_element_type=jnp.float32)
@@ -122,18 +122,18 @@ def _flash_fwd(q, k, v, pos_q, pos_k, *, causal, window, nq, nk, Cq, Ck,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + jnp.sum(p, axis=-1)
+            lsum = lsum * corr + jnp.sum(p, axis=-1)
             pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(compute_dtype), vc,
                             preferred_element_type=jnp.float32)
             acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + pv
-            return (m_new, l, acc), None
+            return (m_new, lsum, acc), None
 
         init = (jnp.full((B, Hq, Cq), _NEG, jnp.float32),
                 jnp.zeros((B, Hq, Cq), jnp.float32),
                 jnp.zeros((B, Cq, Hq, D), jnp.float32))
-        (m, l, acc), _ = jax.lax.scan(kv_step, init, (ks, vs, pks))
-        lse = m + jnp.log(jnp.maximum(l, 1e-30))               # (B,H,Cq)
-        lt = jnp.maximum(jnp.moveaxis(l, 1, 2), 1e-30)
+        (m, lsum, acc), _ = jax.lax.scan(kv_step, init, (ks, vs, pks))
+        lse = m + jnp.log(jnp.maximum(lsum, 1e-30))            # (B,H,Cq)
+        lt = jnp.maximum(jnp.moveaxis(lsum, 1, 2), 1e-30)
         return None, ((acc / lt[..., None]).astype(compute_dtype), lse)
 
     _, (out, lse) = jax.lax.scan(q_block, None, (qs, pqs))

@@ -73,9 +73,9 @@ def rglru_apply(p, u, *, compute_dtype=jnp.bfloat16, init_state=None,
         # fold the carried state into step 0: h_0 = a_0 h_init + b_0
         b = b.at[:, 0].add(a[:, 0] * init_state.astype(jnp.float32))
 
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
         return al * ar, ar * bl + br
 
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)

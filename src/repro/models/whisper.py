@@ -13,8 +13,6 @@ the decoder self-attention cache; ``decode_step`` is then decoder-only.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 

@@ -25,7 +25,9 @@ class OptState:
 
 
 def adamw_init(params) -> OptState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return OptState(
         mu=jax.tree.map(zeros, params),
         nu=jax.tree.map(zeros, params),

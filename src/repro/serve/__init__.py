@@ -46,6 +46,14 @@ Lambda cache (lambda_cache.py)
     how many tiles are scanned, which is exactly what
     ``benchmarks/bench_serve.py`` measures (warm tile-skip counters
     strictly dominate cold).
+
+Mutable indexes (``repro.stream``)
+    The engine also fronts a :class:`repro.stream.MutableP2HIndex`:
+    each micro-batch pins one epoch-numbered snapshot (atomic view of
+    the live point set under concurrent inserts/deletes), dispatch sees
+    the snapshot's segment fan-out, and the lambda cache is epoch-tagged
+    so caps recorded before a delete are invalidated rather than
+    silently unsound.
 """
 from repro.serve.batcher import MicroBatcher, MicroBatch, Request
 from repro.serve.dispatch import DispatchPolicy, Route

@@ -58,16 +58,24 @@ class DispatchPolicy:
         return self.frac_table[-1][1]
 
     def route(self, occupancy: int, k: int, recall_target: float = 1.0,
-              *, sharded: bool = False) -> Route:
-        """Pick a backend for a micro-batch with ``occupancy`` live slots."""
+              *, sharded: bool = False, segments: int = 1) -> Route:
+        """Pick a backend for a micro-batch with ``occupancy`` live slots.
+
+        ``segments``: fan-out width of the serving view (a mutable
+        snapshot's segment stack + delta; 1 for a frozen index).  Each
+        segment is one backend call, so the per-call batched-matmul
+        amortization kicks in ``segments`` times per query -- the dfs
+        latency window shrinks proportionally.
+        """
         if recall_target < 1.0:
             return Route("beam", frac=self.frac_for_recall(recall_target),
                          reason=f"recall_target={recall_target:g}")
         if sharded:
             return Route("sharded", reason="index is sharded")
-        if occupancy <= self.small_batch:
+        dfs_window = max(1, self.small_batch // max(1, segments))
+        if occupancy <= dfs_window:
             return Route("dfs", reason=f"occupancy={occupancy}"
-                                       f"<={self.small_batch}")
+                                       f"<={dfs_window}")
         if self.prefer_pallas:
             return Route("pallas", reason=f"occupancy={occupancy}: batched")
         return Route("sweep", reason=f"occupancy={occupancy}: batched")

@@ -1,7 +1,10 @@
 """P2HEngine: micro-batched, auto-dispatched, lambda-warm P2HNNS serving.
 
 Composes the three serve-layer pieces over a built :class:`P2HIndex`
-(and optionally a :class:`ShardedP2HIndex`):
+(optionally with a :class:`ShardedP2HIndex`) or a mutable
+:class:`repro.stream.MutableP2HIndex` -- in the mutable case every
+micro-batch pins one epoch-numbered snapshot and the lambda cache is
+epoch-tagged (see ``lambda_cache``):
 
   * :class:`~repro.serve.batcher.MicroBatcher` -- fixed-shape slot batches
     (jitted backends never retrace);
@@ -53,19 +56,35 @@ class P2HEngine:
 
         import jax
 
-        self.index = index
+        from repro.stream.mutable import MutableP2HIndex
+
+        if isinstance(index, MutableP2HIndex):
+            # update-aware serving: every micro-batch pins one snapshot,
+            # lambda-cache entries are epoch-tagged (see lambda_cache)
+            assert sharded is None, "mutable + sharded not supported yet"
+            self.mutable = index
+            self.index = None
+            d = index.d
+            # monotone over inserts; refreshed from the pinned snapshot
+            # each batch so caps always use a current R >= max ||x||
+            self.max_norm = float(index.max_norm)
+        else:
+            self.mutable = None
+            self.index = index
+            tree = index.tree
+            d = tree.d
+            # R >= max ||x||: every point lies in the root ball
+            self.max_norm = float(
+                np.linalg.norm(np.asarray(tree.centers[0]))
+                + float(tree.radii[0]))
         self.sharded = sharded
-        tree = index.tree
         self.policy = policy or DispatchPolicy()
         if self.policy.prefer_pallas is None:
             self.policy = dataclasses.replace(
                 self.policy,
                 prefer_pallas=jax.default_backend() == "tpu")
-        self.batcher = MicroBatcher(tree.d, slot_size)
-        # R >= max ||x||: every point lies in the root ball
-        self.max_norm = float(np.linalg.norm(np.asarray(tree.centers[0]))
-                              + float(tree.radii[0]))
-        self.cache = (LambdaCache(tree.d, self.max_norm, n_bits=cache_bits,
+        self.batcher = MicroBatcher(d, slot_size)
+        self.cache = (LambdaCache(d, self.max_norm, n_bits=cache_bits,
                                   seed=seed) if use_cache else None)
         self._results: dict[int, tuple] = {}
         self._route_counts: dict[str, int] = {}
@@ -124,26 +143,42 @@ class P2HEngine:
     # execution
     # ------------------------------------------------------------------
     def _execute(self, mb, *, method: str | None = None):
+        # pin one consistent view for the whole micro-batch: concurrent
+        # inserts/deletes publish new snapshots, this batch never sees them
+        snap = self.mutable.snapshot() if self.mutable is not None else None
+        fanout = (len(snap.segments) + len(snap.deltas)) if snap else 1
         route = (Route(method, frac=self.policy.frac_for_recall(
                      mb.recall_target) if method == "beam" else 1.0,
                      reason="forced")
                  if method is not None else
                  self.policy.route(mb.occupancy, mb.k, mb.recall_target,
-                                   sharded=self.sharded is not None))
+                                   sharded=self.sharded is not None,
+                                   segments=fanout))
         # warm start: valid caps only for exact routes (a cap bounds the
         # *exact* k-th distance; applying it to a budgeted beam could prune
         # candidates the direct beam would have returned)
         caps = None
         if self.cache is not None and route.method != "beam":
+            if snap is not None:
+                # inserts may have grown max ||x||; the cap formula needs
+                # the current bound (monotone, so only ever grows)
+                self.cache.max_norm = max(self.cache.max_norm,
+                                          snap.max_norm)
             # look up live slots only: pad rows replicate slot 0, and
             # counting them would inflate hit/miss stats with dead work
             c = np.full((len(mb.queries),), np.inf, np.float32)
             c[:mb.occupancy] = self.cache.lookup(
-                mb.queries[:mb.occupancy], mb.k)
+                mb.queries[:mb.occupancy], mb.k,
+                min_epoch=snap.last_delete_epoch if snap else 0)
             if np.isfinite(c).any():
                 caps = c
         t0 = time.perf_counter()
-        bd, bi, cnt = self._run_backend(route, mb.queries, mb.k, caps)
+        if snap is not None:
+            bd, bi, cnt = snap.query(mb.queries, mb.k, method=route.method,
+                                     frac=route.frac, lambda_cap=caps,
+                                     return_counters=True)
+        else:
+            bd, bi, cnt = self._run_backend(route, mb.queries, mb.k, caps)
         bd, bi = np.asarray(bd), np.asarray(bi)
         dt = time.perf_counter() - t0
 
@@ -151,7 +186,10 @@ class P2HEngine:
             self._results[ticket] = (bd[slot], bi[slot])
         if self.cache is not None:
             live = slice(0, mb.occupancy)
-            self.cache.update(mb.queries[live], mb.k, bd[live, mb.k - 1])
+            self.cache.update(
+                mb.queries[live], mb.k, bd[live, mb.k - 1],
+                epoch=snap.epoch if snap else 0,
+                min_epoch=snap.last_delete_epoch if snap else 0)
         # stats
         self._route_counts[route.method] = (
             self._route_counts.get(route.method, 0) + 1)

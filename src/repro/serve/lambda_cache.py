@@ -31,7 +31,25 @@ top-k member -- results are bit-identical to the uncapped run.
 Buckets are sign-random-projection (SRP) signatures of the query
 direction: ``m`` fixed Gaussian directions, one bit each, sign-canonical
 (the signature of -q equals the signature of q).  Nearby normals collide;
-each bucket stores the last (query, lambda) pair per ``k``.
+each bucket stores the last (query, lambda, epoch) triple per ``k``.
+
+**Epoch tagging (mutable indexes).**  Against a
+:class:`repro.stream.MutableP2HIndex` the live point set changes between
+batches, and the validity argument above is epoch-sensitive:
+
+  * an *insert* only ever shrinks the true k-th distance, so a cap
+    recorded before it stays a valid upper bound;
+  * a *delete* can grow the true k-th distance (removing a current
+    top-k member promotes the (k+1)-th), so a cap recorded before it
+    may silently exclude the new true answer -- stale caps are unsound,
+    not just suboptimal.
+
+Entries therefore carry the epoch of the snapshot that produced them,
+and ``lookup(min_epoch=...)`` treats entries older than the caller's
+``last_delete_epoch`` as misses (and evicts them).  The engine pins one
+snapshot per micro-batch and threads ``snapshot.last_delete_epoch`` /
+``snapshot.epoch`` through lookup/update, so warm serving over a
+mutating index stays exact (regression-tested in tests/test_serve.py).
 """
 from __future__ import annotations
 
@@ -58,9 +76,10 @@ class LambdaCache:
         self.proj = rng.standard_normal((self.d, n_bits)).astype(np.float32)
         self._pow2 = (1 << np.arange(n_bits, dtype=np.int64))
         self.max_entries = int(max_entries)
-        self._store: dict = {}  # (sig, k) -> (q (d,) f32, lam float)
+        self._store: dict = {}  # (sig, k) -> (q (d,) f32, lam float, epoch)
         self.hits = 0
         self.misses = 0
+        self.stale_evictions = 0
 
     # ------------------------------------------------------------------
     def signatures(self, queries: np.ndarray) -> np.ndarray:
@@ -73,17 +92,28 @@ class LambdaCache:
         return (bits.astype(np.int64) @ self._pow2).astype(np.int64)
 
     # ------------------------------------------------------------------
-    def lookup(self, queries: np.ndarray, k: int) -> np.ndarray:
-        """Valid per-query caps (B,) f32; +inf where the cache has nothing."""
+    def lookup(self, queries: np.ndarray, k: int, *,
+               min_epoch: int = 0) -> np.ndarray:
+        """Valid per-query caps (B,) f32; +inf where the cache has nothing.
+
+        ``min_epoch``: the serving snapshot's ``last_delete_epoch``.
+        Entries recorded before it predate a delete, may under-bound the
+        current true k-th distance, and are treated as misses (evicted).
+        """
         q = np.asarray(queries, np.float32)
         caps = np.full((q.shape[0],), np.inf, np.float32)
         sigs = self.signatures(q)
         for i, sig in enumerate(sigs):
-            ent = self._store.get((int(sig), int(k)))
+            key = (int(sig), int(k))
+            ent = self._store.get(key)
+            if ent is not None and ent[2] < min_epoch:
+                del self._store[key]  # stale: a delete invalidated it
+                self.stale_evictions += 1
+                ent = None
             if ent is None:
                 self.misses += 1
                 continue
-            q0, lam = ent
+            q0, lam, _ = ent
             delta = min(float(np.linalg.norm(q[i] - q0)),
                         float(np.linalg.norm(q[i] + q0)))
             # additive slack: the backends compute their lower bounds in
@@ -101,9 +131,13 @@ class LambdaCache:
         return caps
 
     # ------------------------------------------------------------------
-    def update(self, queries: np.ndarray, k: int, kth_dists: np.ndarray):
+    def update(self, queries: np.ndarray, k: int, kth_dists: np.ndarray,
+               *, epoch: int = 0, min_epoch: int = 0):
         """Record served results; ``kth_dists`` are per-query k-th returned
-        distances (upper bounds on the true k-th by construction)."""
+        distances (upper bounds on the true k-th by construction).
+        ``epoch`` tags the snapshot that produced them; an existing entry
+        older than ``min_epoch`` is replaced unconditionally (its lambda
+        is no longer trustworthy, however small)."""
         q = np.asarray(queries, np.float32)
         lam = np.asarray(kth_dists, np.float32).reshape(-1)
         sigs = self.signatures(q)
@@ -113,17 +147,20 @@ class LambdaCache:
             key = (int(sig), int(k))
             prev = self._store.get(key)
             # keep the tighter center: prefer the smaller lambda
-            if prev is None or lam[i] <= prev[1]:
-                self._store[key] = (q[i].copy(), float(lam[i]))
+            if (prev is None or prev[2] < min_epoch
+                    or lam[i] <= prev[1]):
+                self._store[key] = (q[i].copy(), float(lam[i]), int(epoch))
         while len(self._store) > self.max_entries:  # FIFO-ish eviction
             self._store.pop(next(iter(self._store)))
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         return {"entries": len(self._store), "hits": self.hits,
-                "misses": self.misses}
+                "misses": self.misses,
+                "stale_evictions": self.stale_evictions}
 
     def clear(self):
         self._store.clear()
         self.hits = 0
         self.misses = 0
+        self.stale_evictions = 0

@@ -1,0 +1,45 @@
+"""Mutable LSM-style P2HNNS index: streaming inserts/deletes over the
+Ball/BC-Tree with background compaction and atomic snapshot publishing.
+
+The frozen ``P2HIndex`` serves a dataset built once; real traffic churns
+while queries are in flight.  This package opens that read-write
+workload class by exploiting the paper's central property -- Ball-Tree
+construction is roughly linear and 1-3 orders of magnitude cheaper than
+the hashing baselines' indexing -- which makes *rebuild* a viable update
+primitive:
+
+``DeltaBuffer`` (delta.py)
+    The memtable.  Inserts append to a fixed-capacity host buffer,
+    queried by an exact brute-force scan jitted on the static capacity.
+
+``Segment`` / ``Snapshot`` / ``DeltaView`` (snapshot.py)
+    Sealed ``FlatTree`` segments with global-id tables; deletes mask a
+    point's ``point_ids`` row to -1 (the backends' existing pad
+    convention, so every bound stays valid).  A ``Snapshot`` is an
+    epoch-numbered immutable view published atomically; queries fan out
+    across delta + segments with any backend (dfs / sweep / beam /
+    pallas), threading a running lambda cap and merging with the sharded
+    exchange's ``merge_topk``.
+
+``CompactionPolicy`` (compaction.py)
+    When to fold the delta / tombstone-heavy segments into fresh trees
+    (size, tombstone-ratio, and fan-out thresholds).
+
+``MutableP2HIndex`` (mutable.py)
+    The front-end: ``insert`` / ``delete`` / ``query`` / ``snapshot``,
+    inline or background compaction, and ``save``/``load`` through
+    ``repro.checkpoint`` so a serving process recovers without a write
+    log.
+
+Serving integration: ``P2HEngine(mutable_index)`` pins one snapshot per
+micro-batch and epoch-tags its lambda cache -- warm caps recorded before
+a delete are invalidated instead of silently unsound (a delete can grow
+the true k-th distance above a cached cap).
+"""
+from repro.stream.compaction import CompactionPlan, CompactionPolicy
+from repro.stream.delta import DeltaBuffer
+from repro.stream.mutable import MutableP2HIndex
+from repro.stream.snapshot import DeltaView, Segment, Snapshot
+
+__all__ = ["MutableP2HIndex", "Snapshot", "Segment", "DeltaView",
+           "DeltaBuffer", "CompactionPolicy", "CompactionPlan"]

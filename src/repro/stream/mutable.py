@@ -1,0 +1,583 @@
+"""MutableP2HIndex: streaming inserts/deletes over the Ball/BC-Tree.
+
+The LSM-style composition (module layout mirrors the classic
+memtable / sstable / compactor split):
+
+  * writes (``insert`` / ``delete``) hit a fixed-capacity
+    :class:`~repro.stream.delta.DeltaBuffer` and per-segment tombstone
+    masks -- O(1) and O(segment-copy) respectively, never a tree rebuild
+    on the write path;
+  * a :class:`~repro.stream.compaction.CompactionPolicy` decides when to
+    fold the delta (and tombstone-heavy segments) into fresh sealed
+    :class:`~repro.stream.snapshot.Segment` trees via the paper's cheap
+    ``build_tree`` path -- inline by default, or on a background thread
+    (``background=True``) so the write path never stalls on a rebuild;
+  * every mutation publishes a new epoch-numbered immutable
+    :class:`~repro.stream.snapshot.Snapshot` by swapping one reference --
+    queries (and serving-engine micro-batches, which pin a snapshot) are
+    never torn.
+
+Thread model: one re-entrant writer lock serializes mutations and
+snapshot publishing; readers are lock-free (they read ``self._snapshot``
+once).  Background compaction pins its inputs under the lock (sealing
+the delta and swapping in a fresh one), builds trees outside the lock,
+and republishes under the lock -- deletes that raced the build are
+recorded and re-applied to the new segment before it becomes visible.
+
+Durability: ``save``/``load`` persist every segment/delta through
+:class:`repro.checkpoint.CheckpointManager` (atomic rename, per-leaf
+checksums), so a serving process can recover the mutable index without
+replaying a write log.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import search
+from repro.core.balltree import append_ones, normalize_query
+from repro.stream.compaction import CompactionPlan, CompactionPolicy
+from repro.stream.delta import DeltaBuffer
+from repro.stream.snapshot import DeltaView, Segment, Snapshot
+
+__all__ = ["MutableP2HIndex"]
+
+_STATE_FORMAT = "p2h-stream"
+_STATE_VERSION = 1
+
+
+class MutableP2HIndex:
+    """Read-write P2HNNS index with LSM-style segments + delta buffer."""
+
+    def __init__(self, dim: int, *, n0: int = 128, variant: str = "bc",
+                 policy: CompactionPolicy | None = None, seed: int = 0,
+                 background: bool = False):
+        assert variant in ("ball", "bc"), variant
+        self.dim = int(dim)  # raw point dimensionality
+        self.d = self.dim + 1  # with the appended 1-coordinate
+        self.n0 = int(n0)
+        self.variant = variant
+        self.policy = policy or CompactionPolicy()
+        self.seed = int(seed)
+
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._delta = DeltaBuffer(self.policy.delta_capacity, self.d)
+        self._sealed: list[DeltaBuffer] = []  # frozen inputs of an
+        #                                       in-flight compaction
+        self._segments: dict[int, Segment] = {}  # uid -> segment (ordered)
+        self._locator: dict[int, tuple] = {}  # gid -> location
+        self._next_gid = 0
+        self._next_uid = 0
+        self._epoch = 0
+        self._last_delete_epoch = 0
+        self._live_count = 0
+        self._max_norm = 0.0
+        self._compacting = False
+        self._pending_tombstones: set[int] = set()
+        self._compact_errors: list[BaseException] = []
+        self.compaction_log: list[dict] = []  # wall/rows/reason per run
+
+        self._background = bool(background)
+        self._stop = False
+        self._compact_event = threading.Event()
+        self._compactor: threading.Thread | None = None
+        if self._background:
+            self._compactor = threading.Thread(
+                target=self._compactor_loop, daemon=True)
+            self._compactor.start()
+
+        self._snapshot = self._make_snapshot()
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_data(cls, data: np.ndarray, **kw: Any) -> "MutableP2HIndex":
+        """Bulk-load: seed with one sealed segment over ``data``."""
+        data = np.asarray(data, np.float32)
+        self = cls(data.shape[1], **kw)
+        pts = append_ones(data)
+        with self._lock:
+            gids = np.arange(len(pts), dtype=np.int32)
+            seg = Segment.from_points(self._alloc_uid(), pts, gids,
+                                      n0=self.n0, seed=self.seed)
+            self._segments[seg.uid] = seg
+            for g in gids:
+                self._locator[int(g)] = ("seg", seg.uid, int(g))
+            self._next_gid = len(pts)
+            self._live_count = len(pts)
+            self._max_norm = float(np.linalg.norm(pts, axis=1).max())
+            self._publish()
+        return self
+
+    # ------------------------------------------------------------------
+    # write path
+    # ------------------------------------------------------------------
+    def insert(self, point: np.ndarray) -> int:
+        """Insert one raw (dim,) point; returns its stable global id."""
+        x = np.asarray(point, np.float32).reshape(-1)
+        assert x.shape == (self.dim,), (x.shape, self.dim)
+        with self._lock:
+            gid = self._insert_one_locked(x)
+            self._publish()
+            self._maybe_compact_locked()
+        return gid
+
+    def insert_batch(self, points: np.ndarray) -> np.ndarray:
+        """Bulk insert: one lock hold, one snapshot publish at the end
+        (readers only ever need the final state visible; mid-batch
+        compactions still run when the delta fills)."""
+        pts = np.atleast_2d(np.asarray(points, np.float32))
+        assert pts.shape[1] == self.dim, (pts.shape, self.dim)
+        gids = np.empty((len(pts),), np.int32)
+        with self._lock:
+            for i, x in enumerate(pts):
+                gids[i] = self._insert_one_locked(x)
+            self._publish()
+            self._maybe_compact_locked()
+        return gids
+
+    def _insert_one_locked(self, x: np.ndarray) -> int:
+        """Append one point to the delta (compacting if full); no
+        publish -- callers publish once per API call."""
+        x1 = np.concatenate([x, np.ones((1,), np.float32)])
+        while self._delta.full:
+            self._raise_compact_errors_locked()  # don't spin forever
+            if self._background:
+                self._compact_event.set()
+                self._cond.wait(timeout=1.0)  # compactor republishes
+            else:
+                self._compact_locked(self._plan_locked())
+        gid = self._next_gid
+        self._next_gid += 1
+        row = self._delta.append(x1, gid)
+        self._locator[gid] = ("delta", id(self._delta), row)
+        self._live_count += 1
+        self._max_norm = max(self._max_norm, float(np.linalg.norm(x1)))
+        return gid
+
+    def delete(self, gid: int) -> bool:
+        """Delete by global id; returns False if the id is not live."""
+        gid = int(gid)
+        with self._lock:
+            loc = self._locator.pop(gid, None)
+            if loc is None:
+                return False
+            if loc[0] == "delta":
+                _, buf_id, row = loc
+                for buf in [self._delta, *self._sealed]:
+                    if id(buf) == buf_id:
+                        buf.tombstone(row)
+                        break
+            else:
+                _, uid, local = loc
+                self._segments[uid] = self._segments[uid].with_tombstone(local)
+            if self._compacting:
+                # the in-flight compaction copied its input rows before
+                # this delete; re-apply it to the output at publish time
+                self._pending_tombstones.add(gid)
+            self._live_count -= 1
+            self._last_delete_epoch = self._epoch + 1  # epoch after publish
+            self._publish()
+            self._maybe_compact_locked()
+        return True
+
+    # ------------------------------------------------------------------
+    # read path
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        """The current published snapshot (atomic reference read)."""
+        return self._snapshot
+
+    @property
+    def epoch(self) -> int:
+        return self._snapshot.epoch
+
+    @property
+    def live_count(self) -> int:
+        return self._snapshot.live_count
+
+    @property
+    def max_norm(self) -> float:
+        return self._snapshot.max_norm
+
+    def query(self, queries, k: int = 1, *, method: str | None = None,
+              frac: float = 1.0, normalize: bool = True,
+              return_stats: bool = False, engine: Any = None, **kw: Any):
+        """Top-k over the live set; same contract as ``P2HIndex.query``.
+
+        Pins one snapshot for the whole call.  ``method=None`` means
+        ``"sweep"`` on the direct path; ``engine=`` routes through a
+        :class:`repro.serve.P2HEngine` constructed over this index
+        (micro-batching + epoch-tagged lambda warm start), where
+        ``method=None`` means auto-dispatch and an explicit method forces
+        that route.
+        """
+        if engine is not None:
+            assert engine.mutable is self, "engine serves a different index"
+            engine.flush()
+            before = engine.total_counters()
+            bd, bi = engine.query(queries, k, normalize=normalize,
+                                  method=method, **kw)
+            if return_stats:
+                delta = engine.total_counters() - before
+                return bd, bi, search.SearchStats(delta)
+            return bd, bi
+        q = np.atleast_2d(np.asarray(queries))
+        if normalize:
+            q = normalize_query(q)
+        snap = self.snapshot()
+        bd, bi, cnt = snap.query(q.astype(np.float32), k,
+                                 method=method or "sweep",
+                                 frac=frac, return_counters=True, **kw)
+        if return_stats:
+            return bd, bi, search.SearchStats(cnt)
+        return bd, bi
+
+    # ------------------------------------------------------------------
+    # compaction
+    # ------------------------------------------------------------------
+    def compact(self, *, force: bool = False) -> bool:
+        """Run one compaction now (inline, even in background mode).
+
+        ``force=True`` merges everything (all segments + delta) into one
+        fresh segment regardless of policy thresholds.  Returns whether a
+        compaction ran.
+        """
+        with self._lock:
+            # an in-flight background run owns _pending_tombstones and the
+            # sealed delta; pinning on top of it would corrupt both
+            while self._compacting:
+                self._cond.wait(timeout=1.0)
+            self._raise_compact_errors_locked()
+            if force:
+                plan = CompactionPlan(
+                    include_delta=True,
+                    segment_uids=tuple(self._segments),
+                    reason="forced")
+            else:
+                plan = self._plan_locked()
+            if not plan:
+                return False
+            self._compact_locked(plan)
+        return True
+
+    def wait_compaction(self) -> None:
+        """Block until no background compaction is in flight; re-raises
+        any error a background run died with."""
+        with self._lock:
+            while self._compacting:
+                self._cond.wait(timeout=1.0)
+            self._raise_compact_errors_locked()
+
+    def _raise_compact_errors_locked(self) -> None:
+        if self._compact_errors:
+            raise self._compact_errors.pop(0)
+
+    def close(self) -> None:
+        """Stop the background compactor (if any); safe to call twice."""
+        self._stop = True
+        self._compact_event.set()
+        if self._compactor is not None:
+            self._compactor.join(timeout=5.0)
+            self._compactor = None
+
+    def _plan_locked(self) -> CompactionPlan:
+        plan = self.policy.plan(delta_full=self._delta.full,
+                                delta_live=self._delta.live,
+                                segments=tuple(self._segments.values()))
+        if not plan and self._sealed:
+            # leftovers a failed background run never published: any
+            # compaction consumes them (see _pin_inputs_locked), so force
+            # one even though no policy threshold tripped
+            plan = CompactionPlan(include_delta=True, segment_uids=(),
+                                  reason="recover sealed delta")
+        return plan
+
+    def _maybe_compact_locked(self) -> None:
+        if self._compacting:
+            return
+        if self._plan_locked():
+            if self._background:
+                self._compact_event.set()
+            else:
+                self._compact_locked(self._plan_locked())
+
+    def _compactor_loop(self) -> None:
+        while True:
+            self._compact_event.wait()
+            self._compact_event.clear()
+            if self._stop:
+                return
+            try:
+                with self._lock:
+                    plan = self._plan_locked()
+                    if not plan or self._compacting:
+                        continue
+                    pin = self._pin_inputs_locked(plan)
+                built = self._build_segment(pin)
+                with self._lock:
+                    self._publish_compaction_locked(pin, built)
+                    self._cond.notify_all()
+            except BaseException as e:
+                # never die wedged: writers blocked on _compacting would
+                # hang forever.  Pinned buffers stay in _sealed (still
+                # queryable, rows not lost) and the next compaction
+                # re-consumes them; the error surfaces at the next
+                # wait_compaction()/compact()/save()/insert().
+                with self._lock:
+                    # keep the latest error only: retries of a persistent
+                    # failure surface once, not once per attempt
+                    self._compact_errors = [e]
+                    self._compacting = False
+                    self._pending_tombstones = set()
+                    self._cond.notify_all()
+
+    def _compact_locked(self, plan: CompactionPlan) -> None:
+        """Inline compaction: pin + build + publish while holding the
+        lock (the write-path pause that bench_stream measures)."""
+        if not plan:
+            return
+        pin = self._pin_inputs_locked(plan)
+        built = self._build_segment(pin)
+        self._publish_compaction_locked(pin, built)
+        self._cond.notify_all()
+
+    # -- compaction phases (pin/build/publish) --------------------------
+    def _pin_inputs_locked(self, plan: CompactionPlan) -> dict:
+        """Seal the delta (if consumed) and collect live input rows.
+
+        Any buffers already in ``_sealed`` are leftovers of a failed
+        background run; every compaction re-consumes them so their rows
+        eventually land in a segment."""
+        t0 = time.perf_counter()
+        pinned = list(self._sealed)
+        if plan.include_delta:
+            buf = self._delta
+            self._sealed.append(buf)
+            self._delta = DeltaBuffer(self.policy.delta_capacity, self.d)
+            pinned.append(buf)
+        parts_p, parts_g = [], []
+        for buf in pinned:
+            p, g = buf.live_rows()
+            parts_p.append(p)
+            parts_g.append(g)
+        for uid in plan.segment_uids:
+            p, g = self._segments[uid].live_rows()
+            parts_p.append(p)
+            parts_g.append(g)
+        self._compacting = True
+        self._pending_tombstones = set()
+        return dict(plan=plan, bufs=pinned, t0=t0,
+                    points=(np.concatenate(parts_p) if parts_p
+                            else np.zeros((0, self.d), np.float32)),
+                    gids=(np.concatenate(parts_g) if parts_g
+                          else np.zeros((0,), np.int32)))
+
+    def _build_segment(self, pin: dict) -> Segment | None:
+        """Tree build over the pinned rows -- runs outside the lock in
+        background mode."""
+        if len(pin["gids"]) == 0:
+            return None
+        return Segment.from_points(self._alloc_uid(), pin["points"],
+                                   pin["gids"], n0=self.n0,
+                                   seed=self.seed + self._epoch + 1)
+
+    def _publish_compaction_locked(self, pin: dict,
+                                   built: Segment | None) -> None:
+        plan: CompactionPlan = pin["plan"]
+        if built is not None and self._pending_tombstones:
+            # deletes that raced the build: mask them in the new segment
+            # (vectorized -- this runs under the writer lock)
+            dead = np.fromiter(self._pending_tombstones, np.int64,
+                               len(self._pending_tombstones))
+            locals_ = np.nonzero(np.isin(built.gids, dead))[0]
+            built = built.with_tombstones(locals_)
+        for buf in pin["bufs"]:
+            self._sealed.remove(buf)
+        for uid in plan.segment_uids:
+            del self._segments[uid]
+        if built is not None:
+            self._segments[built.uid] = built
+            pid = np.asarray(built.tree.point_ids)
+            live_locals = pid[pid >= 0]
+            for local in live_locals:
+                self._locator[int(built.gids[local])] = (
+                    "seg", built.uid, int(local))
+        self._compacting = False
+        self._pending_tombstones = set()
+        self._publish()
+        self.compaction_log.append(dict(
+            wall_s=time.perf_counter() - pin["t0"],
+            rows=int(len(pin["gids"])),
+            reason=plan.reason,
+            epoch=self._epoch,
+        ))
+
+    # ------------------------------------------------------------------
+    def _alloc_uid(self) -> int:
+        with self._lock:
+            uid = self._next_uid
+            self._next_uid += 1
+            return uid
+
+    def _make_snapshot(self) -> Snapshot:
+        views = [DeltaView(*self._delta.frozen_view())]
+        views += [DeltaView(*b.frozen_view()) for b in self._sealed]
+        return Snapshot(
+            epoch=self._epoch,
+            last_delete_epoch=self._last_delete_epoch,
+            segments=tuple(self._segments.values()),
+            deltas=tuple(views),
+            live_count=self._live_count,
+            max_norm=self._max_norm,
+            variant=self.variant,
+            n0=self.n0,
+            d=self.d,
+        )
+
+    def _publish(self) -> None:
+        """Atomic snapshot swap (caller holds the lock)."""
+        self._epoch += 1
+        self._snapshot = self._make_snapshot()
+
+    # ------------------------------------------------------------------
+    # persistence (through repro.checkpoint)
+    # ------------------------------------------------------------------
+    def save(self, directory: str) -> int:
+        """Persist segments + delta atomically; returns the step saved.
+
+        Joins any in-flight background compaction *under the writer
+        lock* (a pin between a bare wait and the state walk would move
+        delta rows into a sealed buffer the walk doesn't see), and folds
+        any failure-leftover sealed buffers into a segment first -- the
+        serialized state is always exactly segments + one active delta.
+        """
+        from repro.checkpoint import CheckpointManager
+
+        with self._lock:
+            while self._compacting:
+                self._cond.wait(timeout=1.0)
+            self._raise_compact_errors_locked()
+            if self._sealed:  # leftovers of a failed background run
+                self._compact_locked(self._plan_locked())
+            state, meta = self._state_pytree_locked()
+            step = self._epoch
+            mgr = CheckpointManager(directory, keep=2)
+            mgr.save(step, state, blocking=True, extra_meta=meta)
+        return step
+
+    def _state_pytree_locked(self):
+        assert not self._compacting and not self._sealed
+        seg_arrays, seg_meta = [], []
+        for seg in self._segments.values():
+            arrays = {
+                f.name: np.asarray(getattr(seg.tree, f.name))
+                for f in dataclasses.fields(seg.tree)
+                if not f.metadata.get("static", False)
+            }
+            arrays["gids"] = np.asarray(seg.gids)
+            arrays["row_of_local"] = np.asarray(seg.row_of_local)
+            seg_arrays.append(arrays)
+            seg_meta.append(dict(
+                uid=seg.uid, live=seg.live, dead=seg.dead,
+                tree_static={
+                    f.name: getattr(seg.tree, f.name)
+                    for f in dataclasses.fields(seg.tree)
+                    if f.metadata.get("static", False)
+                },
+            ))
+        state = {
+            "segments": seg_arrays,
+            "delta": {"points": self._delta.points, "gids": self._delta.gids},
+        }
+        meta = {
+            "format": _STATE_FORMAT,
+            "version": _STATE_VERSION,
+            "dim": self.dim,
+            "n0": self.n0,
+            "variant": self.variant,
+            "seed": self.seed,
+            "epoch": self._epoch,
+            "last_delete_epoch": self._last_delete_epoch,
+            "next_gid": self._next_gid,
+            "next_uid": self._next_uid,
+            "live_count": self._live_count,
+            "max_norm": self._max_norm,
+            "delta_length": self._delta.length,
+            "policy": dataclasses.asdict(self.policy),
+            "segments": seg_meta,
+        }
+        return state, meta
+
+    @classmethod
+    def load(cls, directory: str, *, step: int | None = None,
+             background: bool = False) -> "MutableP2HIndex":
+        """Recover a mutable index saved by :meth:`save`."""
+        from repro.checkpoint import CheckpointManager
+        from repro.core.balltree import FlatTree
+
+        mgr = CheckpointManager(directory)
+        if step is None:
+            step = mgr.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {directory}")
+        leaves, manifest = mgr.restore_leaves(step)
+        meta = manifest["extra"]
+        if meta.get("format") != _STATE_FORMAT:
+            raise ValueError(f"{directory}: not a {_STATE_FORMAT} checkpoint")
+        if meta.get("version", 0) > _STATE_VERSION:
+            raise ValueError(f"{directory}: state version "
+                             f"{meta['version']} is newer than this reader")
+
+        # rebuild the skeleton save() flattened, then unflatten into it
+        import jax
+
+        array_fields = sorted(
+            [f.name for f in dataclasses.fields(FlatTree)
+             if not f.metadata.get("static", False)] + ["gids",
+                                                        "row_of_local"])
+        skeleton = {
+            "segments": [{k: 0 for k in array_fields}
+                         for _ in meta["segments"]],
+            "delta": {"points": 0, "gids": 0},
+        }
+        treedef = jax.tree_util.tree_structure(skeleton)
+        state = jax.tree_util.tree_unflatten(treedef, leaves)
+
+        policy = CompactionPolicy(**meta["policy"])
+        self = cls(meta["dim"], n0=meta["n0"], variant=meta["variant"],
+                   policy=policy, seed=meta["seed"], background=background)
+        with self._lock:
+            for arrays, smeta in zip(state["segments"], meta["segments"]):
+                gids = np.asarray(arrays.pop("gids"), np.int32)
+                row_of_local = np.asarray(arrays.pop("row_of_local"),
+                                          np.int32)
+                tree = FlatTree(**arrays, **smeta["tree_static"])
+                seg = Segment(uid=smeta["uid"], tree=tree, gids=gids,
+                              row_of_local=row_of_local,
+                              live=smeta["live"], dead=smeta["dead"])
+                self._segments[seg.uid] = seg
+                pid = np.asarray(tree.point_ids)
+                for local in pid[pid >= 0]:
+                    self._locator[int(gids[local])] = (
+                        "seg", seg.uid, int(local))
+            self._delta.points[:] = state["delta"]["points"]
+            self._delta.gids[:] = np.asarray(state["delta"]["gids"],
+                                             np.int32)
+            self._delta.length = meta["delta_length"]
+            for row in range(self._delta.length):
+                gid = int(self._delta.gids[row])
+                if gid >= 0:
+                    self._locator[gid] = ("delta", id(self._delta), row)
+            self._next_gid = meta["next_gid"]
+            self._next_uid = max(meta["next_uid"], self._next_uid)
+            self._epoch = meta["epoch"]
+            self._last_delete_epoch = meta["last_delete_epoch"]
+            self._live_count = meta["live_count"]
+            self._max_norm = meta["max_norm"]
+            self._snapshot = self._make_snapshot()
+        return self

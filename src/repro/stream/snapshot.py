@@ -1,0 +1,227 @@
+"""Immutable, epoch-numbered views of the mutable index.
+
+A :class:`Snapshot` is what queries run against: a tuple of sealed
+:class:`Segment`\\ s (each an ordinary :class:`FlatTree` plus a local-id
+-> global-id table) and a frozen view of the delta buffer.  Snapshots are
+*published atomically* -- every mutation builds a new snapshot off-line
+and swaps one reference -- so an in-flight query (or a serving engine
+micro-batch that pinned the snapshot) always sees one consistent point
+set, never a half-applied write.
+
+Deletes never touch tree geometry.  A tombstoned point's row in the
+segment's ``point_ids`` array is set to -1 -- the exact convention every
+search backend (dfs / sweep / beam / pallas) already uses for leaf
+padding, so masked points are excluded from candidates while all node
+and point bounds stay valid (they bound a superset of the live points)
+and the collaborative inner-product identity still holds for the stored
+centers/counts.  This is what makes delete O(segment) instead of
+O(rebuild).
+
+``Snapshot.query`` fans a query batch across the delta and every segment
+with any existing backend, threading a running lambda cap: the delta is
+scanned first (cheap, exact), its k-th distance -- an upper bound on the
+global k-th -- caps the first segment, and each segment's merged k-th
+caps the next.  This is the serial-form of the sharded two-round
+exchange in ``repro.core.distributed``, and the final merge is that
+module's machinery (``repro.core.search.merge_topk``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search
+from repro.core.balltree import FlatTree
+from repro.stream.delta import delta_topk
+
+__all__ = ["Segment", "Snapshot", "DeltaView"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaView:
+    """Frozen view of one delta buffer (active or sealed-for-compaction).
+
+    ``points`` is the buffer's shared append-only block -- rows past
+    ``length`` were unassigned at freeze time and their ``gids`` entries
+    are -1 in the frozen copy, so later appends are invisible here.
+    """
+
+    points: np.ndarray  # (C, d) shared
+    gids: np.ndarray  # (C,) frozen copy, -1 = empty/deleted
+    length: int
+
+    @property
+    def live(self) -> int:
+        return int((self.gids >= 0).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A sealed FlatTree over a batch of points + global-id bookkeeping."""
+
+    uid: int  # stable identity across tombstone rewrites
+    tree: FlatTree
+    gids: np.ndarray  # (n_seg,) i32 -- local point id -> global id
+    row_of_local: np.ndarray  # (n_seg,) i32 -- local id -> tree.points row
+    live: int
+    dead: int
+
+    @classmethod
+    def from_points(cls, uid: int, points: np.ndarray, gids: np.ndarray,
+                    *, n0: int, seed: int = 0) -> "Segment":
+        """Seal a batch of already-appended (n, d) points into a tree."""
+        from repro.core.balltree import build_tree
+
+        tree = build_tree(points, n0=n0, seed=seed, append_one=False)
+        pid = np.asarray(tree.point_ids)
+        row_of_local = np.full((len(gids),), -1, np.int32)
+        rows = np.nonzero(pid >= 0)[0]
+        row_of_local[pid[rows]] = rows
+        return cls(uid=uid, tree=tree, gids=np.asarray(gids, np.int32),
+                   row_of_local=row_of_local, live=len(gids), dead=0)
+
+    # ------------------------------------------------------------------
+    @property
+    def tombstone_frac(self) -> float:
+        total = self.live + self.dead
+        return self.dead / total if total else 0.0
+
+    def with_tombstone(self, local_id: int) -> "Segment":
+        """New segment with one point masked out (point_ids row -> -1)."""
+        pid = np.array(self.tree.point_ids)  # host copy
+        pid[self.row_of_local[local_id]] = -1
+        tree = dataclasses.replace(self.tree, point_ids=pid)
+        return dataclasses.replace(self, tree=tree,
+                                   live=self.live - 1, dead=self.dead + 1)
+
+    def with_tombstones(self, local_ids) -> "Segment":
+        """Batch form of :meth:`with_tombstone` (one array copy total)."""
+        local_ids = np.asarray(list(local_ids), np.int64)
+        if local_ids.size == 0:
+            return self
+        pid = np.array(self.tree.point_ids)
+        pid[self.row_of_local[local_ids]] = -1
+        tree = dataclasses.replace(self.tree, point_ids=pid)
+        return dataclasses.replace(self, tree=tree,
+                                   live=self.live - int(local_ids.size),
+                                   dead=self.dead + int(local_ids.size))
+
+    def live_rows(self):
+        """(points, gids) of live rows -- compaction input."""
+        pid = np.asarray(self.tree.point_ids)
+        rows = np.nonzero(pid >= 0)[0]
+        pts = np.asarray(self.tree.points)[rows]
+        return pts, self.gids[pid[rows]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One consistent, immutable view of the live point set."""
+
+    epoch: int
+    #: epoch of the most recent delete; a lambda cap recorded at epoch e
+    #: is valid for this snapshot iff e >= last_delete_epoch (inserts only
+    #: shrink the true k-th distance, deletes can grow it).
+    last_delete_epoch: int
+    segments: tuple  # tuple[Segment, ...]
+    deltas: tuple  # tuple[DeltaView, ...] -- active first, then sealed
+    live_count: int
+    max_norm: float  # >= max ||x|| over live points (monotone)
+    variant: str  # "ball" | "bc"
+    n0: int
+    d: int
+
+    # ------------------------------------------------------------------
+    @property
+    def delta_live(self) -> int:
+        return sum(v.live for v in self.deltas)
+
+    def live_points(self):
+        """The live set as ``(points (n, d), gids (n,))`` host arrays --
+        the brute-force-oracle view (tests/benchmarks) and the input a
+        from-scratch rebuild would consume."""
+        pts, gids = [], []
+        for v in self.deltas:
+            mask = v.gids >= 0
+            pts.append(v.points[mask])
+            gids.append(v.gids[mask])
+        for s in self.segments:
+            p, g = s.live_rows()
+            pts.append(p)
+            gids.append(g)
+        if not pts:
+            return (np.zeros((0, self.d), np.float32),
+                    np.zeros((0,), np.int32))
+        return np.concatenate(pts), np.concatenate(gids)
+
+    def query(self, queries, k: int = 1, *, method: str = "sweep",
+              frac: float = 1.0, lambda_cap=None, return_counters: bool = False):
+        """Exact (or beam-budgeted) top-k over the snapshot's live set.
+
+        ``queries`` must already be normalized (B, d) float32.  Returned
+        ids are *global* ids.  ``lambda_cap`` (B,) optional valid upper
+        bounds on the true k-th distance (serving engine warm start);
+        budgeted ``method="beam"`` never consumes caps (same rule as the
+        engine) and is budgeted on segments only -- the delta is always
+        scanned exactly.
+        """
+        q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
+        B = q.shape[0]
+        counters = np.zeros((8,), np.int64)
+
+        bd = jnp.full((B, k), jnp.inf, jnp.float32)
+        bi = jnp.full((B, k), -1, jnp.int32)
+        for view in self.deltas:
+            dd, di = delta_topk(view.points, view.gids, q, k)
+            bd, bi = search.merge_topk(jnp.concatenate([bd, dd], axis=1),
+                                       jnp.concatenate([bi, di], axis=1), k)
+            counters[search.C_VERIFIED] += view.live * B
+        exact = method != "beam"
+        ext = (None if lambda_cap is None or not exact
+               else jnp.asarray(lambda_cap, jnp.float32).reshape(-1))
+        for seg in self.segments:
+            if seg.live == 0:
+                continue
+            cap = None
+            if exact:
+                cap = bd[:, k - 1]  # running merged k-th: a valid cap
+                if ext is not None:
+                    cap = jnp.minimum(cap, ext)
+            sd, si, cnt = _segment_query(seg.tree, q, k, method=method,
+                                         frac=frac, variant=self.variant,
+                                         lambda_cap=cap)
+            sg = jnp.where(si >= 0,
+                           jnp.take(jnp.asarray(seg.gids),
+                                    jnp.clip(si, 0, len(seg.gids) - 1)),
+                           -1)
+            bd, bi = search.merge_topk(jnp.concatenate([bd, sd], axis=1),
+                                       jnp.concatenate([bi, sg], axis=1), k)
+            counters += np.asarray(cnt, np.int64)
+        bd, bi = np.asarray(bd), np.asarray(bi)
+        if return_counters:
+            return bd, bi, counters
+        return bd, bi
+
+
+def _segment_query(tree: FlatTree, q, k: int, *, method: str, frac: float,
+                   variant: str, lambda_cap) -> Any:
+    """One backend call over one segment tree (local ids returned)."""
+    is_bc = variant == "bc"
+    common = dict(use_ball=is_bc, use_cone=is_bc)
+    if method == "dfs":
+        return search.dfs_search(tree, q, k, use_collab=is_bc,
+                                 lambda_cap=lambda_cap, **common)
+    if method == "sweep":
+        return search.sweep_search(tree, q, k, frac=1.0,
+                                   lambda_cap=lambda_cap, **common)
+    if method == "beam":
+        return search.sweep_search(tree, q, k, frac=frac, **common)
+    if method == "pallas":
+        from repro.kernels import ops
+
+        return ops.sweep_search_pallas(tree, q, k, frac=1.0,
+                                       lambda_cap=lambda_cap, **common)
+    raise ValueError(f"unknown method {method!r}")

@@ -3,7 +3,6 @@ checkpoint -> bit-identical final state vs an uninterrupted run; plus
 watchdog/straggler units and elastic resharding."""
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

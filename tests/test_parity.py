@@ -15,7 +15,6 @@ import jax.numpy as jnp
 from _hyp import HAVE_HYPOTHESIS, hypothesis, st
 
 from repro.core import (
-    P2HIndex,
     append_ones,
     dfs_search,
     exact_search,

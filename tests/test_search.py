@@ -158,6 +158,52 @@ def test_api_roundtrip(tmp_path, setup):
     np.testing.assert_allclose(d1, d2, rtol=1e-6)
 
 
+def test_api_save_is_npz_not_pickle(tmp_path):
+    """The on-disk index is a versioned .npz + JSON header: loading never
+    executes code.  Legacy pickles only load behind allow_pickle=True."""
+    import dataclasses
+    import json
+    import pickle
+    import zipfile
+
+    data, qraw = _mk()
+    idx = P2HIndex.build(data, n0=128)
+    path = str(tmp_path / "idx.p2h")
+    idx.save(path)
+    assert zipfile.is_zipfile(path)  # npz container, not a pickle stream
+    with np.load(path, allow_pickle=False) as z:  # loads w/o pickle
+        header = json.loads(str(z["__header__"][()]))
+    assert header["format"] == "p2h-index" and header["version"] >= 2
+
+    # legacy pickle: guarded behind an explicit opt-in
+    from repro.core.balltree import FlatTree
+
+    arrays = {f.name: np.asarray(getattr(idx.tree, f.name))
+              for f in dataclasses.fields(FlatTree)
+              if not f.metadata.get("static", False)}
+    meta = {f.name: getattr(idx.tree, f.name)
+            for f in dataclasses.fields(FlatTree)
+            if f.metadata.get("static", False)}
+    legacy = str(tmp_path / "legacy.pkl")
+    with open(legacy, "wb") as fh:
+        pickle.dump(dict(arrays=arrays, meta=meta, variant=idx.variant,
+                         report=dataclasses.asdict(idx.report)), fh)
+    with pytest.raises(ValueError, match="allow_pickle"):
+        P2HIndex.load(legacy)
+    idx2 = P2HIndex.load(legacy, allow_pickle=True)
+    d1, i1 = idx.query(qraw, k=3)
+    d2, i2 = idx2.query(qraw, k=3)
+    assert np.array_equal(i1, i2)
+
+    # a future-versioned file is rejected, not mis-parsed
+    newer = str(tmp_path / "newer.p2h")
+    header["version"] = 99
+    with open(newer, "wb") as fh:
+        np.savez(fh, __header__=np.asarray(json.dumps(header)), **arrays)
+    with pytest.raises(ValueError, match="newer"):
+        P2HIndex.load(newer)
+
+
 def test_normalized_query_gives_true_p2h_distance():
     """After normalization, |<x,q>| is the geometric P2H distance (Eq. 1)."""
     rng = np.random.default_rng(7)

@@ -91,6 +91,25 @@ def test_lambda_cache_skips_invalid_updates():
     assert not np.isfinite(cache.lookup(q, 3)).any()
 
 
+def test_lambda_cache_epoch_invalidation_rules():
+    """Entries older than min_epoch (i.e. recorded before the serving
+    snapshot's last delete) read as misses and are evicted; entries at or
+    after it keep hitting; a fresher re-update replaces a stale entry
+    even when its lambda is larger (the old smaller lambda is unsound)."""
+    cache = LambdaCache(4, max_norm=1.0)
+    q = np.ones((1, 4), np.float32)
+    cache.update(q, 2, np.array([0.5]), epoch=3)
+    assert np.isfinite(cache.lookup(q, 2, min_epoch=3)).all()  # same epoch
+    assert not np.isfinite(cache.lookup(q, 2, min_epoch=4)).any()  # stale
+    assert cache.stale_evictions == 1
+    assert not np.isfinite(cache.lookup(q, 2, min_epoch=0)).any()  # evicted
+    # stale entry replaced even by a *larger* lambda from a newer epoch
+    cache.update(q, 2, np.array([0.5]), epoch=3)
+    cache.update(q, 2, np.array([0.9]), epoch=6, min_epoch=5)
+    caps = cache.lookup(q, 2, min_epoch=5)
+    assert np.isfinite(caps).all() and caps[0] >= 0.9
+
+
 # ---------------------------------------------------------- engine parity
 ROUTES = ["dfs", "sweep", "pallas", "beam"]
 
@@ -196,6 +215,53 @@ def test_engine_warm_repeat_exact_at_zero_lambda():
         assert (i2 >= 0).all(), m
 
 
+def test_engine_epoch_invalidation_delete_of_kth_neighbor(setup):
+    """Regression for the mutable-serving soundness hazard: after warming
+    the cache, deleting current top-k members grows the true k-th
+    distance above the cached caps; the epoch-tagged cache must read
+    those caps as stale so the promoted neighbors are still returned."""
+    import jax.numpy as jnp
+
+    from repro.core import exact_search
+    from repro.stream import CompactionPolicy, MutableP2HIndex
+
+    data, idx, q, ed, ei = setup
+    m = MutableP2HIndex.from_data(
+        data, n0=128, policy=CompactionPolicy(delta_capacity=64))
+    eng = P2HEngine(m, slot_size=8, policy=DispatchPolicy(
+        prefer_pallas=False))
+
+    def oracle(k):
+        X, G = m.snapshot().live_points()
+        d, i = exact_search(jnp.asarray(X),
+                            jnp.asarray(normalize_query(q)), k=k)
+        return np.asarray(d), G[np.asarray(i)]
+
+    d1, i1 = m.query(q, k=K, engine=eng)  # cold pass warms the cache
+    od, og = oracle(K)
+    assert np.array_equal(i1, og)
+    assert eng.cache.stats()["entries"] > 0
+    # delete every query's current kth neighbor (and its nearest, for
+    # good measure): true kth distances strictly grow past the caps
+    for gid in {int(g) for g in i1[:, K - 1]} | {int(g)
+                                                 for g in i1[:, 0]}:
+        assert m.delete(gid)
+    d2, i2 = m.query(q, k=K, engine=eng)  # warm pass over mutated index
+    od2, og2 = oracle(K)
+    assert np.array_equal(i2, og2), "stale warm cap excluded a promoted " \
+                                    "neighbor"
+    np.testing.assert_allclose(d2, od2, rtol=1e-4, atol=1e-5)
+    assert eng.cache.stats()["stale_evictions"] > 0
+    # inserts alone never invalidate: warm pass stays exact with hits
+    before_hits = eng.cache.stats()["hits"]
+    for i in range(8):
+        m.insert(data[i] * 0.5)
+    d3, i3 = m.query(q, k=K, engine=eng)
+    od3, og3 = oracle(K)
+    assert np.array_equal(i3, og3)
+    assert eng.cache.stats()["hits"] > before_hits
+
+
 def test_engine_stats_shape(setup):
     data, idx, q, ed, ei = setup
     eng = P2HEngine(idx, slot_size=8)
@@ -204,4 +270,5 @@ def test_engine_stats_shape(setup):
     assert st["queries"] == len(q)
     assert st["batches"] == sum(st["routes"].values())
     assert np.isfinite(st["latency_p50_ms"])
-    assert set(st["lambda_cache"]) == {"entries", "hits", "misses"}
+    assert set(st["lambda_cache"]) == {"entries", "hits", "misses",
+                                       "stale_evictions"}

@@ -20,7 +20,9 @@ from repro.parallel.sharding import logical_to_spec, pad_vocab
 def test_adamw_converges_quadratic():
     params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray(2.0)}
     opt = adamw_init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
     for _ in range(200):
         g = jax.grad(loss)(params)
         params, opt = adamw_update(g, opt, params, lr=0.05, weight_decay=0.0)
