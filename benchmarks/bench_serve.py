@@ -24,6 +24,11 @@ import time
 
 import numpy as np
 
+try:
+    from benchmarks.common import pct
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from common import pct
+
 
 def make_workload(n=30000, d=32, n_clusters=64, scale=2.5, n_queries=32,
                   n_hot=4, seed=7):
@@ -35,11 +40,6 @@ def make_workload(n=30000, d=32, n_clusters=64, scale=2.5, n_queries=32,
     hot = rng.normal(size=(n_hot, d + 1)).astype(np.float32)
     trace = np.stack([hot[i % n_hot] for i in range(n_queries)])
     return data, trace
-
-
-def pct(xs, p):
-    xs = sorted(xs)
-    return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
 
 
 def bench_naive(idx, trace, k):

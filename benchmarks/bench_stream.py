@@ -26,12 +26,10 @@ import time
 
 import numpy as np
 
-
-def pct(xs, p):
-    if not xs:
-        return float("nan")
-    xs = sorted(xs)
-    return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
+try:
+    from benchmarks.common import pct
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from common import pct
 
 
 def run_stream(args):

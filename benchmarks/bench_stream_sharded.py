@@ -1,0 +1,203 @@
+"""Sharded streaming-index benchmark: per-shard write throughput,
+cross-shard query latency, and compaction pause overlap.
+
+The scaling story the sharded mutable index buys (vs the single-host
+``bench_stream`` workload):
+
+  * **per-shard write throughput** -- gid allocation is the only global
+    synchronization point; routed inserts/deletes are shard-local, so
+    write ops/s is reported both aggregate and per shard;
+  * **cross-shard query p50/p99** -- every query batch pins an epoch
+    vector and runs the two-round lambda exchange across heterogeneous
+    shard states (delta-only, multi-segment, mid-compaction), served
+    through a warm per-shard-invalidating lambda cache;
+  * **compaction pause overlap** -- shards compact independently; the
+    fraction of total compaction wall time during which >= 2 shards were
+    compacting concurrently measures how much restructuring work the
+    sharding hides (0 on a single-host index by construction).
+
+Run:
+
+    PYTHONPATH=src python benchmarks/bench_stream_sharded.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.common import pct
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from common import pct
+
+
+def overlap_stats(log):
+    """From a merged compaction log (t0_s/t1_s intervals per run):
+    (total compaction seconds, seconds with >= 2 shards compacting)."""
+    events = []
+    for c in log:
+        events.append((c["t0_s"], 1))
+        events.append((c["t1_s"], -1))
+    events.sort()
+    total = overlap = 0.0
+    depth = 0
+    prev = None
+    for t, delta in events:
+        if prev is not None and depth > 0:
+            total += t - prev
+            if depth >= 2:
+                overlap += t - prev
+        depth += delta
+        prev = t
+    return total, overlap
+
+
+def run_sharded_stream(args):
+    from repro.core import exact_search
+    from repro.core.balltree import normalize_query
+    from repro.serve import DispatchPolicy, P2HEngine
+    from repro.stream import CompactionPolicy, ShardedMutableP2HIndex
+
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(args.seed)
+    data = rng.normal(size=(args.n, args.d)).astype(np.float32)
+    policy = CompactionPolicy(delta_capacity=args.delta_capacity)
+    m = ShardedMutableP2HIndex.from_data(
+        data, args.shards, n0=args.n0, policy=policy,
+        background=args.background)
+    eng = P2HEngine(m, slot_size=8,
+                    policy=DispatchPolicy(prefer_pallas=False))
+
+    hot = rng.normal(size=(4, args.d + 1)).astype(np.float32)
+    live = list(range(args.n))
+    ins_lat, del_lat, q_lat = [], [], []
+    per_shard_writes = np.zeros((args.shards,), np.int64)
+    t_all = time.perf_counter()
+    for step in range(args.ops):
+        r = rng.random()
+        if r < 0.55:
+            x = rng.normal(size=args.d).astype(np.float32)
+            t0 = time.perf_counter()
+            gid = m.insert(x)
+            ins_lat.append(time.perf_counter() - t0)
+            per_shard_writes[m.router.shard_of(gid)] += 1
+            live.append(gid)
+        elif r < 0.8 and live:
+            gid = live.pop(int(rng.integers(len(live))))
+            t0 = time.perf_counter()
+            m.delete(gid)
+            del_lat.append(time.perf_counter() - t0)
+            per_shard_writes[m.router.shard_of(gid)] += 1
+        else:
+            trace = np.stack([hot[i % len(hot)] for i in range(8)])
+            t0 = time.perf_counter()
+            eng.query(trace, k=args.k)
+            q_lat.append(time.perf_counter() - t0)
+    m.wait_compaction()
+    wall = time.perf_counter() - t_all
+
+    # exactness spot-check on the final live set
+    snap = m.snapshot()
+    bd, bi = m.query(hot, k=args.k)
+    X, _ = snap.live_points()
+    ed, _ = exact_search(jnp.asarray(X),
+                         jnp.asarray(normalize_query(hot)), k=args.k)
+    assert np.allclose(bd, np.asarray(ed), rtol=1e-4, atol=1e-5), \
+        "sharded stream results diverged from the brute-force oracle"
+
+    log = m.compaction_log
+    pauses = [c["wall_s"] for c in log]
+    compact_total, compact_overlap = overlap_stats(log)
+    shard_tp = per_shard_writes / max(wall, 1e-9)
+    res = {
+        "shards": args.shards,
+        "ops": args.ops,
+        "wall_s": wall,
+        "inserts": len(ins_lat),
+        "deletes": len(del_lat),
+        "query_batches": len(q_lat),
+        "insert_p50_us": pct(ins_lat, 50) * 1e6,
+        "insert_p99_us": pct(ins_lat, 99) * 1e6,
+        "delete_p50_us": pct(del_lat, 50) * 1e6,
+        "delete_p99_us": pct(del_lat, 99) * 1e6,
+        "query_p50_ms": pct(q_lat, 50) * 1e3,
+        "query_p99_ms": pct(q_lat, 99) * 1e3,
+        "write_ops_per_s": (len(ins_lat) + len(del_lat)) / max(wall, 1e-9),
+        "shard_write_ops_per_s_min": float(shard_tp.min()),
+        "shard_write_ops_per_s_max": float(shard_tp.max()),
+        "compactions": len(pauses),
+        "compact_p50_ms": pct(pauses, 50) * 1e3,
+        "compact_max_ms": (max(pauses) * 1e3) if pauses else float("nan"),
+        "compact_total_s": compact_total,
+        "compact_overlap_s": compact_overlap,
+        "compact_overlap_frac": (compact_overlap / compact_total
+                                 if compact_total else 0.0),
+        "final_live": m.live_count,
+        "epoch": m.epoch,
+        "segments": len(snap.segments),
+        "lambda_cache": eng.cache.stats(),
+    }
+    m.close()
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--n0", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--ops", type=int, default=2000)
+    ap.add_argument("--delta-capacity", type=int, default=256)
+    ap.add_argument("--background", action="store_true", default=True)
+    ap.add_argument("--no-background", dest="background",
+                    action="store_false")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+
+    res = run_sharded_stream(args)
+    print(f"workload: {res['inserts']} inserts, {res['deletes']} deletes, "
+          f"{res['query_batches']} query batches over {res['shards']} "
+          f"shards in {res['wall_s']:.2f}s "
+          f"-> {res['write_ops_per_s']:.0f} write ops/s "
+          f"(per shard {res['shard_write_ops_per_s_min']:.0f}.."
+          f"{res['shard_write_ops_per_s_max']:.0f})")
+    print(f"insert p50 {res['insert_p50_us']:.0f} us  "
+          f"p99 {res['insert_p99_us']:.0f} us   "
+          f"delete p50 {res['delete_p50_us']:.0f} us  "
+          f"p99 {res['delete_p99_us']:.0f} us")
+    print(f"cross-shard query p50 {res['query_p50_ms']:.1f} ms  "
+          f"p99 {res['query_p99_ms']:.1f} ms (two-round exchange, warm "
+          f"per-shard cache: {res['lambda_cache']})")
+    print(f"compactions: {res['compactions']} "
+          f"(p50 {res['compact_p50_ms']:.1f} ms, "
+          f"max {res['compact_max_ms']:.1f} ms, "
+          f"overlap {res['compact_overlap_frac']:.0%} of "
+          f"{res['compact_total_s']*1e3:.0f} ms total); "
+          f"final: {res['final_live']} live in {res['segments']} segments, "
+          f"epoch vector {res['epoch']}")
+    return res
+
+
+def run(csv) -> None:
+    """benchmarks.run registry entry point: CSV rows for bench_output."""
+    res = main(["--n", "8000", "--ops", "600", "--shards", "4",
+                "--delta-capacity", "48"])
+    csv("stream_sharded,metric,value")
+    for key in ("shards", "write_ops_per_s", "shard_write_ops_per_s_min",
+                "shard_write_ops_per_s_max", "insert_p50_us",
+                "insert_p99_us", "delete_p50_us", "delete_p99_us",
+                "query_p50_ms", "query_p99_ms", "compactions",
+                "compact_p50_ms", "compact_max_ms", "compact_overlap_frac",
+                "final_live", "segments"):
+        csv(f"stream_sharded,{key},{res[key]:.3f}"
+            if isinstance(res[key], float)
+            else f"stream_sharded,{key},{res[key]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,14 @@ def recall(ids, gt_ids):
     return hits / gt_ids.size
 
 
+def pct(xs, p):
+    """Nearest-rank percentile of a list of samples (nan when empty)."""
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
+
+
 def timeit(fn, *args, repeats=3, **kw):
     fn(*args, **kw)  # warmup/compile
     ts = []

@@ -10,7 +10,7 @@ import time
 def main() -> None:
     from benchmarks import (bench_ablations, bench_distributed,
                             bench_indexing, bench_kernel, bench_query,
-                            bench_serve, bench_stream)
+                            bench_serve, bench_stream, bench_stream_sharded)
 
     t0 = time.time()
     emitted = []
@@ -27,6 +27,8 @@ def main() -> None:
         ("Distributed lambda exchange", bench_distributed),
         ("Serving engine (batching + lambda cache)", bench_serve),
         ("Streaming index (insert/delete/compaction)", bench_stream),
+        ("Sharded streaming index (routed writes, two-round exchange)",
+         bench_stream_sharded),
     ]
     for title, mod in mods:
         print(f"# === {title} ===", flush=True)

@@ -1,1 +1,4 @@
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.manager import (CheckpointManager,  # noqa: F401
+                                      read_json, write_json_atomic)
+
+__all__ = ["CheckpointManager", "read_json", "write_json_atomic"]

@@ -33,7 +33,24 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "write_json_atomic", "read_json"]
+
+
+def write_json_atomic(path: str, obj: Any) -> None:
+    """Write a JSON document with the checkpoint directory's atomicity
+    discipline: fsync'd tmp file + rename, so a reader never sees a torn
+    manifest (used by the sharded streaming index's top-level manifest)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(obj, fh)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+
+
+def read_json(path: str) -> Any:
+    with open(path) as fh:
+        return json.load(fh)
 
 
 def _flatten(tree):

@@ -42,7 +42,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import search
 from repro.core.balltree import FlatTree, build_tree
 
-__all__ = ["ShardedP2HIndex"]
+__all__ = ["ShardedP2HIndex", "two_round_exchange"]
 
 # shard_map moved to the jax top level (and check_rep was renamed to
 # check_vma) in newer releases; support both.  The check is disabled either
@@ -108,6 +108,112 @@ def _pad_tree(t: FlatTree, m: int, L: int, n0: int) -> FlatTree:
         num_leaves=L,
         max_depth=t.max_depth,
     )
+
+
+def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
+                       method: str = "sweep", frac: float = 1.0,
+                       lambda_cap=None, return_info: bool = False):
+    """Host-orchestrated two-round lambda exchange over *callable shard
+    backends* -- the frozen forest's exchange generalized to heterogeneous
+    per-shard states.
+
+    ``shards`` is any sequence of backends with the ``Snapshot.query``
+    signature::
+
+        backend.query(q, k, method=..., frac=..., lambda_cap=...,
+                      return_counters=True, include_deltas=...)
+            -> (bd, bi, counters)
+
+    answering with *global* ids over already-normalized ``(B, d)``
+    queries.  In particular each element can be a
+    :class:`repro.stream.Snapshot` pinned from one shard of a sharded
+    mutable index -- delta-only, multi-segment, and mid-compaction shard
+    states all serve through the same two rounds:
+
+      round 1:  each shard runs its cheap budgeted prefix scan
+                (``method="beam"`` at ``frac1``; delta rows are always
+                scanned exactly).  A shard's returned k-th distance is
+                the distance of k real points, hence an upper bound on
+                that shard's true k-th and therefore on the global k-th
+                (the union of shards holds >= k candidates below it).
+                The min over shards -- tightened further by an
+                externally-valid ``lambda_cap`` such as the serving
+                engine's lambda cache -- is ``lambda0``.
+
+      round 2:  each shard runs the full ``method`` backend over its
+                *segments only* (``include_deltas=False`` -- round 1
+                already scanned every delta exactly, and its candidates
+                reach the final merge) with ``lambda_cap=lambda0``;
+                distant shards prune almost all of their tiles
+                immediately.  ``merge_topk`` de-duplicates and merges
+                both rounds' candidates.  Exact for exact round-2
+                methods: pruning only ever discards candidates whose
+                lower bound exceeds an upper bound on the global k-th
+                distance, and a delta point displaced from its round-1
+                top-k was displaced by k closer real points, so it
+                cannot be a global top-k member.
+
+    ``method="beam"`` is budgeted and never consumes caps (the engine's
+    rule): one capless round at ``frac``.  ``return_info=True`` appends a
+    dict with ``lambda0`` (B,) and per-shard ``round1_kth`` (S, B) -- the
+    regression surface for the exchange-validity invariant test.
+    """
+    shards = tuple(shards)  # iterated once per round: reject generators
+    q = jnp.asarray(np.atleast_2d(np.asarray(queries)), jnp.float32)
+    B = q.shape[0]
+    counters = np.zeros((8,), np.int64)
+    ext = (None if lambda_cap is None
+           else jnp.asarray(lambda_cap, jnp.float32).reshape(-1))
+    lam0 = None
+    round1_kth = []
+    parts_d, parts_i = [], []
+    if method != "beam":
+        lam = jnp.full((B,), jnp.inf, jnp.float32) if ext is None else ext
+        for s in shards:
+            bd1, bi1, c1 = s.query(q, k, method="beam", frac=frac1,
+                                   return_counters=True)
+            counters += np.asarray(c1, np.int64)
+            kth1 = jnp.asarray(bd1)[:, k - 1]
+            round1_kth.append(np.asarray(kth1))
+            lam = jnp.minimum(lam, kth1)
+            # round-1 candidates (incl. the exact delta scan) feed the
+            # final merge, so round 2 need not rescan the deltas
+            parts_d.append(jnp.asarray(bd1))
+            parts_i.append(jnp.asarray(bi1))
+        lam0 = lam
+    round2_kth = []
+    for s in shards:
+        bd, bi, cnt = s.query(q, k, method=method, frac=frac,
+                              lambda_cap=lam0, return_counters=True,
+                              include_deltas=method == "beam")
+        counters += np.asarray(cnt, np.int64)
+        round2_kth.append(np.asarray(jnp.asarray(bd)[:, k - 1]))
+        parts_d.append(jnp.asarray(bd))
+        parts_i.append(jnp.asarray(bi))
+    if parts_d:
+        bd, bi = search.merge_topk(jnp.concatenate(parts_d, axis=1),
+                                   jnp.concatenate(parts_i, axis=1), k)
+        bd, bi = np.asarray(bd), np.asarray(bi)
+    else:
+        bd = np.full((B, k), np.inf, np.float32)
+        bi = np.full((B, k), -1, np.int32)
+    if return_info:
+        r2 = (np.stack(round2_kth) if round2_kth
+              else np.zeros((0, B), np.float32))
+        r1 = (np.stack(round1_kth) if round1_kth
+              else np.full_like(r2, np.inf))
+        # per-shard local k-th upper bounds: round-1 beam k-ths are
+        # always real-point distances; round-2 k-ths are too when finite
+        # (a heavily-pruned far shard leaves +inf slots).  Their
+        # elementwise min is each shard's tightest valid local bound --
+        # the lambda cache's per-shard invalidation unit.
+        info = {
+            "lambda0": None if lam0 is None else np.asarray(lam0),
+            "round1_kth": r1,
+            "shard_kth": np.minimum(r1, r2) if len(r2) else r2,
+        }
+        return bd, bi, counters, info
+    return bd, bi, counters
 
 
 @dataclasses.dataclass

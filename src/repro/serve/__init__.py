@@ -54,6 +54,14 @@ Mutable indexes (``repro.stream``)
     the snapshot's segment fan-out, and the lambda cache is epoch-tagged
     so caps recorded before a delete are invalidated rather than
     silently unsound.
+
+Sharded mutable indexes (``repro.stream.sharded``)
+    Fronting a :class:`repro.stream.ShardedMutableP2HIndex`, each
+    micro-batch pins an epoch *vector* (one per-shard snapshot each)
+    and is served through the two-round lambda exchange; cache entries
+    store per-shard local k-th bounds tagged with per-shard epochs, so
+    one shard's delete drops one component instead of evicting the
+    entry (see ``lambda_cache``).
 """
 from repro.serve.batcher import MicroBatcher, MicroBatch, Request
 from repro.serve.dispatch import DispatchPolicy, Route

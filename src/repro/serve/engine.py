@@ -1,10 +1,13 @@
 """P2HEngine: micro-batched, auto-dispatched, lambda-warm P2HNNS serving.
 
 Composes the three serve-layer pieces over a built :class:`P2HIndex`
-(optionally with a :class:`ShardedP2HIndex`) or a mutable
-:class:`repro.stream.MutableP2HIndex` -- in the mutable case every
-micro-batch pins one epoch-numbered snapshot and the lambda cache is
-epoch-tagged (see ``lambda_cache``):
+(optionally with a :class:`ShardedP2HIndex`), a mutable
+:class:`repro.stream.MutableP2HIndex`, or a sharded mutable
+:class:`repro.stream.ShardedMutableP2HIndex` -- in the mutable cases
+every micro-batch pins one epoch-numbered snapshot (an epoch *vector*
+pin across shards for the sharded index, served through the two-round
+lambda exchange) and the lambda cache is epoch-tagged per shard (see
+``lambda_cache``):
 
   * :class:`~repro.serve.batcher.MicroBatcher` -- fixed-shape slot batches
     (jitted backends never retrace);
@@ -57,12 +60,15 @@ class P2HEngine:
         import jax
 
         from repro.stream.mutable import MutableP2HIndex
+        from repro.stream.sharded import ShardedMutableP2HIndex
 
-        if isinstance(index, MutableP2HIndex):
-            # update-aware serving: every micro-batch pins one snapshot,
+        if isinstance(index, (MutableP2HIndex, ShardedMutableP2HIndex)):
+            # update-aware serving: every micro-batch pins one snapshot
+            # (an epoch *vector* pin for the sharded mutable index),
             # lambda-cache entries are epoch-tagged (see lambda_cache)
             assert sharded is None, "mutable + sharded not supported yet"
             self.mutable = index
+            self._sharded_mutable = isinstance(index, ShardedMutableP2HIndex)
             self.index = None
             d = index.d
             # monotone over inserts; refreshed from the pinned snapshot
@@ -70,6 +76,7 @@ class P2HEngine:
             self.max_norm = float(index.max_norm)
         else:
             self.mutable = None
+            self._sharded_mutable = False
             self.index = index
             tree = index.tree
             d = tree.d
@@ -173,7 +180,15 @@ class P2HEngine:
             if np.isfinite(c).any():
                 caps = c
         t0 = time.perf_counter()
-        if snap is not None:
+        shard_kth = None
+        if snap is not None and self._sharded_mutable:
+            # epoch-vector pin: the two-round exchange also reports each
+            # shard's local k-th bound for per-shard cache components
+            bd, bi, cnt, info = snap.query(
+                mb.queries, mb.k, method=route.method, frac=route.frac,
+                lambda_cap=caps, return_counters=True, return_info=True)
+            shard_kth = info["shard_kth"]  # (S, B)
+        elif snap is not None:
             bd, bi, cnt = snap.query(mb.queries, mb.k, method=route.method,
                                      frac=route.frac, lambda_cap=caps,
                                      return_counters=True)
@@ -186,10 +201,16 @@ class P2HEngine:
             self._results[ticket] = (bd[slot], bi[slot])
         if self.cache is not None:
             live = slice(0, mb.occupancy)
-            self.cache.update(
-                mb.queries[live], mb.k, bd[live, mb.k - 1],
-                epoch=snap.epoch if snap else 0,
-                min_epoch=snap.last_delete_epoch if snap else 0)
+            if shard_kth is not None:
+                self.cache.update_sharded(
+                    mb.queries[live], mb.k, shard_kth.T[live],
+                    epoch=snap.epoch,
+                    min_epoch=snap.last_delete_epoch)
+            else:
+                self.cache.update(
+                    mb.queries[live], mb.k, bd[live, mb.k - 1],
+                    epoch=snap.epoch if snap else 0,
+                    min_epoch=snap.last_delete_epoch if snap else 0)
         # stats
         self._route_counts[route.method] = (
             self._route_counts.get(route.method, 0) + 1)

@@ -50,12 +50,54 @@ and ``lookup(min_epoch=...)`` treats entries older than the caller's
 snapshot per micro-batch and threads ``snapshot.last_delete_epoch`` /
 ``snapshot.epoch`` through lookup/update, so warm serving over a
 mutating index stays exact (regression-tested in tests/test_serve.py).
+
+**Epoch vectors (sharded mutable indexes).**  Against a
+:class:`repro.stream.ShardedMutableP2HIndex` every shard publishes its
+own epoch, and a served batch pins an epoch *vector* (one component per
+shard).  A *merged* global k-th would be invalidated by a delete in any
+shard, so sharded entries instead store **per-shard** local k-th bounds
+``lam_s``, each tagged with its shard's epoch.  Any one shard's local
+k-th upper-bounds the global k-th (that shard alone holds k points
+within it), so a valid cap needs only the *surviving* components:
+
+    cap  =  min over valid s of  (lam_s + R * min(||q-q'||, ||q+q'||))
+
+Invalidation is therefore keyed per shard: a delete in shard 2 bumps
+only component 2's floor, dropping only that component -- the entry
+keeps serving (a little looser) from the other shards' bounds instead
+of the whole cache entry being evicted.  An entry dies only when every
+component is stale, or the shard layout changed (vector length
+mismatch).  Scalar epochs are the 1-vector special case of the same
+scheme.
 """
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["LambdaCache"]
+__all__ = ["LambdaCache", "epoch_is_stale"]
+
+
+def _as_epoch(e):
+    """Normalize an epoch tag: scalars stay ints, vectors become tuples."""
+    if isinstance(e, (tuple, list, np.ndarray)):
+        return tuple(int(x) for x in e)
+    return int(e)
+
+
+def epoch_is_stale(entry_epoch, min_epoch) -> bool:
+    """Is a cap recorded at ``entry_epoch`` unsound for a serving view
+    whose delete-epoch floor is ``min_epoch``?  Both may be scalars
+    (single-host index) or per-shard vectors (sharded index); staleness
+    is componentwise -- stale iff any component predates its floor, or
+    the shard layout changed (length mismatch)."""
+    e, m = _as_epoch(entry_epoch), _as_epoch(min_epoch)
+    if isinstance(e, int) and isinstance(m, int):
+        return e < m
+    e = (e,) if isinstance(e, int) else e
+    m = (m,) if isinstance(m, int) else m
+    if len(e) != len(m):
+        return True
+    return any(a < b for a, b in zip(e, m))
 
 # strict inflation: keeps caps > true kth under f32 rounding so warm runs
 # stay bit-identical (see module docstring)
@@ -93,12 +135,14 @@ class LambdaCache:
 
     # ------------------------------------------------------------------
     def lookup(self, queries: np.ndarray, k: int, *,
-               min_epoch: int = 0) -> np.ndarray:
+               min_epoch=0) -> np.ndarray:
         """Valid per-query caps (B,) f32; +inf where the cache has nothing.
 
-        ``min_epoch``: the serving snapshot's ``last_delete_epoch``.
-        Entries recorded before it predate a delete, may under-bound the
-        current true k-th distance, and are treated as misses (evicted).
+        ``min_epoch``: the serving snapshot's ``last_delete_epoch`` --
+        a scalar, or a per-shard vector when serving a sharded mutable
+        index.  Entries stale under :func:`epoch_is_stale` predate a
+        delete in some covered shard, may under-bound the current true
+        k-th distance, and are treated as misses (evicted).
         """
         q = np.asarray(queries, np.float32)
         caps = np.full((q.shape[0],), np.inf, np.float32)
@@ -106,14 +150,22 @@ class LambdaCache:
         for i, sig in enumerate(sigs):
             key = (int(sig), int(k))
             ent = self._store.get(key)
-            if ent is not None and ent[2] < min_epoch:
-                del self._store[key]  # stale: a delete invalidated it
-                self.stale_evictions += 1
-                ent = None
-            if ent is None:
+            lam = None
+            if ent is not None:
+                q0, lam_e, tag = ent
+                if isinstance(lam_e, tuple):
+                    # sharded entry: min over still-valid per-shard
+                    # bounds; a delete in shard s only drops component s
+                    lam = self._valid_component_min(lam_e, tag, min_epoch)
+                elif not epoch_is_stale(tag, min_epoch):
+                    lam = float(lam_e)
+                if lam is None:
+                    del self._store[key]  # fully stale: deletes
+                    self.stale_evictions += 1  # invalidated every bound
+            if lam is None:
                 self.misses += 1
                 continue
-            q0, lam, _ = ent
+            q0 = ent[0]
             delta = min(float(np.linalg.norm(q[i] - q0)),
                         float(np.linalg.norm(q[i] + q0)))
             # additive slack: the backends compute their lower bounds in
@@ -130,26 +182,84 @@ class LambdaCache:
             self.hits += 1
         return caps
 
+    @staticmethod
+    def _valid_component_min(lams: tuple, epochs: tuple,
+                             min_epoch) -> float | None:
+        """Min over per-shard bounds whose epoch is not stale; None when
+        nothing survives (or the shard layout changed)."""
+        floors = _as_epoch(min_epoch)
+        floors = (floors,) if isinstance(floors, int) else floors
+        if len(epochs) != len(floors):
+            return None
+        valid = [lam for lam, e, f in zip(lams, epochs, floors)
+                 if e >= f and np.isfinite(lam)]
+        return min(valid) if valid else None
+
     # ------------------------------------------------------------------
     def update(self, queries: np.ndarray, k: int, kth_dists: np.ndarray,
-               *, epoch: int = 0, min_epoch: int = 0):
+               *, epoch=0, min_epoch=0):
         """Record served results; ``kth_dists`` are per-query k-th returned
         distances (upper bounds on the true k-th by construction).
-        ``epoch`` tags the snapshot that produced them; an existing entry
-        older than ``min_epoch`` is replaced unconditionally (its lambda
-        is no longer trustworthy, however small)."""
+        ``epoch`` tags the snapshot (scalar) or epoch vector (sharded)
+        that produced them; an existing entry stale under ``min_epoch``
+        is replaced unconditionally (its lambda is no longer
+        trustworthy, however small)."""
         q = np.asarray(queries, np.float32)
         lam = np.asarray(kth_dists, np.float32).reshape(-1)
         sigs = self.signatures(q)
+        tag = _as_epoch(epoch)
         for i, sig in enumerate(sigs):
             if not np.isfinite(lam[i]):
                 continue  # fewer than k valid results: not a valid bound
             key = (int(sig), int(k))
-            prev = self._store.get(key)
             # keep the tighter center: prefer the smaller lambda
-            if (prev is None or prev[2] < min_epoch
-                    or lam[i] <= prev[1]):
-                self._store[key] = (q[i].copy(), float(lam[i]), int(epoch))
+            prev_lam = self._surviving_lambda(key, min_epoch)
+            if prev_lam is None or lam[i] <= prev_lam:
+                self._store[key] = (q[i].copy(), float(lam[i]), tag)
+        self._evict_overflow()
+
+    def update_sharded(self, queries: np.ndarray, k: int,
+                       shard_kths: np.ndarray, *, epoch, min_epoch=None):
+        """Record a sharded serve: ``shard_kths`` (B, S) are per-shard
+        local k-th upper bounds (+inf where a shard produced fewer than k
+        finite results this batch -- e.g. its round-2 scan was fully
+        pruned), ``epoch`` the pinned per-shard epoch vector.  Stored
+        componentwise so later deletes invalidate per shard.  An entry is
+        replaced when the previous one is missing, fully stale under
+        ``min_epoch``, from a different shard layout, or looser (its
+        surviving min exceeds the new one) -- components and center move
+        together because the cap formula is anchored on one center."""
+        q = np.asarray(queries, np.float32)
+        lam = np.asarray(shard_kths, np.float32)
+        tag = tuple(int(e) for e in epoch)
+        assert lam.ndim == 2 and lam.shape[1] == len(tag), (lam.shape, tag)
+        if min_epoch is None:
+            min_epoch = (0,) * len(tag)
+        sigs = self.signatures(q)
+        for i, sig in enumerate(sigs):
+            finite = np.isfinite(lam[i])
+            if not finite.any():
+                continue  # nothing bounded this batch: no valid entry
+            new_min = float(lam[i][finite].min())
+            key = (int(sig), int(k))
+            prev_min = self._surviving_lambda(key, min_epoch)
+            if prev_min is None or new_min <= prev_min:
+                self._store[key] = (q[i].copy(),
+                                    tuple(float(x) for x in lam[i]), tag)
+        self._evict_overflow()
+
+    def _surviving_lambda(self, key, min_epoch) -> float | None:
+        """The bound an existing entry still provides under ``min_epoch``
+        (scalar- or sharded-mode); None when missing or fully stale --
+        the shared replace-or-keep test of both update paths."""
+        prev = self._store.get(key)
+        if prev is None:
+            return None
+        if isinstance(prev[1], tuple):
+            return self._valid_component_min(prev[1], prev[2], min_epoch)
+        return None if epoch_is_stale(prev[2], min_epoch) else float(prev[1])
+
+    def _evict_overflow(self):
         while len(self._store) > self.max_entries:  # FIFO-ish eviction
             self._store.pop(next(iter(self._store)))
 

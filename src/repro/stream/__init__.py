@@ -31,15 +31,28 @@ primitive:
     ``repro.checkpoint`` so a serving process recovers without a write
     log.
 
+``ShardedMutableP2HIndex`` (sharded.py)
+    The scale-out front-end: every shard is a full mutable LSM index
+    (own delta, segments, compaction policy, background compactor),
+    inserts are routed by a pluggable hash-of-gid router, deletes
+    forward to the owning shard, and queries pin a ``ShardedSnapshot``
+    (per-shard snapshot vector + epoch vector) served through the
+    two-round lambda exchange
+    (``repro.core.distributed.two_round_exchange``).
+
 Serving integration: ``P2HEngine(mutable_index)`` pins one snapshot per
 micro-batch and epoch-tags its lambda cache -- warm caps recorded before
 a delete are invalidated instead of silently unsound (a delete can grow
-the true k-th distance above a cached cap).
+the true k-th distance above a cached cap).  Over a sharded mutable
+index the cache stores epoch *vectors*, so one shard's delete only
+invalidates caps stale in that component.
 """
 from repro.stream.compaction import CompactionPlan, CompactionPolicy
 from repro.stream.delta import DeltaBuffer
 from repro.stream.mutable import MutableP2HIndex
-from repro.stream.snapshot import DeltaView, Segment, Snapshot
+from repro.stream.sharded import HashRouter, ShardedMutableP2HIndex
+from repro.stream.snapshot import DeltaView, Segment, ShardedSnapshot, Snapshot
 
-__all__ = ["MutableP2HIndex", "Snapshot", "Segment", "DeltaView",
+__all__ = ["MutableP2HIndex", "ShardedMutableP2HIndex", "HashRouter",
+           "Snapshot", "ShardedSnapshot", "Segment", "DeltaView",
            "DeltaBuffer", "CompactionPolicy", "CompactionPlan"]

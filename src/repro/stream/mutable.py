@@ -50,6 +50,22 @@ _STATE_FORMAT = "p2h-stream"
 _STATE_VERSION = 1
 
 
+def query_via_engine(index, engine, queries, k, *, method, normalize,
+                     return_stats, kw):
+    """Shared ``query(engine=...)`` delegation for the mutable index
+    front-ends (single-host and sharded): flush pending streaming work,
+    serve through the engine, report this call's counter delta."""
+    assert engine.mutable is index, "engine serves a different index"
+    engine.flush()
+    before = engine.total_counters()
+    bd, bi = engine.query(queries, k, normalize=normalize, method=method,
+                          **kw)
+    if return_stats:
+        delta = engine.total_counters() - before
+        return bd, bi, search.SearchStats(delta)
+    return bd, bi
+
+
 class MutableP2HIndex:
     """Read-write P2HNNS index with LSM-style segments + delta buffer."""
 
@@ -95,52 +111,85 @@ class MutableP2HIndex:
 
     # ------------------------------------------------------------------
     @classmethod
-    def from_data(cls, data: np.ndarray, **kw: Any) -> "MutableP2HIndex":
-        """Bulk-load: seed with one sealed segment over ``data``."""
+    def from_data(cls, data: np.ndarray, *, gids: np.ndarray | None = None,
+                  **kw: Any) -> "MutableP2HIndex":
+        """Bulk-load: seed with one sealed segment over ``data``.
+
+        ``gids`` (optional): externally-allocated global ids, one per
+        row -- the sharded front-end routes a globally-numbered dataset
+        across shards, so each shard's segment must carry the caller's
+        ids rather than a local 0..n-1 numbering.
+        """
         data = np.asarray(data, np.float32)
         self = cls(data.shape[1], **kw)
-        pts = append_ones(data)
-        with self._lock:
-            gids = np.arange(len(pts), dtype=np.int32)
-            seg = Segment.from_points(self._alloc_uid(), pts, gids,
-                                      n0=self.n0, seed=self.seed)
-            self._segments[seg.uid] = seg
-            for g in gids:
-                self._locator[int(g)] = ("seg", seg.uid, int(g))
-            self._next_gid = len(pts)
-            self._live_count = len(pts)
-            self._max_norm = float(np.linalg.norm(pts, axis=1).max())
-            self._publish()
+        self.bulk_seed(data, gids=gids)
         return self
+
+    def bulk_seed(self, data: np.ndarray, *,
+                  gids: np.ndarray | None = None) -> None:
+        """Seed an *empty* index with one sealed segment over ``data``
+        (the bulk-load path of :meth:`from_data`, callable on a shard the
+        sharded front-end already constructed)."""
+        data = np.asarray(data, np.float32)
+        pts = append_ones(data)
+        if gids is None:
+            gids = np.arange(len(pts), dtype=np.int32)
+        else:
+            gids = np.asarray(gids, np.int32)
+            assert len(gids) == len(pts), (len(gids), len(pts))
+        with self._lock:
+            assert not self._segments and self._delta.length == 0, \
+                "bulk_seed requires an empty index"
+            if len(pts):
+                seg = Segment.from_points(self._alloc_uid(), pts, gids,
+                                          n0=self.n0, seed=self.seed)
+                self._segments[seg.uid] = seg
+                pid = np.asarray(seg.tree.point_ids)
+                for local in pid[pid >= 0]:
+                    self._locator[int(gids[local])] = (
+                        "seg", seg.uid, int(local))
+                self._max_norm = float(np.linalg.norm(pts, axis=1).max())
+                self._next_gid = int(gids.max()) + 1
+            self._live_count = len(pts)
+            self._publish()
 
     # ------------------------------------------------------------------
     # write path
     # ------------------------------------------------------------------
-    def insert(self, point: np.ndarray) -> int:
-        """Insert one raw (dim,) point; returns its stable global id."""
+    def insert(self, point: np.ndarray, *, gid: int | None = None) -> int:
+        """Insert one raw (dim,) point; returns its stable global id.
+
+        ``gid`` (optional): use an externally-allocated global id (the
+        sharded front-end owns the id space); must be fresh."""
         x = np.asarray(point, np.float32).reshape(-1)
         assert x.shape == (self.dim,), (x.shape, self.dim)
         with self._lock:
-            gid = self._insert_one_locked(x)
+            gid = self._insert_one_locked(x, gid=gid)
             self._publish()
             self._maybe_compact_locked()
         return gid
 
-    def insert_batch(self, points: np.ndarray) -> np.ndarray:
+    def insert_batch(self, points: np.ndarray,
+                     gids: np.ndarray | None = None) -> np.ndarray:
         """Bulk insert: one lock hold, one snapshot publish at the end
         (readers only ever need the final state visible; mid-batch
-        compactions still run when the delta fills)."""
+        compactions still run when the delta fills).  ``gids``: optional
+        externally-allocated ids, one per row."""
         pts = np.atleast_2d(np.asarray(points, np.float32))
         assert pts.shape[1] == self.dim, (pts.shape, self.dim)
-        gids = np.empty((len(pts),), np.int32)
+        if gids is not None:
+            assert len(gids) == len(pts), (len(gids), len(pts))
+        out = np.empty((len(pts),), np.int32)
         with self._lock:
             for i, x in enumerate(pts):
-                gids[i] = self._insert_one_locked(x)
+                out[i] = self._insert_one_locked(
+                    x, gid=None if gids is None else int(gids[i]))
             self._publish()
             self._maybe_compact_locked()
-        return gids
+        return out
 
-    def _insert_one_locked(self, x: np.ndarray) -> int:
+    def _insert_one_locked(self, x: np.ndarray, *,
+                           gid: int | None = None) -> int:
         """Append one point to the delta (compacting if full); no
         publish -- callers publish once per API call."""
         x1 = np.concatenate([x, np.ones((1,), np.float32)])
@@ -151,8 +200,13 @@ class MutableP2HIndex:
                 self._cond.wait(timeout=1.0)  # compactor republishes
             else:
                 self._compact_locked(self._plan_locked())
-        gid = self._next_gid
-        self._next_gid += 1
+        if gid is None:
+            gid = self._next_gid
+            self._next_gid += 1
+        else:
+            gid = int(gid)
+            assert gid not in self._locator, f"gid {gid} already live"
+            self._next_gid = max(self._next_gid, gid + 1)
         row = self._delta.append(x1, gid)
         self._locator[gid] = ("delta", id(self._delta), row)
         self._live_count += 1
@@ -217,15 +271,9 @@ class MutableP2HIndex:
         that route.
         """
         if engine is not None:
-            assert engine.mutable is self, "engine serves a different index"
-            engine.flush()
-            before = engine.total_counters()
-            bd, bi = engine.query(queries, k, normalize=normalize,
-                                  method=method, **kw)
-            if return_stats:
-                delta = engine.total_counters() - before
-                return bd, bi, search.SearchStats(delta)
-            return bd, bi
+            return query_via_engine(self, engine, queries, k,
+                                    method=method, normalize=normalize,
+                                    return_stats=return_stats, kw=kw)
         q = np.atleast_2d(np.asarray(queries))
         if normalize:
             q = normalize_query(q)
@@ -410,8 +458,13 @@ class MutableP2HIndex:
         self._compacting = False
         self._pending_tombstones = set()
         self._publish()
+        t1 = time.perf_counter()
         self.compaction_log.append(dict(
-            wall_s=time.perf_counter() - pin["t0"],
+            wall_s=t1 - pin["t0"],
+            # perf_counter interval endpoints: lets a multi-shard driver
+            # measure how much compaction work overlapped across shards
+            t0_s=pin["t0"],
+            t1_s=t1,
             rows=int(len(pin["gids"])),
             reason=plan.reason,
             epoch=self._epoch,

@@ -1,0 +1,383 @@
+"""ShardedMutableP2HIndex: per-shard delta/compaction under the
+two-round lambda exchange.
+
+The single-host :class:`~repro.stream.mutable.MutableP2HIndex` (PR 2)
+and the frozen device-sharded forest (``repro.core.distributed``) each
+solve half of the "heavy traffic from millions of users" north star;
+this module marries them.  Every shard is a full mutable LSM index --
+its own :class:`~repro.stream.delta.DeltaBuffer`, segment list,
+:class:`~repro.stream.compaction.CompactionPolicy` and (optionally)
+background compactor -- so shards restructure **independently**: one
+shard folding its delta never stalls, or invalidates caps recorded
+against, the others.  The paper's 1-3-orders-cheaper tree construction
+is what makes this per-shard rebuild loop viable at all.
+
+Composition:
+
+  * **Routing** -- the front-end owns the global id space; a pluggable
+    router (default :class:`HashRouter`, multiplicative hash of the gid)
+    maps every id to its owning shard.  Inserts allocate a gid and route
+    it; deletes forward to the owner (derived from the gid, no global
+    lookup table).
+  * **Epoch vectors** -- every shard mutation publishes that shard's
+    epoch; a query pins a
+    :class:`~repro.stream.snapshot.ShardedSnapshot` -- the vector of
+    per-shard snapshot pins plus their epoch/delete-epoch vectors --
+    giving one consistent cross-shard view while background compactors
+    republish shards underneath it.
+  * **Queries** -- ``ShardedSnapshot.query`` runs the two-round lambda
+    exchange (:func:`repro.core.distributed.two_round_exchange`) with
+    each shard's pinned ``Snapshot`` as a round backend: round 1 fans
+    out each shard's own delta+segment scan (budgeted prefix), round 2
+    reruns exactly under the exchanged ``lambda0`` cap, ``merge_topk``
+    finishes.  Heterogeneous shard states (delta-only, multi-segment,
+    mid-compaction) all serve through the same two rounds.
+  * **Serving** -- ``P2HEngine(sharded_mutable)`` pins one epoch vector
+    per micro-batch; the lambda cache stores epoch *vectors* so a delete
+    in one shard only invalidates caps stale in **that** component (see
+    ``repro.serve.lambda_cache``).
+  * **Durability** -- ``save``/``load`` persist each shard through its
+    own :class:`repro.checkpoint.CheckpointManager` directory plus one
+    fsync'd top-level manifest (shard count, router spec, id-space
+    high-water mark, per-shard steps).
+
+Thread model: per-shard writer locks only -- there is no global write
+lock.  Gid allocation is the single cross-shard synchronization point
+(one counter behind a mutex); everything else is shard-local, which is
+what lets per-shard write throughput scale with the shard count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Any
+
+import numpy as np
+
+from repro.core import search
+from repro.core.balltree import normalize_query
+from repro.stream.compaction import CompactionPolicy
+from repro.stream.mutable import MutableP2HIndex, query_via_engine
+from repro.stream.snapshot import ShardedSnapshot
+
+__all__ = ["ShardedMutableP2HIndex", "HashRouter"]
+
+_MANIFEST = "MANIFEST.json"
+_FORMAT = "p2h-stream-sharded"
+_VERSION = 1
+
+# Knuth's multiplicative constant: decorrelates sequential gids so shard
+# assignment is balanced but not trivially periodic in allocation order
+_HASH_MULT = 2654435761
+
+
+class HashRouter:
+    """Deterministic hash-of-gid shard router (the default).
+
+    Any object with ``shard_of(gid) -> int`` and ``spec() -> dict`` (plus
+    a registered ``from_spec`` for persistence) can replace it -- e.g. a
+    range router for locality-ordered id spaces.
+    """
+
+    kind = "hash"
+
+    def __init__(self, num_shards: int):
+        assert num_shards >= 1
+        self.num_shards = int(num_shards)
+
+    def shard_of(self, gid: int) -> int:
+        return ((int(gid) * _HASH_MULT) & 0xFFFFFFFF) % self.num_shards
+
+    def shard_of_many(self, gids) -> np.ndarray:
+        """Vectorized :meth:`shard_of` (bulk-load / batch-insert path).
+        uint64 wraparound preserves the product's low 32 bits, so this
+        matches the scalar arbitrary-precision arithmetic exactly."""
+        g = np.asarray(gids).astype(np.uint64)
+        return (((g * np.uint64(_HASH_MULT)) & np.uint64(0xFFFFFFFF))
+                % np.uint64(self.num_shards)).astype(np.int32)
+
+    def spec(self) -> dict:
+        return {"kind": self.kind, "num_shards": self.num_shards}
+
+    @classmethod
+    def from_spec(cls, spec: dict) -> "HashRouter":
+        assert spec.get("kind") == cls.kind, spec
+        return cls(spec["num_shards"])
+
+
+class ShardedMutableP2HIndex:
+    """Read-write P2HNNS index sharded into independent mutable shards."""
+
+    def __init__(self, dim: int, num_shards: int = 2, *, n0: int = 128,
+                 variant: str = "bc", policy: CompactionPolicy | None = None,
+                 seed: int = 0, background: bool = False, router: Any = None,
+                 shards: tuple | None = None):
+        self.dim = int(dim)
+        self.d = self.dim + 1
+        self.num_shards = int(num_shards)
+        self.n0 = int(n0)
+        self.variant = variant
+        self.policy = policy or CompactionPolicy()
+        self.seed = int(seed)
+        self.background = bool(background)
+        self.router = router or HashRouter(self.num_shards)
+        if shards is not None:  # load() supplies restored shards
+            assert len(shards) == self.num_shards
+            self.shards = tuple(shards)
+        else:
+            # distinct per-shard seeds: shard trees must not be clones
+            self.shards = tuple(
+                MutableP2HIndex(dim, n0=n0, variant=variant,
+                                policy=self.policy, seed=seed + 1000 * s,
+                                background=background)
+                for s in range(self.num_shards))
+        self._gid_lock = threading.Lock()
+        self._next_gid = max((sh._next_gid for sh in self.shards),
+                             default=0)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_data(cls, data: np.ndarray, num_shards: int = 2,
+                  **kw: Any) -> "ShardedMutableP2HIndex":
+        """Bulk-load: route rows by gid, seal one segment per shard."""
+        data = np.asarray(data, np.float32)
+        self = cls(data.shape[1], num_shards, **kw)
+        gids = np.arange(len(data), dtype=np.int64)
+        owner = self._owners(gids)
+        for s, shard in enumerate(self.shards):
+            mask = owner == s
+            if mask.any():
+                shard.bulk_seed(data[mask], gids=gids[mask])
+        with self._gid_lock:
+            self._next_gid = len(data)
+        return self
+
+    # ------------------------------------------------------------------
+    # write path (routed)
+    # ------------------------------------------------------------------
+    def _alloc_gids(self, n: int) -> np.ndarray:
+        with self._gid_lock:
+            start = self._next_gid
+            self._next_gid += n
+        return np.arange(start, start + n, dtype=np.int64)
+
+    def _owners(self, gids: np.ndarray) -> np.ndarray:
+        """gid -> owning shard, via the router's vectorized fast path
+        when it offers one (the default HashRouter does)."""
+        fast = getattr(self.router, "shard_of_many", None)
+        if fast is not None:
+            return np.asarray(fast(gids), np.int32)
+        return np.fromiter((self.router.shard_of(g) for g in gids),
+                           np.int32, len(gids))
+
+    def insert(self, point: np.ndarray) -> int:
+        """Insert one raw (dim,) point; allocates a global id, routes it
+        to its owning shard, returns it."""
+        gid = int(self._alloc_gids(1)[0])
+        self.shards[self.router.shard_of(gid)].insert(point, gid=gid)
+        return gid
+
+    def insert_batch(self, points: np.ndarray) -> np.ndarray:
+        """Bulk insert: one id-range allocation, one routed sub-batch per
+        shard (each shard publishes once)."""
+        pts = np.atleast_2d(np.asarray(points, np.float32))
+        gids = self._alloc_gids(len(pts))
+        owner = self._owners(gids)
+        for s, shard in enumerate(self.shards):
+            mask = owner == s
+            if mask.any():
+                shard.insert_batch(pts[mask], gids=gids[mask])
+        return gids.astype(np.int32)
+
+    def delete(self, gid: int) -> bool:
+        """Delete by global id, forwarded to the owning shard; returns
+        False if the id is not live."""
+        return self.shards[self.router.shard_of(gid)].delete(gid)
+
+    # ------------------------------------------------------------------
+    # read path (epoch-vector pinned)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> ShardedSnapshot:
+        """Pin one cross-shard view: the vector of per-shard snapshots
+        (each an atomic reference read) plus their epoch vectors."""
+        pins = tuple(sh.snapshot() for sh in self.shards)
+        return ShardedSnapshot(
+            shards=pins,
+            epoch=tuple(p.epoch for p in pins),
+            last_delete_epoch=tuple(p.last_delete_epoch for p in pins),
+            variant=self.variant,
+            d=self.d,
+        )
+
+    @property
+    def epoch(self) -> tuple:
+        """The current epoch vector (one epoch per shard)."""
+        return tuple(sh.epoch for sh in self.shards)
+
+    @property
+    def live_count(self) -> int:
+        return sum(sh.live_count for sh in self.shards)
+
+    @property
+    def max_norm(self) -> float:
+        return max((sh.max_norm for sh in self.shards), default=0.0)
+
+    @property
+    def compaction_log(self) -> list:
+        """All shards' compaction runs (``shard`` field added), merged in
+        completion order."""
+        out = []
+        for s, sh in enumerate(self.shards):
+            out += [{**c, "shard": s} for c in sh.compaction_log]
+        return sorted(out, key=lambda c: c["t1_s"])
+
+    def query(self, queries, k: int = 1, *, method: str | None = None,
+              frac: float = 1.0, frac1: float = 0.25,
+              normalize: bool = True, lambda_cap=None,
+              return_stats: bool = False, return_info: bool = False,
+              engine: Any = None, **kw: Any):
+        """Top-k over the cross-shard live set; same contract as
+        ``MutableP2HIndex.query`` plus ``frac1`` (round-1 prefix
+        fraction), ``lambda_cap`` (externally-valid caps, tightening
+        both exchange rounds), and ``return_info`` (append the
+        exchange's lambda0 / per-shard k-th diagnostics; direct path
+        only).  ``engine=`` routes through a
+        :class:`repro.serve.P2HEngine` constructed over this index."""
+        if engine is not None:
+            if lambda_cap is not None:
+                raise ValueError(
+                    "lambda_cap is derived by the engine's cache; do not "
+                    "pass both engine= and lambda_cap=")
+            if return_info:
+                raise ValueError("return_info is a direct-path diagnostic; "
+                                 "the engine does not expose it")
+            return query_via_engine(self, engine, queries, k,
+                                    method=method, normalize=normalize,
+                                    return_stats=return_stats, kw=kw)
+        q = np.atleast_2d(np.asarray(queries))
+        if normalize:
+            q = normalize_query(q)
+        snap = self.snapshot()
+        out = snap.query(q.astype(np.float32), k,
+                         method=method or "sweep", frac=frac,
+                         frac1=frac1, lambda_cap=lambda_cap,
+                         return_counters=True, return_info=return_info,
+                         **kw)
+        if return_info:
+            bd, bi, cnt, info = out
+        else:
+            bd, bi, cnt = out
+        extra = ((search.SearchStats(cnt),) if return_stats else ())
+        extra += ((info,) if return_info else ())
+        return (bd, bi, *extra)
+
+    # ------------------------------------------------------------------
+    # compaction (per shard)
+    # ------------------------------------------------------------------
+    def compact(self, *, force: bool = False, shard: int | None = None
+                ) -> bool:
+        """Run one inline compaction on ``shard`` (or on every shard);
+        returns whether any ran.  Shards compact independently -- there
+        is no cross-shard barrier."""
+        targets = (self.shards if shard is None
+                   else (self.shards[shard],))
+        ran = False
+        for sh in targets:
+            ran = sh.compact(force=force) or ran
+        return ran
+
+    def wait_compaction(self) -> None:
+        """Block until no shard has a background compaction in flight;
+        re-raises any shard compactor error."""
+        for sh in self.shards:
+            sh.wait_compaction()
+
+    def close(self) -> None:
+        """Stop every shard's background compactor; safe to call twice."""
+        for sh in self.shards:
+            sh.close()
+
+    # ------------------------------------------------------------------
+    # persistence: per-shard checkpoints + one top-level manifest
+    # ------------------------------------------------------------------
+    def save(self, directory: str) -> list:
+        """Persist every shard (each through its own CheckpointManager
+        directory) plus a top-level fsync'd manifest; returns the
+        per-shard steps saved."""
+        from repro.checkpoint.manager import write_json_atomic
+
+        os.makedirs(directory, exist_ok=True)
+        steps = [sh.save(os.path.join(directory, f"shard_{s:03d}"))
+                 for s, sh in enumerate(self.shards)]
+        with self._gid_lock:
+            next_gid = self._next_gid
+        manifest = {
+            "format": _FORMAT,
+            "version": _VERSION,
+            "dim": self.dim,
+            "n0": self.n0,
+            "variant": self.variant,
+            "seed": self.seed,
+            "num_shards": self.num_shards,
+            "router": self.router.spec(),
+            "next_gid": int(next_gid),
+            "policy": dataclasses.asdict(self.policy),
+            "shard_steps": steps,
+        }
+        write_json_atomic(os.path.join(directory, _MANIFEST), manifest)
+        return steps
+
+    @classmethod
+    def load(cls, directory: str, *, background: bool = False,
+             router: Any = None) -> "ShardedMutableP2HIndex":
+        """Recover a sharded index saved by :meth:`save`.  ``router``
+        overrides the manifest's router spec (custom router classes are
+        the caller's to reconstruct; the spec must describe the same
+        gid -> shard mapping the save used)."""
+        from repro.checkpoint.manager import read_json
+
+        manifest = read_json(os.path.join(directory, _MANIFEST))
+        if manifest.get("format") != _FORMAT:
+            raise ValueError(f"{directory}: not a {_FORMAT} checkpoint")
+        if manifest.get("version", 0) > _VERSION:
+            raise ValueError(f"{directory}: manifest version "
+                             f"{manifest['version']} is newer than this "
+                             "reader")
+        if router is None:
+            spec = manifest["router"]
+            if spec.get("kind") != HashRouter.kind:
+                raise ValueError(
+                    f"unknown router kind {spec.get('kind')!r}: pass "
+                    "router= to load")
+            router = HashRouter.from_spec(spec)
+        shards = tuple(
+            MutableP2HIndex.load(
+                os.path.join(directory, f"shard_{s:03d}"),
+                step=manifest["shard_steps"][s], background=background)
+            for s in range(manifest["num_shards"]))
+        self = cls(manifest["dim"], manifest["num_shards"],
+                   n0=manifest["n0"], variant=manifest["variant"],
+                   policy=CompactionPolicy(**manifest["policy"]),
+                   seed=manifest["seed"], background=background,
+                   router=router, shards=shards)
+        with self._gid_lock:
+            self._next_gid = max(self._next_gid, manifest["next_gid"])
+        return self
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Per-shard serving/maintenance stats (bench + ops surface)."""
+        pins = [sh.snapshot() for sh in self.shards]
+        return {
+            "num_shards": self.num_shards,
+            "live_count": sum(p.live_count for p in pins),
+            "epoch": tuple(p.epoch for p in pins),
+            "per_shard": [
+                {"live": p.live_count, "epoch": p.epoch,
+                 "segments": len(p.segments),
+                 "delta_live": p.delta_live,
+                 "compactions": len(sh.compaction_log)}
+                for p, sh in zip(pins, self.shards)
+            ],
+        }

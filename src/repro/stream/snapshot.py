@@ -37,7 +37,7 @@ from repro.core import search
 from repro.core.balltree import FlatTree
 from repro.stream.delta import delta_topk
 
-__all__ = ["Segment", "Snapshot", "DeltaView"]
+__all__ = ["Segment", "Snapshot", "DeltaView", "ShardedSnapshot"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,7 +158,8 @@ class Snapshot:
         return np.concatenate(pts), np.concatenate(gids)
 
     def query(self, queries, k: int = 1, *, method: str = "sweep",
-              frac: float = 1.0, lambda_cap=None, return_counters: bool = False):
+              frac: float = 1.0, lambda_cap=None,
+              return_counters: bool = False, include_deltas: bool = True):
         """Exact (or beam-budgeted) top-k over the snapshot's live set.
 
         ``queries`` must already be normalized (B, d) float32.  Returned
@@ -166,7 +167,11 @@ class Snapshot:
         bounds on the true k-th distance (serving engine warm start);
         budgeted ``method="beam"`` never consumes caps (same rule as the
         engine) and is budgeted on segments only -- the delta is always
-        scanned exactly.
+        scanned exactly.  ``include_deltas=False`` scans segments only:
+        the two-round exchange's round 2 uses it because round 1 already
+        scanned every delta exactly and its candidates reach the final
+        merge (a delta point displaced from round-1's top-k was displaced
+        by k closer real points, so it cannot be in the global top-k).
         """
         q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
         B = q.shape[0]
@@ -174,7 +179,7 @@ class Snapshot:
 
         bd = jnp.full((B, k), jnp.inf, jnp.float32)
         bi = jnp.full((B, k), -1, jnp.int32)
-        for view in self.deltas:
+        for view in (self.deltas if include_deltas else ()):
             dd, di = delta_topk(view.points, view.gids, q, k)
             bd, bi = search.merge_topk(jnp.concatenate([bd, dd], axis=1),
                                        jnp.concatenate([bi, di], axis=1), k)
@@ -204,6 +209,92 @@ class Snapshot:
         if return_counters:
             return bd, bi, counters
         return bd, bi
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSnapshot:
+    """A cross-shard snapshot pin: one per-shard :class:`Snapshot` each,
+    plus the **epoch vector** (one epoch per shard).
+
+    Each component is individually consistent (atomic per-shard publish);
+    the vector pins the exact cross-shard state a query ran against while
+    background compactors republish shards independently.  Validity of a
+    lambda cap against this view is per-shard: a cap recorded at epoch
+    vector ``E`` is valid iff ``E[s] >= last_delete_epoch[s]`` for every
+    shard ``s`` -- one shard's delete must not (and with the vector form
+    does not) invalidate caps recorded against the other shards' states.
+
+    ``query`` runs the two-round lambda exchange
+    (:func:`repro.core.distributed.two_round_exchange`) with each shard's
+    pinned ``Snapshot`` as the round backend, so the exchange spans
+    heterogeneous shard states: delta-only, multi-segment, mid-compaction
+    (sealed delta views included) -- all valid round participants.
+    """
+
+    shards: tuple  # tuple[Snapshot, ...] -- index s = shard s's pin
+    epoch: tuple  # per-shard epoch vector
+    last_delete_epoch: tuple  # per-shard delete-epoch vector
+    variant: str
+    d: int
+
+    # ------------------------------------------------------------------
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def live_count(self) -> int:
+        return sum(s.live_count for s in self.shards)
+
+    @property
+    def max_norm(self) -> float:
+        return max((s.max_norm for s in self.shards), default=0.0)
+
+    @property
+    def segments(self) -> tuple:
+        """All shards' segments, flattened (fan-out accounting)."""
+        return tuple(seg for s in self.shards for seg in s.segments)
+
+    @property
+    def deltas(self) -> tuple:
+        """All shards' delta views, flattened."""
+        return tuple(v for s in self.shards for v in s.deltas)
+
+    @property
+    def delta_live(self) -> int:
+        return sum(s.delta_live for s in self.shards)
+
+    def live_points(self):
+        """Union of the shard live sets as ``(points, gids)`` host
+        arrays -- the brute-force-oracle view."""
+        parts = [s.live_points() for s in self.shards]
+        pts = [p for p, _ in parts if len(p)]
+        gids = [g for _, g in parts if len(g)]
+        if not pts:
+            return (np.zeros((0, self.d), np.float32),
+                    np.zeros((0,), np.int32))
+        return np.concatenate(pts), np.concatenate(gids)
+
+    def query(self, queries, k: int = 1, *, method: str = "sweep",
+              frac: float = 1.0, frac1: float = 0.25, lambda_cap=None,
+              return_counters: bool = False, return_info: bool = False):
+        """Top-k over the cross-shard live set via the two-round lambda
+        exchange; same contract as :meth:`Snapshot.query` (normalized
+        queries in, global ids out) plus ``frac1``, the round-1 prefix
+        fraction.  ``return_info`` also returns the exchange's
+        ``lambda0`` / per-shard round-1 k-th distances (invariant-test
+        surface)."""
+        from repro.core.distributed import two_round_exchange
+
+        out = two_round_exchange(self.shards, queries, k, frac1=frac1,
+                                 method=method, frac=frac,
+                                 lambda_cap=lambda_cap,
+                                 return_info=return_info)
+        if return_info:
+            bd, bi, cnt, info = out
+            return (bd, bi, cnt, info) if return_counters else (bd, bi, info)
+        bd, bi, cnt = out
+        return (bd, bi, cnt) if return_counters else (bd, bi)
 
 
 def _segment_query(tree: FlatTree, q, k: int, *, method: str, frac: float,

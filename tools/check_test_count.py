@@ -1,0 +1,76 @@
+"""CI test-count floor: fail the build when the suite silently shrinks.
+
+Parametrized and property-based tests can disappear without failing
+anything -- a fixture import error that pytest reports as a skip, a
+guard (like the optional-hypothesis shim) misfiring, or a collection
+glob that stops matching.  This check pins a floor under the *passed*
+count (and a ceiling over skips) so a silently-skipped parametrization
+turns the lane red instead of shipping uncovered.
+
+Usage (CI fast lane; see .github/workflows/ci.yml):
+
+    python -m pytest -q ... | tee pytest.log
+    python tools/check_test_count.py pytest.log --min-passed 280
+
+The floor is maintained by hand: raise it when a PR adds tests (the PR
+that adds them knows the new count), lower it only with an explicit
+removal rationale in the diff.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+
+def parse_counts(text: str) -> dict:
+    """Counts from pytest's final summary line, e.g.
+    ``261 passed, 2 skipped, 1 xfailed in 490.56s``."""
+    counts = {}
+    # the summary is the last line mentioning "passed" / "failed" etc.
+    for line in reversed(text.splitlines()):
+        found = re.findall(
+            r"(\d+) (passed|failed|errors?|skipped|xfailed|xpassed|"
+            r"deselected)", line)
+        if found:
+            for n, kind in found:
+                counts[kind.rstrip("s")] = int(n)
+            break
+    return counts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("log", help="pytest output file ('-' for stdin)")
+    ap.add_argument("--min-passed", type=int, required=True,
+                    help="fail if fewer tests passed")
+    ap.add_argument("--max-skipped", type=int, default=None,
+                    help="fail if more tests were skipped")
+    args = ap.parse_args(argv)
+
+    text = (sys.stdin.read() if args.log == "-"
+            else open(args.log).read())
+    counts = parse_counts(text)
+    if not counts:
+        print("check_test_count: no pytest summary line found", file=sys.stderr)
+        return 2
+    passed = counts.get("passed", 0)
+    skipped = counts.get("skipped", 0)
+    print(f"check_test_count: {passed} passed, {skipped} skipped "
+          f"(floor {args.min_passed}"
+          + (f", skip ceiling {args.max_skipped}" if args.max_skipped
+             is not None else "") + ")")
+    if passed < args.min_passed:
+        print(f"check_test_count: FAIL -- only {passed} tests passed, "
+              f"floor is {args.min_passed}; a parametrization or module "
+              "was probably silently skipped/lost", file=sys.stderr)
+        return 1
+    if args.max_skipped is not None and skipped > args.max_skipped:
+        print(f"check_test_count: FAIL -- {skipped} tests skipped, "
+              f"ceiling is {args.max_skipped}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
