@@ -8,7 +8,11 @@ Measures, on a hot-repeat traffic trace:
     engine's fixed-shape micro-batching;
   * tile-skip / verified counters for the engine with a cold lambda cache
     vs a warm one -- the warm cache must prune strictly more tiles (its
-    caps only ever tighten the running threshold).
+    caps only ever tighten the running threshold);
+  * stacked vs sequential segment sweep over a fanned-out *mutable*
+    snapshot of the same workload (p50/p99 + tiles skipped): the
+    crossover ``DispatchPolicy.stacked_min_fanout`` encodes, plus the
+    engine auto-routing such snapshots to the ``stacked`` route.
 
 The workload (many loose clusters, k well above the leaf occupancy of any
 single tile) is chosen so the sweep's running top-k converges over
@@ -25,9 +29,9 @@ import time
 import numpy as np
 
 try:
-    from benchmarks.common import pct
+    from benchmarks.common import pct, stacked_vs_seq
 except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
-    from common import pct
+    from common import pct, stacked_vs_seq
 
 
 def make_workload(n=30000, d=32, n_clusters=64, scale=2.5, n_queries=32,
@@ -83,6 +87,35 @@ def bench_engine(idx, trace, k, *, use_cache, slot_size=8, passes=2):
     return per_pass
 
 
+def bench_stacked(data, trace, k, *, n0=64, fanout=6, iters=10):
+    """Sequential vs stacked segment sweep over a fanned-out mutable
+    snapshot of the serving workload (p50/p99, tiles skipped), plus the
+    engine's auto-dispatch route counts over the same snapshot."""
+    from repro.core.balltree import normalize_query
+    from repro.serve import DispatchPolicy, P2HEngine
+    from repro.stream import CompactionPolicy, MutableP2HIndex
+
+    chunk = -(-len(data) // fanout)
+    m = MutableP2HIndex.from_data(
+        data[:chunk], n0=n0,
+        policy=CompactionPolicy(delta_capacity=chunk, tombstone_frac=0.95,
+                                max_segments=4 * fanout))
+    for c in range(1, fanout):  # one delta flush -> one sealed segment
+        m.insert_batch(data[c * chunk:(c + 1) * chunk])
+        m.compact()
+    snap = m.snapshot()
+    qn = normalize_query(trace).astype(np.float32)
+    res = {"fanout": sum(1 for s in snap.segments if s.live)}
+    res.update(stacked_vs_seq(
+        lambda flag: snap.query(qn, k, stacked=flag,
+                                return_counters=True)[2],
+        iters=iters))
+    engine = P2HEngine(m, policy=DispatchPolicy(prefer_pallas=False))
+    engine.query(trace, k=k)
+    res["routes"] = engine.stats()["routes"]
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=30000)
@@ -125,7 +158,18 @@ def main(argv=None):
           f"verified -{cold['verified'] - warm['verified']}")
     assert warm["tiles_skipped"] > cold["tiles_skipped"], \
         "warm lambda cache must prune strictly more tiles than cold"
-    return {"naive": naive, "cold": cold, "warm": warm}
+
+    stacked = bench_stacked(data, trace, args.k, n0=args.n0)
+    seq, stk = stacked["seq"], stacked["stacked"]
+    print(f"mutable snapshot, fan-out {stacked['fanout']}: sequential "
+          f"sweep p50 {seq['p50_ms']:.1f} ms p99 {seq['p99_ms']:.1f} ms "
+          f"({seq['tiles_skipped']} tiles skipped)  |  stacked "
+          f"p50 {stk['p50_ms']:.1f} ms p99 {stk['p99_ms']:.1f} ms "
+          f"({stk['tiles_skipped']} tiles skipped, incl. forced pad/dead "
+          f"skips)  ->  {seq['p50_ms'] / max(stk['p50_ms'], 1e-9):.2f}x "
+          f"p50 speedup; engine routes {stacked['routes']}")
+    return {"naive": naive, "cold": cold, "warm": warm,
+            "stacked": stacked}
 
 
 def run(csv) -> None:
@@ -141,6 +185,12 @@ def run(csv) -> None:
         csv(f"serve,{mode},{r['qps']:.1f},{r['p50_ms']:.3f},"
             f"{r['p99_ms']:.3f},{r.get('tiles_skipped', '')},"
             f"{r.get('verified', '')}")
+    stacked = res["stacked"]
+    csv("serve_stacked,mode,p50_ms,p99_ms,tiles_skipped,fanout")
+    for mode in ("seq", "stacked"):
+        r = stacked[mode]
+        csv(f"serve_stacked,{mode},{r['p50_ms']:.3f},{r['p99_ms']:.3f},"
+            f"{r['tiles_skipped']},{stacked['fanout']}")
 
 
 if __name__ == "__main__":

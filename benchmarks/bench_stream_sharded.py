@@ -14,7 +14,14 @@ The scaling story the sharded mutable index buys (vs the single-host
   * **compaction pause overlap** -- shards compact independently; the
     fraction of total compaction wall time during which >= 2 shards were
     compacting concurrently measures how much restructuring work the
-    sharding hides (0 on a single-host index by construction).
+    sharding hides (0 on a single-host index by construction);
+  * **stacked vs sequential sweep** -- on the final (multi-segment)
+    snapshot pin, the two-round exchange's round 2 run as the
+    segment-parallel one-launch stacked sweep vs the sequential
+    per-shard/per-segment loop: p50/p99 latency and tiles skipped
+    (the stacked grid force-skips its pad/dead tiles; its per-live-tile
+    cap is looser -- both counters are reported, that is the measured
+    crossover ``DispatchPolicy.stacked_min_fanout`` encodes).
 
 Run:
 
@@ -28,9 +35,9 @@ import time
 import numpy as np
 
 try:
-    from benchmarks.common import pct
+    from benchmarks.common import pct, stacked_vs_seq
 except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
-    from common import pct
+    from common import pct, stacked_vs_seq
 
 
 def overlap_stats(log):
@@ -52,6 +59,26 @@ def overlap_stats(log):
         depth += delta
         prev = t
     return total, overlap
+
+
+def sweep_compare(snap, queries, k, *, iters=20):
+    """Stacked vs sequential sweep over one pinned (multi-segment)
+    snapshot: p50/p99 per query batch + tiles skipped per batch."""
+    from repro.core.balltree import normalize_query
+
+    qn = normalize_query(queries).astype(np.float32)
+    modes = stacked_vs_seq(
+        lambda flag: snap.query(qn, k, stacked=flag,
+                                return_counters=True)[2],
+        iters=iters)
+    out = {"sweep_fanout": sum(1 for seg in snap.segments if seg.live)}
+    for mode, r in modes.items():
+        out[f"{mode}_sweep_p50_ms"] = r["p50_ms"]
+        out[f"{mode}_sweep_p99_ms"] = r["p99_ms"]
+        out[f"{mode}_tiles_skipped"] = r["tiles_skipped"]
+    out["stacked_speedup_p50"] = (out["seq_sweep_p50_ms"]
+                                  / max(out["stacked_sweep_p50_ms"], 1e-9))
+    return out
 
 
 def run_sharded_stream(args):
@@ -108,11 +135,15 @@ def run_sharded_stream(args):
     assert np.allclose(bd, np.asarray(ed), rtol=1e-4, atol=1e-5), \
         "sharded stream results diverged from the brute-force oracle"
 
+    # stacked vs sequential sweep on the final multi-segment pin
+    sweep = sweep_compare(snap, hot, args.k)
+
     log = m.compaction_log
     pauses = [c["wall_s"] for c in log]
     compact_total, compact_overlap = overlap_stats(log)
     shard_tp = per_shard_writes / max(wall, 1e-9)
     res = {
+        **sweep,
         "shards": args.shards,
         "ops": args.ops,
         "wall_s": wall,
@@ -180,6 +211,15 @@ def main(argv=None):
           f"{res['compact_total_s']*1e3:.0f} ms total); "
           f"final: {res['final_live']} live in {res['segments']} segments, "
           f"epoch vector {res['epoch']}")
+    print(f"sweep @ fan-out {res['sweep_fanout']}: sequential "
+          f"p50 {res['seq_sweep_p50_ms']:.1f} ms "
+          f"p99 {res['seq_sweep_p99_ms']:.1f} ms "
+          f"({res['seq_tiles_skipped']} tiles skipped)  |  stacked "
+          f"p50 {res['stacked_sweep_p50_ms']:.1f} ms "
+          f"p99 {res['stacked_sweep_p99_ms']:.1f} ms "
+          f"({res['stacked_tiles_skipped']} tiles skipped, incl. forced "
+          f"pad/dead-tile skips)  ->  {res['stacked_speedup_p50']:.2f}x "
+          "p50 speedup")
     return res
 
 
@@ -193,7 +233,11 @@ def run(csv) -> None:
                 "insert_p99_us", "delete_p50_us", "delete_p99_us",
                 "query_p50_ms", "query_p99_ms", "compactions",
                 "compact_p50_ms", "compact_max_ms", "compact_overlap_frac",
-                "final_live", "segments"):
+                "final_live", "segments", "sweep_fanout",
+                "seq_sweep_p50_ms", "seq_sweep_p99_ms",
+                "seq_tiles_skipped", "stacked_sweep_p50_ms",
+                "stacked_sweep_p99_ms", "stacked_tiles_skipped",
+                "stacked_speedup_p50"):
         csv(f"stream_sharded,{key},{res[key]:.3f}"
             if isinstance(res[key], float)
             else f"stream_sharded,{key},{res[key]}")

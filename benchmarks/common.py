@@ -56,3 +56,27 @@ def timeit(fn, *args, repeats=3, **kw):
         out = fn(*args, **kw)
         ts.append(time.perf_counter() - t0)
     return min(ts), out
+
+
+def stacked_vs_seq(query_fn, *, iters=20):
+    """Stacked-vs-sequential sweep timing harness shared by bench_serve
+    and bench_stream_sharded.  ``query_fn(stacked: bool)`` runs one
+    query batch and returns the (8,) search counters; the first call per
+    mode doubles as compile warmup, then the timed iterations alternate
+    modes so machine noise hits both equally.  Returns ``{mode:
+    {"p50_ms", "p99_ms", "tiles_skipped"}}`` for modes ``seq`` /
+    ``stacked`` (stacked skip counts include the force-skipped pad/dead
+    tiles of the common grid)."""
+    modes = (("seq", False), ("stacked", True))
+    skips = {mode: int(np.asarray(query_fn(flag))[7])
+             for mode, flag in modes}
+    lat = {mode: [] for mode, _ in modes}
+    for _ in range(iters):
+        for mode, flag in modes:
+            t0 = time.perf_counter()
+            query_fn(flag)
+            lat[mode].append(time.perf_counter() - t0)
+    return {mode: {"p50_ms": pct(lat[mode], 50) * 1e3,
+                   "p99_ms": pct(lat[mode], 99) * 1e3,
+                   "tiles_skipped": skips[mode]}
+            for mode, _ in modes}

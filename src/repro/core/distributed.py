@@ -112,7 +112,8 @@ def _pad_tree(t: FlatTree, m: int, L: int, n0: int) -> FlatTree:
 
 def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
                        method: str = "sweep", frac: float = 1.0,
-                       lambda_cap=None, return_info: bool = False):
+                       lambda_cap=None, return_info: bool = False,
+                       stacked: bool | None = None):
     """Host-orchestrated two-round lambda exchange over *callable shard
     backends* -- the frozen forest's exchange generalized to heterogeneous
     per-shard states.
@@ -157,6 +158,21 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     rule): one capless round at ``frac``.  ``return_info=True`` appends a
     dict with ``lambda0`` (B,) and per-shard ``round1_kth`` (S, B) -- the
     regression surface for the exchange-validity invariant test.
+
+    ``stacked`` controls round 2's *segment-parallel* form: shard
+    backends that expose ``stacked_leaves()`` (snapshot pins of the
+    mutable index) have their segment tile-sets concatenated and swept
+    by **one** device-side launch under ``lambda0``
+    (:func:`repro.kernels.stacked_sweep.stacked_sweep_search`) instead
+    of the sequential host loop; backends without stacked leaves keep
+    the loop.  ``None`` auto-promotes the exact ``sweep``/``pallas``
+    methods when the stackable shards' total live-segment fan-out
+    reaches ``STACKED_FANOUT_DEFAULT``; ``True`` (or
+    ``method="stacked"``) forces it, ``False`` forbids it (and is
+    forwarded to stackable shards so nothing stacks per-shard either --
+    the pure-sequential reference the regression fence diffs against).
+    Exact either way: every segment is swept under the same valid
+    ``lambda0`` cap; only tile-skip counts differ.
     """
     shards = tuple(shards)  # iterated once per round: reject generators
     q = jnp.asarray(np.atleast_2d(np.asarray(queries)), jnp.float32)
@@ -181,12 +197,26 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
             parts_d.append(jnp.asarray(bd1))
             parts_i.append(jnp.asarray(bi1))
         lam0 = lam
+    base = "sweep" if method == "stacked" else method
+    slabs, cnt_stk = _stacked_round2(shards, q, k, method=method,
+                                     stacked=stacked, lam0=lam0)
+    if cnt_stk is not None:
+        counters += cnt_stk
     round2_kth = []
-    for s in shards:
-        bd, bi, cnt = s.query(q, k, method=method, frac=frac,
-                              lambda_cap=lam0, return_counters=True,
-                              include_deltas=method == "beam")
-        counters += np.asarray(cnt, np.int64)
+    for si, s in enumerate(shards):
+        if si in slabs:
+            sd, sg = slabs[si]  # (Ns, B, k) per-segment top-k under lam0
+            Ns = sd.shape[0]
+            bd, bi = search.merge_topk(
+                jnp.moveaxis(sd, 0, 1).reshape(B, Ns * k),
+                jnp.moveaxis(sg, 0, 1).reshape(B, Ns * k), k)
+        else:
+            kw = ({"stacked": stacked}
+                  if hasattr(s, "stacked_leaves") else {})
+            bd, bi, cnt = s.query(q, k, method=base, frac=frac,
+                                  lambda_cap=lam0, return_counters=True,
+                                  include_deltas=method == "beam", **kw)
+            counters += np.asarray(cnt, np.int64)
         round2_kth.append(np.asarray(jnp.asarray(bd)[:, k - 1]))
         parts_d.append(jnp.asarray(bd))
         parts_i.append(jnp.asarray(bi))
@@ -214,6 +244,50 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
         }
         return bd, bi, counters, info
     return bd, bi, counters
+
+
+def _stacked_round2(shards, q, k, *, method, stacked, lam0):
+    """Resolve + run the segment-parallel round 2: every stackable
+    shard's segment tile-sets concatenated and swept by one launch under
+    ``lambda0``.  Returns ``({shard index: (dists (Ns, B, k), global ids
+    (Ns, B, k))}, counters)`` for the shards served by the launch --
+    ``({}, None)`` when the sequential loop should run instead."""
+    if (lam0 is None or stacked is False
+            or method not in ("sweep", "pallas", "stacked")):
+        return {}, None
+    stackable = [(si, s) for si, s in enumerate(shards)
+                 if callable(getattr(s, "stacked_leaves", None))
+                 and len(getattr(s, "segments", ())) > 0]
+    if not stackable:
+        return {}, None
+    if stacked is None and method != "stacked":
+        from repro.kernels.stacked_sweep import (STACKED_DENSITY_DEFAULT,
+                                                 STACKED_FANOUT_DEFAULT,
+                                                 tile_density)
+
+        fanout = sum(1 for _, s in stackable
+                     for seg in s.segments if seg.live)
+        all_segs = [seg for _, s in stackable for seg in s.segments]
+        # the concatenated grid re-pads every shard to the global max
+        # tile count, so density is judged on the flattened segment set
+        if (fanout < STACKED_FANOUT_DEFAULT
+                or tile_density(all_segs) < STACKED_DENSITY_DEFAULT):
+            return {}, None
+    from repro.kernels.stacked_sweep import (concat_cached,
+                                             stacked_sweep_search)
+
+    stks = [s.stacked_leaves() for _, s in stackable]
+    combined = concat_cached(stks)
+    is_bc = getattr(stackable[0][1], "variant", "bc") == "bc"
+    sd, sg, cnt, _ = stacked_sweep_search(
+        combined, q, k, lambda_cap=lam0, use_ball=is_bc, use_cone=is_bc,
+        use_kernel=True if method == "pallas" else None)
+    slabs, off = {}, 0
+    for (si, _), stk in zip(stackable, stks):
+        n = stk.num_segments
+        slabs[si] = (sd[off:off + n], sg[off:off + n])
+        off += n
+    return slabs, np.asarray(cnt, np.int64)
 
 
 @dataclasses.dataclass

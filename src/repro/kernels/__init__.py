@@ -1,9 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot spot: the fused
 tile-sweep candidate-verification scan (|QX^T| + bound pruning + running
 top-k).  ``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp
-oracles, ``p2h_scan`` the pl.pallas_call kernel itself.
+oracles, ``p2h_scan`` the pl.pallas_call kernel itself, and
+``stacked_sweep`` the segment-parallel variant (N stacked leaf tile-sets
+swept by one launch under a single entry cap -- the device-side form of
+the mutable index's segment fan-out and the two-round exchange's round
+2).
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, ref, stacked_sweep  # noqa: F401
 from repro.kernels.ops import sweep_search_pallas  # noqa: F401
+from repro.kernels.stacked_sweep import (  # noqa: F401
+    StackedLeaves, stacked_sweep_search)
 
-__all__ = ["ops", "ref", "sweep_search_pallas"]
+__all__ = ["ops", "ref", "stacked_sweep", "sweep_search_pallas",
+           "StackedLeaves", "stacked_sweep_search"]

@@ -13,9 +13,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import functools
+
 from repro.kernels.p2h_scan import _cone_cases
 
-__all__ = ["p2h_sweep_ref"]
+__all__ = ["p2h_sweep_ref", "stacked_sweep_ref"]
 
 
 def p2h_sweep_ref(
@@ -78,3 +80,24 @@ def p2h_sweep_ref(
     lbb = leaf_lb.reshape(nqb, bq, -1)
     td, ti, ns = jax.vmap(one_block)(qb, qn, cp, ipb, lbb, visit)
     return td.reshape(B, k), ti.reshape(B, k), ns.reshape(nqb, 1)
+
+
+def stacked_sweep_ref(
+    pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm,
+    queries, qnorm, cap, leaf_ip, leaf_lb, visit,
+    *, k: int, bq: int = 8, use_ball: bool = True, use_cone: bool = True,
+):
+    """Oracle for :func:`repro.kernels.stacked_sweep.stacked_sweep`:
+    :func:`p2h_sweep_ref` vmapped over the leading segment axis.  Tile
+    operands carry a leading ``N``; queries / qnorm / the entry cap are
+    shared across segments.  Returns ``(dists (N, B, k) ascending,
+    global ids (N, B, k), skips (N, B//bq, 1))`` with the same
+    block-granular skip semantics as the stacked kernel (pad tiles enter
+    with a ``+inf`` node bound, so they are always skipped and always
+    counted)."""
+    fn = functools.partial(p2h_sweep_ref, k=k, bq=bq, use_ball=use_ball,
+                           use_cone=use_cone)
+    return jax.vmap(
+        fn, in_axes=(0, 0, 0, 0, 0, 0, None, None, None, 0, 0, 0),
+    )(pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm,
+      queries, qnorm, cap, leaf_ip, leaf_lb, visit)

@@ -1,0 +1,612 @@
+"""Segment-parallel P2H sweep: N stacked leaf tile-sets, one launch.
+
+The mutable/sharded serving path (``repro.stream``) re-serializes the
+paper's pruning on the host: ``Snapshot.query`` walks a shard's segments
+one by one, and round 2 of ``two_round_exchange`` walks shards one by
+one, each threading the running lambda cap sequentially.  This module is
+the device-side form of that sweep: the leaf arrays of ``N`` immutable
+segments are stacked into one padded ``(N, L, n0, d)`` tile grid (a
+:class:`StackedLeaves`, cached per snapshot because segments are sealed)
+and swept by **one** Pallas program with grid ``(N, query-blocks,
+tiles)`` -- or by its vmapped pure-jnp twin off-TPU -- under a single
+*entry* cap per query instead of the sequentially-threaded one.
+
+The tradeoff is explicit: within a segment the running top-k still
+tightens tile by tile, but segment ``i`` no longer sees segments
+``< i``'s merged k-th, so the per-tile threshold is looser and fewer
+*live* tiles are skipped than on the sequential path (``lam_stacked =
+min(entry cap, segment running k-th) >= lam_seq``, which also min's in
+the cross-segment merged k-th).  What the stack buys back is launch
+shape: one matmul-shaped program per round instead of ``N`` backend
+calls with host merges (and device syncs) between them.  Pad tiles --
+ragged segments are padded to a common quantized tile count, empty /
+all-tombstone tiles are masked via the backends' ``point_ids == -1``
+convention -- are force-skipped through a ``+inf`` node bound and show
+up in the per-segment skip counters, so the counters account for every
+tile the launch covers.
+
+Exactness argument is unchanged from ``repro.core.search``: the entry
+cap is a valid upper bound on the global k-th distance (the delta scan's
+k-th, an engine cache cap, or the exchange's lambda0), and per-segment
+pruning against ``min(cap, running k-th)`` only ever discards candidates
+that cannot enter that segment's -- hence the merged -- top-k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bounds
+from repro.kernels.p2h_scan import _cone_cases
+
+__all__ = ["StackedLeaves", "stacked_sweep", "stacked_sweep_search",
+           "prepare_stacked_operands", "concat_cached", "tile_density",
+           "STACKED_FANOUT_DEFAULT", "STACKED_DENSITY_DEFAULT"]
+
+_LANE = 128
+_NEG_FILL = jnp.inf
+
+#: default segment fan-out at/above which exact sweeps auto-promote to the
+#: stacked launch (``Snapshot.query`` / round 2 of the two-round exchange);
+#: ``DispatchPolicy.stacked_min_fanout`` is the serving-layer knob.
+STACKED_FANOUT_DEFAULT = 4
+
+#: minimum live-tile fraction of the common grid for auto-promotion:
+#: heavily ragged stacks (one big segment + many tiny ones) spend most of
+#: the launch on pad tiles, which the branch-free jnp path can only mask,
+#: not elide -- below this density the sequential walk stays cheaper
+#: off-TPU.  ``DispatchPolicy.stacked_min_density`` is the serving knob.
+STACKED_DENSITY_DEFAULT = 0.5
+
+
+def tile_density(segments) -> float:
+    """Raggedness signal: real-tile fraction of the rectangular grid
+    ``segments`` stack into, judged on the *unquantized* max tile count
+    (1.0 = perfectly even segments; the additional ``_TILE_QUANTUM``
+    rounding waste is bounded per segment and shrinks with grid size,
+    so it is not held against the decision)."""
+    counts = [s.tree.num_leaves for s in segments]
+    if not counts:
+        return 1.0
+    return sum(counts) / (len(counts) * max(counts))
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+#: tile-count quantum: the common grid's tile count is the max segment's,
+#: rounded up to a multiple of this.  Coarse enough that snapshots which
+#: only differ by a few leaves share jit traces (and cross-shard stacks
+#: usually concatenate without re-padding), fine enough that pad tiles --
+#: which the branch-free jnp path cannot elide, only mask -- stay a small
+#: fraction of the launch.
+_TILE_QUANTUM = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedLeaves:
+    """Leaf tile arrays of N sealed segments, padded to one common grid.
+
+    Built once per compaction (segments are immutable between rebuilds)
+    and kept device-resident; tombstone-only republishes swap just the
+    ``ids``/``valid`` planes (:meth:`with_updated_ids`) because deletes
+    never touch tile geometry.  ``ids`` stores **global** ids directly
+    (-1 = pad or tombstone), so kernel output needs no per-segment
+    local-id translation.  The tile count ``L`` is the max segment's,
+    quantized to ``_TILE_QUANTUM`` (jit-trace sharing / cross-shard
+    concat alignment vs pad-tile waste -- see the constant's note).
+    """
+
+    pts: jnp.ndarray  # (N, L, n0, d) f32 -- unpadded columns (the
+    #   kernel path lane-pads per call, exactly like ops.prepare_operands;
+    #   the jnp path multiplies at true d -- lane zeros are free on the
+    #   MXU but quadruple CPU matmul work)
+    ids: jnp.ndarray  # (N, L, n0) i32 -- global ids, -1 = pad/tombstone
+    rx: jnp.ndarray  # (N, L, n0) f32
+    xc: jnp.ndarray  # (N, L, n0) f32
+    xs: jnp.ndarray  # (N, L, n0) f32
+    leaf_centers: jnp.ndarray  # (N, L, d) f32 -- unpadded d (phase-1 matmul)
+    leaf_radii: jnp.ndarray  # (N, L) f32
+    leaf_cnorm: jnp.ndarray  # (N, L, 1) f32
+    valid: jnp.ndarray  # (N, L) bool -- tile holds >= 1 live point
+    n_leaves: jnp.ndarray  # (N,) i32 -- real (unpadded) tile counts
+    uids: tuple  # segment uids, in stack order (cache identity)
+    n0: int
+    d: int
+
+    @property
+    def num_segments(self) -> int:
+        return self.pts.shape[0]
+
+    @property
+    def num_tiles(self) -> int:
+        return self.pts.shape[1]
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_segments(cls, segments) -> "StackedLeaves":
+        """Stack ``segments`` (objects with ``.uid``, ``.tree`` --
+        a :class:`repro.core.balltree.FlatTree` -- and ``.gids``, the
+        local-id -> global-id table) into one padded tile grid."""
+        segments = tuple(segments)
+        assert segments, "cannot stack zero segments"
+        t0 = segments[0].tree
+        n0, d = t0.n0, t0.d
+        L = _ceil_to(max(t.tree.num_leaves for t in segments),
+                     _TILE_QUANTUM)
+        N = len(segments)
+        pts = np.zeros((N, L, n0, d), np.float32)
+        ids = np.full((N, L, n0), -1, np.int32)
+        rx = np.full((N, L, n0), -1.0, np.float32)
+        xc = np.zeros((N, L, n0), np.float32)
+        xs = np.zeros((N, L, n0), np.float32)
+        centers = np.zeros((N, L, d), np.float32)
+        radii = np.zeros((N, L), np.float32)
+        cnorm = np.zeros((N, L, 1), np.float32)
+        n_leaves = np.zeros((N,), np.int32)
+        for s, seg in enumerate(segments):
+            t = seg.tree
+            Ls = t.num_leaves
+            assert t.n0 == n0 and t.d == d, "segments disagree on tiling"
+            pts[s, :Ls] = np.asarray(t.points).reshape(Ls, n0, d)
+            ids[s, :Ls] = _global_ids(t, seg.gids)
+            rx[s, :Ls] = np.asarray(t.rx).reshape(Ls, n0)
+            xc[s, :Ls] = np.asarray(t.xcos).reshape(Ls, n0)
+            xs[s, :Ls] = np.asarray(t.xsin).reshape(Ls, n0)
+            centers[s, :Ls] = np.asarray(t.leaf_centers)
+            radii[s, :Ls] = np.asarray(t.leaf_radii)
+            cnorm[s, :Ls, 0] = np.asarray(t.leaf_cnorm)
+            n_leaves[s] = Ls
+        valid = (ids >= 0).any(axis=2)
+        return cls(pts=jnp.asarray(pts), ids=jnp.asarray(ids),
+                   rx=jnp.asarray(rx), xc=jnp.asarray(xc),
+                   xs=jnp.asarray(xs), leaf_centers=jnp.asarray(centers),
+                   leaf_radii=jnp.asarray(radii),
+                   leaf_cnorm=jnp.asarray(cnorm),
+                   valid=jnp.asarray(valid), n_leaves=jnp.asarray(n_leaves),
+                   uids=tuple(seg.uid for seg in segments), n0=n0, d=d)
+
+    def with_updated_ids(self, changed: dict) -> "StackedLeaves":
+        """New stack with the ids/valid planes of ``changed`` segments
+        (``{stack index: segment}``) rewritten -- the tombstone-only
+        republish path: geometry arrays are shared, not copied."""
+        ids = self.ids
+        uids = list(self.uids)
+        for s, seg in changed.items():
+            plane = jnp.full((self.num_tiles, self.n0), -1, jnp.int32)
+            plane = plane.at[:seg.tree.num_leaves].set(
+                jnp.asarray(_global_ids(seg.tree, seg.gids)))
+            ids = ids.at[s].set(plane)
+            uids[s] = seg.uid
+        return dataclasses.replace(self, ids=ids,
+                                   valid=(ids >= 0).any(axis=2),
+                                   uids=tuple(uids))
+
+    @staticmethod
+    def concat(stacks) -> "StackedLeaves":
+        """Concatenate stacks along the segment axis (the cross-shard
+        one-launch round 2), re-padding smaller tile grids to the max.
+        Power-of-two tile counts make the pad a no-op most of the time."""
+        stacks = list(stacks)
+        assert stacks
+        if len(stacks) == 1:
+            return stacks[0]
+        n0, d = stacks[0].n0, stacks[0].d
+        assert all(s.n0 == n0 and s.d == d for s in stacks), \
+            "stacks disagree on tiling"
+        L = max(s.num_tiles for s in stacks)
+
+        def padL(a, fill):
+            pad = L - a.shape[1]
+            if pad == 0:
+                return a
+            w = [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
+            return jnp.pad(a, w, constant_values=fill)
+
+        return StackedLeaves(
+            pts=jnp.concatenate([padL(s.pts, 0.0) for s in stacks]),
+            ids=jnp.concatenate([padL(s.ids, -1) for s in stacks]),
+            rx=jnp.concatenate([padL(s.rx, -1.0) for s in stacks]),
+            xc=jnp.concatenate([padL(s.xc, 0.0) for s in stacks]),
+            xs=jnp.concatenate([padL(s.xs, 0.0) for s in stacks]),
+            leaf_centers=jnp.concatenate(
+                [padL(s.leaf_centers, 0.0) for s in stacks]),
+            leaf_radii=jnp.concatenate(
+                [padL(s.leaf_radii, 0.0) for s in stacks]),
+            leaf_cnorm=jnp.concatenate(
+                [padL(s.leaf_cnorm, 0.0) for s in stacks]),
+            valid=jnp.concatenate([padL(s.valid, False) for s in stacks]),
+            n_leaves=jnp.concatenate([s.n_leaves for s in stacks]),
+            uids=tuple(u for s in stacks for u in s.uids),
+            n0=n0, d=d)
+
+
+#: identity-keyed LRU over cross-shard concatenations: repeat queries
+#: against the same epoch-vector pin present the same per-shard stack
+#: objects, so the combined grid is reused instead of re-copied per
+#: query.  Entries hold strong refs, which is also what keeps their
+#: id()-tuple keys unambiguous while cached.  Mutations take the lock:
+#: concurrent serving threads (and background compactors republishing
+#: underneath them) hit this on every stacked round 2.
+_CONCAT_CACHE: "dict[tuple, tuple]" = {}
+_CONCAT_CACHE_SIZE = 8
+_CONCAT_LOCK = threading.Lock()
+
+
+def concat_cached(stacks) -> StackedLeaves:
+    """:meth:`StackedLeaves.concat` behind a small identity-keyed LRU
+    (the per-query entry point of the exchange's stacked round 2)."""
+    stacks = tuple(stacks)
+    key = tuple(id(s) for s in stacks)
+    with _CONCAT_LOCK:
+        hit = _CONCAT_CACHE.pop(key, None)
+        if hit is not None and all(a is b for a, b in zip(hit[0], stacks)):
+            _CONCAT_CACHE[key] = hit  # re-insert: most recently used
+            return hit[1]
+    combined = StackedLeaves.concat(stacks)  # build outside the lock
+    with _CONCAT_LOCK:
+        _CONCAT_CACHE[key] = (stacks, combined)
+        while len(_CONCAT_CACHE) > _CONCAT_CACHE_SIZE:
+            _CONCAT_CACHE.pop(next(iter(_CONCAT_CACHE)))
+    return combined
+
+
+def _global_ids(tree, gids) -> np.ndarray:
+    """(L, n0) global-id tiles: ``point_ids`` translated through the
+    segment's gid table (-1 pad/tombstone rows stay -1)."""
+    pid = np.asarray(tree.point_ids).reshape(tree.num_leaves, tree.n0)
+    gids = np.asarray(gids, np.int32)
+    safe = np.clip(pid, 0, max(0, len(gids) - 1))
+    return np.where(pid >= 0,
+                    gids[safe] if len(gids) else -1,
+                    -1).astype(np.int32)
+
+
+# ======================================================================
+# phase 1: stacked bounds + per-(segment, query-block) visit order
+# ======================================================================
+
+
+def prepare_stacked_operands(stk: StackedLeaves, queries, *, frac=1.0,
+                             bq=8, lambda_cap=None, lane_pad=False):
+    """Stacked twin of :func:`repro.kernels.ops.prepare_operands`.
+
+    One einsum gives ``<q, leaf.c>`` for every (segment, leaf); invalid
+    (pad / all-tombstone) tiles get a ``+inf`` node bound -- always
+    skipped, always counted -- and sort to the end of each visit list.
+    ``lane_pad`` zero-pads point/query columns to a lane multiple (the
+    Pallas kernel's tiling requirement; inner products are unchanged) --
+    the jnp reference path keeps the true ``d``.
+    """
+    N, L = stk.num_segments, stk.num_tiles
+    d = stk.d
+    dp = _ceil_to(d, _LANE) if lane_pad else d
+    B0 = queries.shape[0]
+    Bp = _ceil_to(B0, bq)
+    q = jnp.asarray(queries, jnp.float32)
+    if Bp != B0:  # replicate the last query (rows discarded on return)
+        q = jnp.concatenate(
+            [q, jnp.broadcast_to(q[-1:], (Bp - B0, d))], axis=0)
+    qn = jnp.sqrt(jnp.sum(q * q, axis=1, keepdims=True))  # (Bp, 1)
+    cap = (jnp.full((Bp, 1), jnp.inf, jnp.float32) if lambda_cap is None
+           else jnp.pad(jnp.asarray(lambda_cap, jnp.float32).reshape(B0, 1),
+                        ((0, Bp - B0), (0, 0)), constant_values=jnp.inf))
+
+    ipc = jnp.einsum("bd,nld->nbl", q, stk.leaf_centers)  # (N, Bp, L)
+    lb = bounds.node_ball_bound(ipc, qn[None, :, :],
+                                stk.leaf_radii[:, None, :])
+    lb = jnp.where(stk.valid[:, None, :], lb, jnp.inf)
+    pref = jnp.min(jnp.abs(ipc).reshape(N, Bp // bq, bq, L), axis=2)
+    pref = jnp.where(stk.valid[:, None, :], pref, jnp.inf)
+    visit = jnp.argsort(pref, axis=2).astype(jnp.int32)  # (N, nqb, L)
+    n_visit = max(1, min(L, int(round(frac * L))))
+    visit = visit[:, :, :n_visit]
+
+    pts = (stk.pts if dp == d else
+           jnp.pad(stk.pts, ((0, 0), (0, 0), (0, 0), (0, dp - d))))
+    ops = dict(
+        pts_tiles=pts,
+        ids_tiles=stk.ids,
+        rx_tiles=stk.rx,
+        xc_tiles=stk.xc,
+        xs_tiles=stk.xs,
+        leaf_cnorm=stk.leaf_cnorm,
+        queries=q if dp == d else jnp.pad(q, ((0, 0), (0, dp - d))),
+        qnorm=qn,
+        cap=cap,
+        leaf_ip=ipc,
+        leaf_lb=lb,
+        visit=visit,
+    )
+    return ops, B0
+
+
+# ======================================================================
+# the stacked Pallas kernel
+# ======================================================================
+
+
+def stacked_sweep_kernel(
+    # scalar prefetch
+    visit_ref,  # (N, nqb, n_visit) i32 -- per-(segment, block) visit order
+    # inputs (blocked)
+    q_ref,      # (bq, dp) f32 -- query block (resident across the sweep)
+    qn_ref,     # (bq, 1)  f32 -- ||q||
+    cap_ref,    # (bq, 1)  f32 -- the single entry cap (delta k-th /
+    #                             cache cap / exchange lambda0)
+    ip_ref,     # (1, bq, 1) f32 -- <q, leaf.c> for this tile
+    lb_ref,     # (1, bq, 1) f32 -- node-level ball bound (+inf = pad tile)
+    cn_ref,     # (1, 1, 1)  f32 -- ||leaf.c||
+    pts_ref,    # (1, 1, n0, dp) f32 -- the tile's points
+    ids_ref,    # (1, 1, n0) i32 -- global ids (-1 = pad/tombstone)
+    rx_ref,     # (1, 1, n0) f32
+    xc_ref,     # (1, 1, n0) f32
+    xs_ref,     # (1, 1, n0) f32
+    # outputs
+    out_d_ref,  # (1, bq, k) f32 -- this segment's top-k (unsorted)
+    out_i_ref,  # (1, bq, k) i32
+    out_s_ref,  # (1, 1, 1)  i32 -- per-(segment, block) skipped-tile count
+    # scratch
+    topd,       # VMEM (bq, k) f32 -- running per-segment top-k
+    topi,       # VMEM (bq, k) i32
+    nskip,      # SMEM (1,) i32
+    *,
+    k: int,
+    use_ball: bool,
+    use_cone: bool,
+):
+    """One grid step = one leaf tile of one segment for one query block.
+
+    Same tile math as :func:`repro.kernels.p2h_scan.p2h_sweep_kernel`;
+    the extra leading (sequential) grid dimension is the segment, and the
+    running top-k scratch re-initializes at each segment's first tile --
+    per-segment top-k under the shared entry cap, never a cap threaded
+    across segments.
+    """
+    del visit_ref  # consumed by the index maps
+    j = pl.program_id(2)
+    n_tiles = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():  # fresh segment (or query block): reset the running top-k
+        topd[...] = jnp.full(topd.shape, _NEG_FILL, topd.dtype)
+        topi[...] = jnp.full(topi.shape, -1, topi.dtype)
+        nskip[0] = 0
+
+    lam = jnp.minimum(jnp.max(topd[...], axis=1), cap_ref[..., 0])  # (bq,)
+    active = lb_ref[0, :, 0] < lam  # Theorem 2 prune (pad tiles: lb=+inf)
+
+    @pl.when(jnp.logical_not(jnp.any(active)))
+    def _count_skip():
+        nskip[0] = nskip[0] + 1
+
+    @pl.when(jnp.any(active))
+    def _scan_tile():
+        ids = ids_ref[0, 0]       # (n0,)
+        keep = (ids >= 0)[None, :] & active[:, None]  # (bq, n0)
+        ip = ip_ref[0, :, 0]      # (bq,)
+        qn = qn_ref[..., 0]
+        if use_ball:  # Corollary 1 (rx sorted descending within the tile)
+            pb = jnp.maximum(
+                jnp.abs(ip)[:, None] - qn[:, None] * rx_ref[0, 0][None, :],
+                0.0)
+            keep &= pb < lam[:, None]
+        if use_cone:  # Theorem 3
+            cn = jnp.maximum(cn_ref[0, 0, 0], 1e-12)
+            qcos = ip / cn
+            qsin = jnp.sqrt(jnp.maximum(qn * qn - qcos * qcos, 0.0))
+            cb = _cone_cases(qcos[:, None], qsin[:, None],
+                             xc_ref[0, 0][None, :], xs_ref[0, 0][None, :])
+            keep &= cb < lam[:, None]
+        # verification matmul on the MXU: (bq, dp) x (dp, n0)
+        absip = jnp.abs(
+            jax.lax.dot_general(
+                q_ref[...], pts_ref[0, 0],
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        )
+        cand = jnp.where(keep, absip, _NEG_FILL)  # (bq, n0)
+
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (cand.shape[0], k), 1)
+        iota_n = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
+
+        def insert(_, carry):
+            td, ti, cd = carry
+            m = jnp.min(cd, axis=1)
+            am = jnp.argmin(cd, axis=1).astype(jnp.int32)
+            wv = jnp.max(td, axis=1)
+            wa = jnp.argmax(td, axis=1).astype(jnp.int32)
+            better = m < wv
+            oh_w = iota_k == wa[:, None]
+            oh_c = iota_n == am[:, None]
+            win_id = jnp.max(jnp.where(oh_c, ids[None, :], -1), axis=1)
+            td = jnp.where(oh_w & better[:, None], m[:, None], td)
+            ti = jnp.where(oh_w & better[:, None], win_id[:, None], ti)
+            cd = jnp.where(oh_c & better[:, None], _NEG_FILL, cd)
+            return td, ti, cd
+
+        td, ti, _ = jax.lax.fori_loop(
+            0, k, insert, (topd[...], topi[...], cand))
+        topd[...] = td
+        topi[...] = ti
+
+    @pl.when(j == n_tiles - 1)
+    def _write_out():
+        out_d_ref[0] = topd[...]
+        out_i_ref[0] = topi[...]
+        out_s_ref[0, 0, 0] = nskip[0]
+
+
+def stacked_sweep(
+    pts_tiles,   # (N, L, n0, dp) f32
+    ids_tiles,   # (N, L, n0) i32
+    rx_tiles,    # (N, L, n0) f32
+    xc_tiles,    # (N, L, n0) f32
+    xs_tiles,    # (N, L, n0) f32
+    leaf_cnorm,  # (N, L, 1) f32
+    queries,     # (B, dp) f32, B % bq == 0
+    qnorm,       # (B, 1) f32
+    cap,         # (B, 1) f32 -- the single entry cap
+    leaf_ip,     # (N, B, L) f32
+    leaf_lb,     # (N, B, L) f32 (+inf = pad tile)
+    visit,       # (N, B // bq, n_visit) i32
+    *,
+    k: int,
+    bq: int = 8,
+    use_ball: bool = True,
+    use_cone: bool = True,
+    interpret: bool | None = None,
+):
+    """pallas_call wrapper: grid ``(N segments, query blocks, tiles)``.
+
+    Returns unsorted ``(dists (N, B, k), ids (N, B, k),
+    skips (N, B//bq, 1))``; ``skips`` counts block-granular tile skips
+    per segment, **including** the force-skipped pad tiles of ragged /
+    empty / all-tombstone segments (they are part of the launch).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, dp = queries.shape
+    N, L, n0, _ = pts_tiles.shape
+    _, nqb, n_visit = visit.shape
+    assert B == nqb * bq, (B, nqb, bq)
+    assert visit.shape[0] == N, (visit.shape, N)
+
+    grid = (N, nqb, n_visit)
+
+    def qmap(s, i, j, v):        # query-block operands (segment-invariant)
+        del s, j, v
+        return (i, 0)
+
+    def tmap(s, i, j, v):        # tile operands gathered via prefetch
+        return (s, v[s, i, j], 0)
+
+    def tmap4(s, i, j, v):
+        return (s, v[s, i, j], 0, 0)
+
+    def ipmap(s, i, j, v):       # (N, B, L): segment s, row block i,
+        return (s, i, v[s, i, j])  # col = j-th preferred tile
+
+    def omap(s, i, j, v):
+        del j, v
+        return (s, i, 0)
+
+    kernel = functools.partial(
+        stacked_sweep_kernel, k=k, use_ball=use_ball, use_cone=use_cone)
+
+    out_d, out_i, out_s = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bq, dp), qmap),       # queries
+                pl.BlockSpec((bq, 1), qmap),        # qnorm
+                pl.BlockSpec((bq, 1), qmap),        # cap
+                pl.BlockSpec((1, bq, 1), ipmap),    # leaf_ip
+                pl.BlockSpec((1, bq, 1), ipmap),    # leaf_lb
+                pl.BlockSpec((1, 1, 1), tmap),      # leaf_cnorm
+                pl.BlockSpec((1, 1, n0, dp), tmap4),  # points
+                pl.BlockSpec((1, 1, n0), tmap),     # ids
+                pl.BlockSpec((1, 1, n0), tmap),     # rx
+                pl.BlockSpec((1, 1, n0), tmap),     # xcos
+                pl.BlockSpec((1, 1, n0), tmap),     # xsin
+            ],
+            out_specs=[
+                pl.BlockSpec((1, bq, k), omap),
+                pl.BlockSpec((1, bq, k), omap),
+                pl.BlockSpec((1, 1, 1), omap),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((bq, k), jnp.float32),
+                pltpu.VMEM((bq, k), jnp.int32),
+                pltpu.SMEM((1,), jnp.int32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((N, B, k), jnp.float32),
+            jax.ShapeDtypeStruct((N, B, k), jnp.int32),
+            jax.ShapeDtypeStruct((N, nqb, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(visit, queries, qnorm, cap, leaf_ip, leaf_lb, leaf_cnorm,
+      pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles)
+    return out_d, out_i, out_s
+
+
+# ======================================================================
+# jit'd front-end (kernel on TPU, vmapped jnp reference elsewhere)
+# ======================================================================
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n0", "d", "k", "frac", "bq", "use_ball", "use_cone",
+                     "use_kernel", "interpret"),
+)
+def _run_stacked(arrays, queries, lambda_cap, *, n0, d, k, frac, bq,
+                 use_ball, use_cone, use_kernel, interpret):
+    from repro.kernels import ref
+
+    stk = StackedLeaves(**arrays, uids=(), n0=n0, d=d)
+    ops, B0 = prepare_stacked_operands(
+        stk, queries, frac=frac, bq=bq, lambda_cap=lambda_cap,
+        lane_pad=use_kernel)
+    fn = (functools.partial(stacked_sweep, interpret=interpret)
+          if use_kernel else ref.stacked_sweep_ref)
+    bd, bi, skips = fn(**ops, k=k, bq=bq, use_ball=use_ball,
+                       use_cone=use_cone)
+    order = jnp.argsort(bd, axis=2)  # per-segment top-k is unsorted
+    bd = jnp.take_along_axis(bd, order, axis=2)[:, :B0]
+    bi = jnp.take_along_axis(bi, order, axis=2)[:, :B0]
+    # counters follow repro.core.search conventions where derivable;
+    # tile visits/skips are block-granular (the pl.when elision unit) and
+    # include the force-skipped pad tiles of the common grid.
+    N, nqb, _ = skips.shape
+    n_visit = ops["visit"].shape[-1]
+    seg_skips = jnp.sum(skips, axis=(1, 2)).astype(jnp.int32)  # (N,)
+    total_skip = jnp.sum(seg_skips)
+    counters = (jnp.zeros((8,), jnp.int32)
+                .at[3].set(jnp.int32(queries.shape[0])
+                           * jnp.sum(stk.n_leaves).astype(jnp.int32))
+                .at[2].set(jnp.int32(N * nqb * n_visit) - total_skip)
+                .at[7].set(total_skip))
+    return bd, bi, counters, seg_skips
+
+
+def stacked_sweep_search(stk: StackedLeaves, queries, k: int = 1, *,
+                         frac: float = 1.0, bq: int = 8,
+                         use_ball: bool = True, use_cone: bool = True,
+                         lambda_cap=None, use_kernel: bool | None = None,
+                         interpret: bool | None = None):
+    """Sweep all of ``stk``'s segments in one launch under one entry cap.
+
+    Returns ``(dists (N, B, k) ascending, global ids (N, B, k),
+    counters (8,), per-segment skip counts (N,))``.  ``use_kernel=None``
+    resolves to the Pallas kernel on TPU and the vmapped jnp reference
+    elsewhere (interpret mode is a parity tool, not a serving backend) --
+    the same rule ``DispatchPolicy.prefer_pallas`` applies to the
+    sequential backends.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    arrays = dict(pts=stk.pts, ids=stk.ids, rx=stk.rx, xc=stk.xc,
+                  xs=stk.xs, leaf_centers=stk.leaf_centers,
+                  leaf_radii=stk.leaf_radii, leaf_cnorm=stk.leaf_cnorm,
+                  valid=stk.valid, n_leaves=stk.n_leaves)
+    return _run_stacked(arrays, jnp.atleast_2d(queries), lambda_cap,
+                        n0=stk.n0, d=stk.d, k=k, frac=frac, bq=bq,
+                        use_ball=use_ball, use_cone=use_cone,
+                        use_kernel=bool(use_kernel),
+                        interpret=bool(interpret))

@@ -8,6 +8,17 @@ plus MXU-friendly tile scans), and the budgeted beam trades recall for
 time when the caller allows it.  ``DispatchPolicy`` encodes those
 crossovers as explicit, test-overridable thresholds; the engine resolves
 one :class:`Route` per micro-batch.
+
+For mutable snapshots the serving view is a *stack* of sealed segments
+plus a delta, and a second crossover appears: below it each segment is
+one backend call (sequential, tightest caps), above it the ``stacked``
+route sweeps every segment in one device-side launch under a single
+entry cap (``repro.kernels.stacked_sweep``).  The crossover folds in the
+snapshot's composition, not just its fan-out: tombstone-heavy segments
+lower the bar (sequential launches mostly re-scan dead rows the stack
+skips wholesale), delta-heavy snapshots raise it (most of the answer
+comes from the delta scan either way, so batching the segment remnant
+buys little).
 """
 from __future__ import annotations
 
@@ -20,7 +31,7 @@ __all__ = ["Route", "DispatchPolicy"]
 class Route:
     """A resolved dispatch decision: backend + backend kwargs."""
 
-    method: str  # "dfs" | "sweep" | "beam" | "pallas" | "sharded"
+    method: str  # "dfs" | "sweep" | "beam" | "pallas" | "sharded" | "stacked"
     frac: float = 1.0
     reason: str = ""
 
@@ -31,6 +42,8 @@ class DispatchPolicy:
 
     * ``recall_target < 1``          -> ``beam`` with ``frac`` from
       ``frac_table`` (the paper's candidate-fraction time/recall knob).
+    * segment fan-out >= the (density-adjusted) stacked threshold
+      -> ``stacked`` (one launch over all segments, single entry cap).
     * occupancy <= ``small_batch``   -> ``dfs`` (single-query latency).
     * else                           -> ``pallas`` when preferred (TPU, or
       interpret-mode parity runs), otherwise the jnp ``sweep``.
@@ -50,6 +63,17 @@ class DispatchPolicy:
         (0.90, 0.10),
         (0.00, 0.05),
     )
+    # -- segment-parallel (stacked) crossover knobs --------------------
+    stacked_min_fanout: int = 4   # live segments before one-launch sweep
+    # tombstone-heavy snapshots cross over earlier: sequential launches
+    # spend their tiles on dead rows the stacked grid skips wholesale
+    stacked_tombstone_frac: float = 0.2
+    # delta-heavy snapshots cross over later: the (exact, host-side)
+    # delta scan dominates, batching the segment remnant amortizes little
+    stacked_delta_frac: float = 0.5
+    # heavily ragged stacks (live-tile fraction of the common grid below
+    # this) stay sequential: pad tiles are masked, not elided, off-TPU
+    stacked_min_density: float = 0.5
 
     def frac_for_recall(self, recall_target: float) -> float:
         for floor, frac in self.frac_table:
@@ -57,8 +81,23 @@ class DispatchPolicy:
                 return frac
         return self.frac_table[-1][1]
 
+    def stacked_fanout_threshold(self, delta_frac: float = 0.0,
+                                 tombstone_frac: float = 0.0) -> int:
+        """Live-segment fan-out at which the stacked launch wins,
+        adjusted for snapshot composition (the measured delta-aware
+        crossover: see bench_stream_sharded / bench_serve)."""
+        thr = self.stacked_min_fanout
+        if tombstone_frac >= self.stacked_tombstone_frac:
+            thr = max(2, thr - 1)
+        if delta_frac >= self.stacked_delta_frac:
+            thr += 2
+        return thr
+
     def route(self, occupancy: int, k: int, recall_target: float = 1.0,
-              *, sharded: bool = False, segments: int = 1) -> Route:
+              *, sharded: bool = False, segments: int = 1,
+              stackable: int = 0, delta_frac: float = 0.0,
+              tombstone_frac: float = 0.0,
+              tile_density: float = 1.0) -> Route:
         """Pick a backend for a micro-batch with ``occupancy`` live slots.
 
         ``segments``: fan-out width of the serving view (a mutable
@@ -66,12 +105,26 @@ class DispatchPolicy:
         segment is one backend call, so the per-call batched-matmul
         amortization kicks in ``segments`` times per query -- the dfs
         latency window shrinks proportionally.
+
+        ``stackable``: how many of those are *live sealed segments* (the
+        units the stacked launch can absorb); ``delta_frac`` /
+        ``tombstone_frac`` describe the snapshot's composition (live
+        delta rows over live points, dead sealed rows over sealed rows)
+        and shift the stacked crossover as documented above;
+        ``tile_density`` is the live-tile fraction of the common stacked
+        grid (``repro.kernels.stacked_sweep.tile_density``).
         """
         if recall_target < 1.0:
             return Route("beam", frac=self.frac_for_recall(recall_target),
                          reason=f"recall_target={recall_target:g}")
         if sharded:
             return Route("sharded", reason="index is sharded")
+        thr = self.stacked_fanout_threshold(delta_frac, tombstone_frac)
+        if stackable >= thr and tile_density >= self.stacked_min_density:
+            return Route("stacked",
+                         reason=f"fanout={stackable}>={thr} "
+                                f"(delta={delta_frac:.2f}, "
+                                f"dead={tombstone_frac:.2f})")
         dfs_window = max(1, self.small_batch // max(1, segments))
         if occupancy <= dfs_window:
             return Route("dfs", reason=f"occupancy={occupancy}"

@@ -154,13 +154,31 @@ class P2HEngine:
         # inserts/deletes publish new snapshots, this batch never sees them
         snap = self.mutable.snapshot() if self.mutable is not None else None
         fanout = (len(snap.segments) + len(snap.deltas)) if snap else 1
+        if snap is not None:
+            from repro.kernels.stacked_sweep import tile_density
+
+            # snapshot-composition signals for the stacked crossover:
+            # live sealed segments (the units one launch can absorb),
+            # live delta rows over live points, dead over sealed rows,
+            # live-tile fraction of the would-be stacked grid
+            stackable = sum(1 for s in snap.segments if s.live)
+            delta_frac = snap.delta_live / max(1, snap.live_count)
+            tombstone_frac = snap.tombstone_frac
+            density = tile_density(snap.segments)
+        else:
+            stackable, delta_frac, tombstone_frac = 0, 0.0, 0.0
+            density = 1.0
         route = (Route(method, frac=self.policy.frac_for_recall(
                      mb.recall_target) if method == "beam" else 1.0,
                      reason="forced")
                  if method is not None else
                  self.policy.route(mb.occupancy, mb.k, mb.recall_target,
                                    sharded=self.sharded is not None,
-                                   segments=fanout))
+                                   segments=fanout,
+                                   stackable=stackable,
+                                   delta_frac=delta_frac,
+                                   tombstone_frac=tombstone_frac,
+                                   tile_density=density))
         # warm start: valid caps only for exact routes (a cap bounds the
         # *exact* k-th distance; applying it to a budgeted beam could prune
         # candidates the direct beam would have returned)
@@ -181,17 +199,25 @@ class P2HEngine:
                 caps = c
         t0 = time.perf_counter()
         shard_kth = None
+        # the policy (not the library-level fan-out default) owns the
+        # stacked decision on the engine path: pass it down explicitly so
+        # snapshot/exchange auto-promotion never overrides a route the
+        # crossover knobs resolved to sequential, and route stats stay
+        # truthful about which schedule actually ran
+        use_stacked = route.method == "stacked"
         if snap is not None and self._sharded_mutable:
             # epoch-vector pin: the two-round exchange also reports each
             # shard's local k-th bound for per-shard cache components
             bd, bi, cnt, info = snap.query(
                 mb.queries, mb.k, method=route.method, frac=route.frac,
-                lambda_cap=caps, return_counters=True, return_info=True)
+                lambda_cap=caps, return_counters=True, return_info=True,
+                stacked=use_stacked)
             shard_kth = info["shard_kth"]  # (S, B)
         elif snap is not None:
             bd, bi, cnt = snap.query(mb.queries, mb.k, method=route.method,
                                      frac=route.frac, lambda_cap=caps,
-                                     return_counters=True)
+                                     return_counters=True,
+                                     stacked=use_stacked)
         else:
             bd, bi, cnt = self._run_backend(route, mb.queries, mb.k, caps)
         bd, bi = np.asarray(bd), np.asarray(bi)
@@ -234,6 +260,11 @@ class P2HEngine:
         if route.method == "dfs":
             return search.dfs_search(tree, q, k, use_collab=is_bc,
                                      lambda_cap=caps, **common)
+        if route.method == "stacked":
+            # a frozen index is a single tree: the stacked sweep
+            # degenerates to the ordinary one (forced-route escape hatch)
+            return search.sweep_search(tree, q, k, frac=1.0,
+                                       lambda_cap=caps, **common)
         if route.method == "sweep":
             return search.sweep_search(tree, q, k, frac=1.0,
                                        lambda_cap=caps, **common)

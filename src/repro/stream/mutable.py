@@ -493,9 +493,17 @@ class MutableP2HIndex:
         )
 
     def _publish(self) -> None:
-        """Atomic snapshot swap (caller holds the lock)."""
+        """Atomic snapshot swap (caller holds the lock).  The new
+        snapshot adopts the previous one's stacked-leaf cache when the
+        segment set allows it (delta-only publishes reuse it as-is,
+        tombstone publishes swap just the changed ids planes), so the
+        segment-parallel sweep pays its stacking cost once per
+        compaction, not once per publish."""
         self._epoch += 1
-        self._snapshot = self._make_snapshot()
+        prev = self._snapshot
+        snap = self._make_snapshot()
+        snap.adopt_stacked_from(prev)
+        self._snapshot = snap
 
     # ------------------------------------------------------------------
     # persistence (through repro.checkpoint)

@@ -24,6 +24,17 @@ global k-th -- caps the first segment, and each segment's merged k-th
 caps the next.  This is the serial-form of the sharded two-round
 exchange in ``repro.core.distributed``, and the final merge is that
 module's machinery (``repro.core.search.merge_topk``).
+
+At segment fan-out >= ``STACKED_FANOUT_DEFAULT`` (or with
+``method="stacked"`` / ``stacked=True``) the sequential segment walk is
+replaced by **one** device-side launch: the snapshot's sealed segments
+are stacked into a cached :class:`repro.kernels.StackedLeaves` tile grid
+(built lazily, carried forward across publishes because segments are
+immutable -- tombstone republishes swap only the ids planes) and swept
+together under the single entry cap (delta k-th / engine cache cap),
+trading the sequentially-threaded per-segment cap for one matmul-shaped
+program.  Exactness is unchanged; only tile-skip counts differ (see
+``repro.kernels.stacked_sweep``).
 """
 from __future__ import annotations
 
@@ -139,6 +150,51 @@ class Snapshot:
     def delta_live(self) -> int:
         return sum(v.live for v in self.deltas)
 
+    @property
+    def tombstone_frac(self) -> float:
+        """Dead fraction over the snapshot's sealed rows (dispatch
+        signal: tombstone-heavy segments waste sequential launches)."""
+        live = sum(s.live for s in self.segments)
+        dead = sum(s.dead for s in self.segments)
+        return dead / (live + dead) if live + dead else 0.0
+
+    # -- stacked-leaf cache (segment-parallel sweep) -------------------
+    def stacked_leaves(self):
+        """The segments stacked into one padded tile grid
+        (:class:`repro.kernels.StackedLeaves`), memoized on this
+        snapshot: segments are immutable, so stacking is a one-time cost
+        per compaction -- the mutable index carries the memo forward
+        across publishes (:meth:`adopt_stacked_from`), and tombstone
+        republishes rewrite only the changed ids planes."""
+        stk = self.__dict__.get("_stacked")
+        if stk is None and self.segments:
+            from repro.kernels.stacked_sweep import StackedLeaves
+
+            stk = StackedLeaves.from_segments(self.segments)
+            object.__setattr__(self, "_stacked", stk)
+        return stk
+
+    def adopt_stacked_from(self, prev: "Snapshot") -> None:
+        """Carry ``prev``'s stacked-leaf memo forward when the segment
+        set allows it (publish-time hook of the mutable index): same
+        uids + unchanged geometry means delta-only publishes reuse the
+        stack as-is and tombstone publishes swap just the ids planes."""
+        stk = prev.__dict__.get("_stacked") if prev is not None else None
+        if stk is None or len(self.segments) != len(prev.segments):
+            return
+        if tuple(s.uid for s in self.segments) != stk.uids:
+            return  # compaction changed the set: rebuild lazily
+        changed = {}
+        for i, (new, old) in enumerate(zip(self.segments, prev.segments)):
+            if new is old:
+                continue
+            if new.tree.points is not old.tree.points:
+                return  # geometry rewrite: rebuild lazily
+            changed[i] = new
+        if changed:
+            stk = stk.with_updated_ids(changed)
+        object.__setattr__(self, "_stacked", stk)
+
     def live_points(self):
         """The live set as ``(points (n, d), gids (n,))`` host arrays --
         the brute-force-oracle view (tests/benchmarks) and the input a
@@ -159,7 +215,8 @@ class Snapshot:
 
     def query(self, queries, k: int = 1, *, method: str = "sweep",
               frac: float = 1.0, lambda_cap=None,
-              return_counters: bool = False, include_deltas: bool = True):
+              return_counters: bool = False, include_deltas: bool = True,
+              stacked: bool | None = None):
         """Exact (or beam-budgeted) top-k over the snapshot's live set.
 
         ``queries`` must already be normalized (B, d) float32.  Returned
@@ -172,6 +229,15 @@ class Snapshot:
         scanned every delta exactly and its candidates reach the final
         merge (a delta point displaced from round-1's top-k was displaced
         by k closer real points, so it cannot be in the global top-k).
+
+        ``stacked`` controls the segment-parallel sweep (one device-side
+        launch over all segments under a single entry cap instead of the
+        sequential cap-threading walk): ``None`` auto-promotes the exact
+        ``sweep``/``pallas`` methods at live-segment fan-out >=
+        ``repro.kernels.stacked_sweep.STACKED_FANOUT_DEFAULT``, ``True``
+        forces it, ``False`` forbids it.  ``method="stacked"`` is the
+        explicit dispatch-route spelling of ``stacked=True``.  Answers
+        are exact either way; only tile-skip counters differ.
         """
         q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
         B = q.shape[0]
@@ -187,28 +253,79 @@ class Snapshot:
         exact = method != "beam"
         ext = (None if lambda_cap is None or not exact
                else jnp.asarray(lambda_cap, jnp.float32).reshape(-1))
-        for seg in self.segments:
-            if seg.live == 0:
-                continue
-            cap = None
-            if exact:
-                cap = bd[:, k - 1]  # running merged k-th: a valid cap
-                if ext is not None:
-                    cap = jnp.minimum(cap, ext)
-            sd, si, cnt = _segment_query(seg.tree, q, k, method=method,
-                                         frac=frac, variant=self.variant,
-                                         lambda_cap=cap)
-            sg = jnp.where(si >= 0,
-                           jnp.take(jnp.asarray(seg.gids),
-                                    jnp.clip(si, 0, len(seg.gids) - 1)),
-                           -1)
-            bd, bi = search.merge_topk(jnp.concatenate([bd, sd], axis=1),
-                                       jnp.concatenate([bi, sg], axis=1), k)
+        if self.segments and self._use_stacked(method, stacked):
+            # single entry cap for every segment: the delta scan's merged
+            # k-th, tightened by any externally-valid cap -- never the
+            # sequentially-threaded cross-segment running k-th
+            cap = bd[:, k - 1]
+            if ext is not None:
+                cap = jnp.minimum(cap, ext)
+            sd, sg, cnt = self._stacked_query(q, k, method=method, cap=cap)
+            N = sd.shape[0]
+            bd, bi = search.merge_topk(
+                jnp.concatenate(
+                    [bd, jnp.moveaxis(sd, 0, 1).reshape(B, N * k)], axis=1),
+                jnp.concatenate(
+                    [bi, jnp.moveaxis(sg, 0, 1).reshape(B, N * k)], axis=1),
+                k)
             counters += np.asarray(cnt, np.int64)
+        else:
+            for seg in self.segments:
+                if seg.live == 0:
+                    continue
+                cap = None
+                if exact:
+                    cap = bd[:, k - 1]  # running merged k-th: a valid cap
+                    if ext is not None:
+                        cap = jnp.minimum(cap, ext)
+                sd, si, cnt = _segment_query(seg.tree, q, k, method=method,
+                                             frac=frac,
+                                             variant=self.variant,
+                                             lambda_cap=cap)
+                sg = jnp.where(si >= 0,
+                               jnp.take(jnp.asarray(seg.gids),
+                                        jnp.clip(si, 0, len(seg.gids) - 1)),
+                               -1)
+                bd, bi = search.merge_topk(
+                    jnp.concatenate([bd, sd], axis=1),
+                    jnp.concatenate([bi, sg], axis=1), k)
+                counters += np.asarray(cnt, np.int64)
         bd, bi = np.asarray(bd), np.asarray(bi)
         if return_counters:
             return bd, bi, counters
         return bd, bi
+
+    def _use_stacked(self, method: str, stacked: bool | None) -> bool:
+        """Resolve the segment-parallel dispatch decision."""
+        if method == "stacked":
+            return True
+        if method not in ("sweep", "pallas"):
+            return False  # dfs walks trees, beam budgets per segment
+        if stacked is not None:
+            return bool(stacked)
+        from repro.kernels.stacked_sweep import (STACKED_DENSITY_DEFAULT,
+                                                 STACKED_FANOUT_DEFAULT,
+                                                 tile_density)
+
+        n_live = sum(1 for s in self.segments if s.live)
+        # heavily ragged stacks spend the launch on pad tiles the jnp
+        # path can only mask -- stay sequential below the density floor
+        return (n_live >= STACKED_FANOUT_DEFAULT
+                and tile_density(self.segments) >= STACKED_DENSITY_DEFAULT)
+
+    def _stacked_query(self, q, k: int, *, method: str, cap):
+        """One stacked launch over all segments; returns per-segment
+        ``(dists (N, B, k), global ids, counters)``."""
+        from repro.kernels.stacked_sweep import stacked_sweep_search
+
+        is_bc = self.variant == "bc"
+        # method="pallas" pins the kernel (interpret-mode parity runs);
+        # sweep/stacked auto-resolve: Mosaic on TPU, vmapped jnp ref off
+        use_kernel = True if method == "pallas" else None
+        sd, sg, cnt, _ = stacked_sweep_search(
+            self.stacked_leaves(), q, k, lambda_cap=cap,
+            use_ball=is_bc, use_cone=is_bc, use_kernel=use_kernel)
+        return sd, sg, cnt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -275,21 +392,31 @@ class ShardedSnapshot:
                     np.zeros((0,), np.int32))
         return np.concatenate(pts), np.concatenate(gids)
 
+    @property
+    def tombstone_frac(self) -> float:
+        """Dead fraction over all shards' sealed rows (dispatch signal)."""
+        live = sum(seg.live for seg in self.segments)
+        dead = sum(seg.dead for seg in self.segments)
+        return dead / (live + dead) if live + dead else 0.0
+
     def query(self, queries, k: int = 1, *, method: str = "sweep",
               frac: float = 1.0, frac1: float = 0.25, lambda_cap=None,
-              return_counters: bool = False, return_info: bool = False):
+              return_counters: bool = False, return_info: bool = False,
+              stacked: bool | None = None):
         """Top-k over the cross-shard live set via the two-round lambda
         exchange; same contract as :meth:`Snapshot.query` (normalized
         queries in, global ids out) plus ``frac1``, the round-1 prefix
         fraction.  ``return_info`` also returns the exchange's
         ``lambda0`` / per-shard round-1 k-th distances (invariant-test
-        surface)."""
+        surface).  ``stacked`` controls round 2's segment-parallel form
+        (all shards' segments in one launch under lambda0, see
+        :func:`repro.core.distributed.two_round_exchange`)."""
         from repro.core.distributed import two_round_exchange
 
         out = two_round_exchange(self.shards, queries, k, frac1=frac1,
                                  method=method, frac=frac,
                                  lambda_cap=lambda_cap,
-                                 return_info=return_info)
+                                 return_info=return_info, stacked=stacked)
         if return_info:
             bd, bi, cnt, info = out
             return (bd, bi, cnt, info) if return_counters else (bd, bi, info)

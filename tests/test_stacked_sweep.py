@@ -1,0 +1,425 @@
+"""Segment-parallel (stacked) sweep fence.
+
+The stacked launch trades the sequentially-threaded per-segment lambda
+cap for one device-side program under a single entry cap -- the headline
+risk is correctness under that looser cap, and this suite is the fence:
+
+  * kernel parity -- the stacked Pallas kernel (interpret=True) against
+    its vmapped pure-jnp oracle, results *and* block-granular skip
+    counters, across bound toggles and ragged padding edges (empty
+    segment, single-point segment, all-tombstone segment);
+  * exactness -- stacked results bit-exact (ids; distances at f32
+    matmul tolerance) vs the sequential ``Snapshot.query`` walk and vs
+    the brute-force oracle, across random insert/delete/compaction
+    states of 1-8 ragged segments (hypothesis property with seeded
+    fallback; a deterministic smoke subset runs in the fast lane, the
+    property sweep in the ``stacked`` marker lane);
+  * skip-counter parity -- the stacked launch's per-segment skip counts
+    sum to >= the sequential path's on the same snapshot: its common
+    padded grid force-skips every pad/dead tile it covers, which is what
+    pays for the looser per-tile threshold (fewer *live*-tile skips) --
+    the tradeoff is documented by the counters instead of silently
+    regressing;
+  * cache semantics -- the per-snapshot ``StackedLeaves`` memo is built
+    once, reused across delta-only publishes, updated ids-plane-only on
+    tombstone publishes (geometry shared), rebuilt after compaction;
+  * dispatch -- ``DispatchPolicy`` folds segment fan-out and
+    delta/tombstone density into the stacked crossover.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from _hyp import given_int_seed
+from repro.core import exact_search
+from repro.core.balltree import append_ones, build_tree, normalize_query
+from repro.core.search import C_TILE_SKIP, merge_topk
+from repro.kernels.ref import stacked_sweep_ref
+from repro.kernels.stacked_sweep import (StackedLeaves,
+                                         prepare_stacked_operands,
+                                         stacked_sweep,
+                                         stacked_sweep_search)
+from repro.stream import CompactionPolicy, MutableP2HIndex
+from test_stream import DIM, _assert_matches_oracle, _mkdata, _oracle
+
+
+class _Seg:
+    """Minimal segment stand-in (uid/tree/gids) for kernel-level tests."""
+
+    def __init__(self, uid, raw, gids, *, n0=16, tombstone_all=False):
+        self.uid = uid
+        pts = append_ones(np.asarray(raw, np.float32))
+        self.tree = build_tree(pts, n0=n0, append_one=False)
+        if tombstone_all:
+            import dataclasses
+
+            pid = np.full_like(np.asarray(self.tree.point_ids), -1)
+            self.tree = dataclasses.replace(self.tree, point_ids=pid)
+        self.gids = np.asarray(gids, np.int32)
+        self._raw = pts
+
+
+def _ragged_segments(seed=0, *, n0=16):
+    """Every padding edge in one stack: large, ragged, single-point,
+    and all-tombstone segments."""
+    rng = np.random.default_rng(seed)
+    sizes = [200, 57, 1, 90, 40]
+    segs, gid = [], 0
+    for u, n in enumerate(sizes):
+        raw = rng.normal(size=(n, DIM)).astype(np.float32)
+        segs.append(_Seg(u, raw, np.arange(gid, gid + n), n0=n0,
+                         tombstone_all=(u == len(sizes) - 1)))
+        gid += n
+    return segs
+
+
+def _live_union(segs):
+    pts, gids = [], []
+    for s in segs:
+        pid = np.asarray(s.tree.point_ids)
+        rows = np.nonzero(pid >= 0)[0]
+        pts.append(np.asarray(s.tree.points)[rows])
+        gids.append(s.gids[pid[rows]])
+    return np.concatenate(pts), np.concatenate(gids)
+
+
+def _merged(bd, bi, k):
+    N, B, _ = bd.shape
+    return merge_topk(jnp.moveaxis(jnp.asarray(bd), 0, 1).reshape(B, N * k),
+                      jnp.moveaxis(jnp.asarray(bi), 0, 1).reshape(B, N * k),
+                      k)
+
+
+# ------------------------------------------------- kernel-level parity
+@pytest.mark.parametrize("use_ball,use_cone", [
+    (False, False), (True, False), (False, True), (True, True)])
+def test_stacked_kernel_matches_ref_with_padding_edges(use_ball, use_cone):
+    """Kernel vs vmapped jnp oracle: same top-k, same per-segment
+    block-granular skip counters, over a stack hitting every padding
+    edge (ragged tile counts, single-point segment, all-tombstone
+    segment -> every tile force-skipped)."""
+    segs = _ragged_segments(seed=3)
+    stk = StackedLeaves.from_segments(segs)
+    q = normalize_query(_mkdata(9, seed=4, dim=DIM + 1))  # 9: pad path
+    ops, B0 = prepare_stacked_operands(stk, jnp.asarray(q), bq=8,
+                                       lane_pad=True)  # the TPU shape
+    kd, ki, ks = stacked_sweep(**ops, k=5, use_ball=use_ball,
+                               use_cone=use_cone, interpret=True)
+    rd, ri, rs = stacked_sweep_ref(**ops, k=5, use_ball=use_ball,
+                                   use_cone=use_cone)
+    np.testing.assert_allclose(np.sort(np.asarray(kd), axis=2),
+                               np.sort(np.asarray(rd), axis=2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+    # the all-tombstone segment's tiles are all force-skipped
+    dead = len(segs) - 1
+    assert (np.asarray(ks)[dead] == stk.num_tiles).all()
+
+
+def test_stacked_search_exact_vs_bruteforce_and_entry_cap():
+    """Merged stacked top-k == brute force on the live union, on both
+    implementations; a valid external entry cap must not change it."""
+    segs = _ragged_segments(seed=5)
+    stk = StackedLeaves.from_segments(segs)
+    X, G = _live_union(segs)
+    q = normalize_query(_mkdata(6, seed=6, dim=DIM + 1))
+    k = 7
+    ed, ei = exact_search(jnp.asarray(X), jnp.asarray(q), k=k)
+    ed, eg = np.asarray(ed), G[np.asarray(ei)]
+    for use_kernel in (False, True):
+        bd, bi, cnt, seg_skips = stacked_sweep_search(
+            stk, jnp.asarray(q), k, use_kernel=use_kernel)
+        fd, fi = _merged(bd, bi, k)
+        np.testing.assert_allclose(np.asarray(fd), ed, rtol=1e-4,
+                                   atol=1e-5)
+        assert np.array_equal(np.asarray(fi), eg)
+        assert int(np.asarray(seg_skips).sum()) == int(
+            np.asarray(cnt)[C_TILE_SKIP])
+        # valid entry cap (1.5x the true k-th): same answers, more skips
+        cap = jnp.asarray(ed[:, -1] * 1.5 + 1e-3)
+        cd, ci, ccnt, _ = stacked_sweep_search(
+            stk, jnp.asarray(q), k, lambda_cap=cap, use_kernel=use_kernel)
+        fcd, fci = _merged(cd, ci, k)
+        np.testing.assert_allclose(np.asarray(fcd), ed, rtol=1e-4,
+                                   atol=1e-5)
+        assert np.array_equal(np.asarray(fci), eg)
+        assert (np.asarray(ccnt)[C_TILE_SKIP]
+                >= np.asarray(cnt)[C_TILE_SKIP])
+
+
+def test_stacked_concat_repads_mixed_tile_grids():
+    """Cross-shard round 2 concatenates stacks with different tile
+    counts; the smaller grid is re-padded and answers stay exact."""
+    rng = np.random.default_rng(11)
+    a = [_Seg(0, rng.normal(size=(40, DIM)), np.arange(0, 40)),
+         _Seg(1, rng.normal(size=(30, DIM)), np.arange(40, 70))]
+    b = [_Seg(2, rng.normal(size=(220, DIM)), np.arange(70, 290))]
+    sa, sb = StackedLeaves.from_segments(a), StackedLeaves.from_segments(b)
+    assert sa.num_tiles != sb.num_tiles  # genuinely mixed grids
+    comb = StackedLeaves.concat([sa, sb])
+    assert comb.num_segments == 3
+    assert comb.num_tiles == max(sa.num_tiles, sb.num_tiles)
+    assert comb.uids == (0, 1, 2)
+    X, G = _live_union(a + b)
+    q = normalize_query(_mkdata(4, seed=12, dim=DIM + 1))
+    ed, ei = exact_search(jnp.asarray(X), jnp.asarray(q), k=5)
+    bd, bi, _, _ = stacked_sweep_search(comb, jnp.asarray(q), 5,
+                                        use_kernel=False)
+    fd, fi = _merged(bd, bi, 5)
+    np.testing.assert_allclose(np.asarray(fd), np.asarray(ed), rtol=1e-4,
+                               atol=1e-5)
+    assert np.array_equal(np.asarray(fi), G[np.asarray(ei)])
+
+
+# ------------------------------------------ snapshot-level smoke fence
+def _mk_fanned(seed, *, chunks=6, chunk=40):
+    """A mutable index with ``chunks`` roughly even sealed segments
+    (chunked bulk loads -> a dense stacked grid the policy promotes)
+    plus a few live delta rows and light tombstones."""
+    rng = np.random.default_rng(seed)
+    data = _mkdata(chunks * chunk, seed=seed)
+    m = MutableP2HIndex.from_data(
+        data[:chunk], n0=16,
+        policy=CompactionPolicy(delta_capacity=chunk, tombstone_frac=0.95,
+                                max_segments=64))
+    for c in range(1, chunks):  # each full delta flushes into a segment
+        m.insert_batch(data[c * chunk:(c + 1) * chunk])
+    for _ in range(5):
+        m.insert(rng.normal(size=DIM).astype(np.float32))
+    for g in range(0, chunks * chunk, 9):
+        m.delete(g)
+    return m
+
+
+def _check_stacked_matches_sequential(m, q, k, tag=""):
+    """Stacked vs sequential vs oracle on the current snapshot: same
+    ids (ties resolved identically through merge_topk's id-primary
+    ordering), distances at f32 matmul-association tolerance."""
+    snap = m.snapshot()
+    sd, si = m.query(q, k=k, stacked=False)
+    td, ti = m.query(q, k=k, stacked=True)
+    np.testing.assert_allclose(td, sd, rtol=1e-5, atol=1e-6,
+                               err_msg=f"stacked-vs-seq {tag}")
+    if not np.array_equal(ti, si):
+        # id disagreements must be exact-distance ties
+        mism = ti != si
+        tol = 1e-5 * np.abs(sd) + 1e-6
+        assert (np.abs(td - sd)[mism] <= tol[mism]).all(), (tag, ti, si)
+    _assert_matches_oracle(m, q, k, "sweep", f"{tag}-seq")
+    # and the stacked path itself against the oracle
+    ed, eg = _oracle(snap, q, k)
+    np.testing.assert_allclose(td, ed, rtol=1e-4, atol=1e-5,
+                               err_msg=f"stacked-vs-oracle {tag}")
+
+
+def test_stacked_smoke_deterministic():
+    """Fast-lane smoke: one churned multi-segment state, stacked ==
+    sequential == oracle for k in {1, 5}, plus the method="stacked" and
+    auto-promotion spellings."""
+    m = _mk_fanned(17)
+    assert len(m.snapshot().segments) >= 4
+    q = _mkdata(4, seed=18, dim=DIM + 1)
+    for k in (1, 5):
+        _check_stacked_matches_sequential(m, q, k, f"smoke-k{k}")
+    d1, i1 = m.query(q, k=5, method="stacked")
+    d2, i2 = m.query(q, k=5)  # fan-out >= 4: auto-promoted
+    d3, i3 = m.query(q, k=5, stacked=True)
+    assert np.array_equal(i1, i3) and np.array_equal(i2, i3)
+    np.testing.assert_allclose(d1, d3, rtol=1e-6)
+    np.testing.assert_allclose(d2, d3, rtol=1e-6)
+
+
+# ------------------------------------------------ the property fence
+def _stacked_property(seed):
+    rng = np.random.default_rng(seed)
+    m = MutableP2HIndex.from_data(
+        _mkdata(100, seed=seed), n0=32,
+        policy=CompactionPolicy(delta_capacity=6 + seed % 7,
+                                tombstone_frac=0.95, max_segments=64))
+    live = list(range(100))
+    q = rng.normal(size=(3, DIM + 1)).astype(np.float32)
+    k = 5
+    checks = 0
+    for step in range(50):
+        op = rng.random()
+        snap = m.snapshot()
+        if op < 0.4 or not live:
+            live.append(m.insert(rng.normal(size=DIM).astype(np.float32)))
+        elif op < 0.6:
+            victim = live.pop(int(rng.integers(len(live))))
+            assert m.delete(victim)
+        elif op < 0.7 and snap.segments:
+            # tombstone an entire random segment -> empty-segment edge
+            seg = snap.segments[int(rng.integers(len(snap.segments)))]
+            pid = np.asarray(seg.tree.point_ids)
+            for gid in seg.gids[pid[pid >= 0]]:
+                if m.delete(int(gid)):
+                    live.remove(int(gid))
+        elif op < 0.78:
+            m.compact(force=True)  # collapse to one segment
+        else:
+            _check_stacked_matches_sequential(m, q, k, f"step{step}")
+            checks += 1
+    segs = m.snapshot().segments
+    assert 1 <= len(segs) <= 64
+    for k2 in (1, 5):
+        _check_stacked_matches_sequential(m, q, k2, f"final-k{k2}")
+    m.compact(force=True)
+    _check_stacked_matches_sequential(m, q, k, "post-compact")
+
+
+@pytest.mark.stacked
+@given_int_seed(max_examples=6, hi=2**31 - 1, fallback_seeds=(0, 1, 2))
+def test_stacked_property_exact_vs_sequential_and_oracle(seed):
+    """Acceptance property (stacked lane): random insert / delete /
+    whole-segment-tombstone / compaction interleavings leave the stacked
+    sweep exact vs the sequential walk and the brute-force oracle."""
+    _stacked_property(seed)
+
+
+# ------------------------------------------------- skip-count parity
+def test_stacked_skip_counts_dominate_sequential():
+    """The stacked launch covers a common padded tile grid: every
+    pad/dead tile it force-skips is counted, so its per-segment skip
+    counts sum to >= the sequential path's skips on the same snapshot --
+    while per *live* tile its single entry cap is looser than the
+    sequential running cap (that is the documented tradeoff; the win is
+    one launch instead of N).  Raggedness (empty + single-point
+    segments) guarantees the padded grid dominates."""
+    segs = _ragged_segments(seed=21)
+    stk = StackedLeaves.from_segments(segs)
+    q = normalize_query(_mkdata(8, seed=22, dim=DIM + 1))
+    k = 5
+    # sequential: per-segment pallas sweeps threading the running cap,
+    # exactly like Snapshot.query's loop (entry cap inf, delta empty)
+    from repro.kernels.ops import sweep_search_pallas
+
+    seq_skips = 0
+    bd = jnp.full((q.shape[0], k), jnp.inf, jnp.float32)
+    bi = jnp.full((q.shape[0], k), -1, jnp.int32)
+    for seg in segs:
+        pid = np.asarray(seg.tree.point_ids)
+        if (pid >= 0).sum() == 0:
+            continue  # the sequential walk skips dead segments outright
+        cap = bd[:, k - 1]
+        sd, si, cnt = sweep_search_pallas(seg.tree, jnp.asarray(q), k,
+                                          lambda_cap=cap)
+        sg = jnp.where(si >= 0,
+                       jnp.take(jnp.asarray(seg.gids),
+                                jnp.clip(si, 0, len(seg.gids) - 1)), -1)
+        bd, bi = merge_topk(jnp.concatenate([bd, sd], axis=1),
+                            jnp.concatenate([bi, sg], axis=1), k)
+        seq_skips += int(np.asarray(cnt)[C_TILE_SKIP])
+    td, ti, cnt_stk, seg_skips = stacked_sweep_search(
+        stk, jnp.asarray(q), k, use_kernel=True)
+    stacked_skips = int(np.asarray(seg_skips).sum())
+    assert stacked_skips == int(np.asarray(cnt_stk)[C_TILE_SKIP])
+    assert stacked_skips >= seq_skips, (stacked_skips, seq_skips)
+    # same answers under both schedules
+    fd, fi = _merged(td, ti, k)
+    np.testing.assert_allclose(np.asarray(fd), np.asarray(bd), rtol=1e-5,
+                               atol=1e-6)
+    assert np.array_equal(np.asarray(fi), np.asarray(bi))
+    # the dominance is structural on this snapshot: the grid's invalid
+    # (pad/dead) tiles alone outnumber every live tile the sequential
+    # walk could possibly have skipped
+    n_invalid = int((~np.asarray(stk.valid)).sum())
+    n_live_tiles = sum(s.tree.num_leaves for s in segs
+                       if (np.asarray(s.tree.point_ids) >= 0).any())
+    assert n_invalid >= n_live_tiles, (n_invalid, n_live_tiles)
+
+
+# -------------------------------------------------- cache semantics
+def test_stacked_cache_adopted_updated_and_rebuilt():
+    m = _mk_fanned(31)
+    snap0 = m.snapshot()
+    stk0 = snap0.stacked_leaves()
+    assert stk0 is snap0.stacked_leaves()  # memoized
+    # delta-only publish: the very same stack object is carried forward
+    m.insert(np.zeros(DIM, np.float32))
+    snap1 = m.snapshot()
+    assert snap1.__dict__.get("_stacked") is stk0
+    # tombstone publish: ids plane swapped, geometry arrays shared
+    seg = next(s for s in snap1.segments if s.live)
+    pid = np.asarray(seg.tree.point_ids)
+    victim = int(seg.gids[pid[pid >= 0][0]])
+    seg_uids = tuple(s.uid for s in snap1.segments)
+    assert m.delete(victim)
+    snap2 = m.snapshot()
+    stk2 = snap2.__dict__.get("_stacked")
+    assert stk2 is not None and stk2 is not stk0
+    assert stk2.pts is stk0.pts and stk2.rx is stk0.rx
+    assert stk2.uids == seg_uids
+    assert victim not in set(np.asarray(stk2.ids).ravel().tolist())
+    # compaction changes the segment set: memo dropped, rebuilt lazily
+    m.compact(force=True)
+    snap3 = m.snapshot()
+    assert snap3.__dict__.get("_stacked") is None
+    stk3 = snap3.stacked_leaves()
+    assert stk3.num_segments == len(snap3.segments) == 1
+    # the adopted/updated stack answers exactly
+    q = _mkdata(3, seed=32, dim=DIM + 1)
+    _check_stacked_matches_sequential(m, q, 4, "post-rebuild")
+
+
+# ------------------------------------------------------- dispatch
+def test_dispatch_policy_stacked_crossover():
+    from repro.serve import DispatchPolicy
+
+    pol = DispatchPolicy(prefer_pallas=False)
+    # fan-out below threshold: unchanged routing
+    assert pol.route(8, 5, segments=3, stackable=2).method == "sweep"
+    assert pol.route(1, 5, segments=2, stackable=1).method == "dfs"
+    # fan-out at/above threshold: stacked
+    assert pol.route(8, 5, segments=5, stackable=4).method == "stacked"
+    assert pol.route(1, 5, segments=9, stackable=8).method == "stacked"
+    # tombstone-heavy snapshots cross over one segment earlier
+    assert pol.route(8, 5, segments=4, stackable=3,
+                     tombstone_frac=0.5).method == "stacked"
+    # delta-heavy snapshots cross over later
+    assert pol.route(8, 5, segments=5, stackable=4,
+                     delta_frac=0.8).method != "stacked"
+    assert pol.route(8, 5, segments=7, stackable=6,
+                     delta_frac=0.8).method == "stacked"
+    # recall / sharded routes still take precedence
+    assert pol.route(8, 5, 0.9, stackable=8).method == "beam"
+    assert pol.route(8, 5, sharded=True, stackable=8).method == "sharded"
+
+
+def test_engine_policy_overrides_library_auto_promotion():
+    """The policy owns the stacked decision on the engine path: a
+    policy whose knobs resolve to a sequential route must actually get
+    the sequential schedule (the engine forwards stacked=False, so the
+    snapshot's own fan-out default cannot silently override it) -- and
+    stay exact."""
+    from repro.serve import DispatchPolicy, P2HEngine
+
+    m = _mk_fanned(51)  # fan-out 6: the library default would stack
+    eng = P2HEngine(m, slot_size=4,
+                    policy=DispatchPolicy(prefer_pallas=False,
+                                          stacked_min_fanout=99))
+    q = _mkdata(4, seed=52, dim=DIM + 1)
+    d1, i1 = m.query(q, k=5, engine=eng)
+    assert "stacked" not in eng.stats()["routes"], eng.stats()["routes"]
+    ed, eg = _oracle(m.snapshot(), q, 5)
+    assert np.array_equal(i1, eg)
+
+
+def test_engine_routes_stacked_and_stays_exact():
+    """The engine auto-routes high-fan-out snapshots to the stacked
+    launch; warm answers stay bit-identical and oracle-exact."""
+    from repro.serve import DispatchPolicy, P2HEngine
+
+    m = _mk_fanned(41, chunks=8)
+    assert sum(1 for s in m.snapshot().segments if s.live) >= 4
+    eng = P2HEngine(m, slot_size=4,
+                    policy=DispatchPolicy(prefer_pallas=False))
+    q = _mkdata(4, seed=42, dim=DIM + 1)
+    d1, i1 = m.query(q, k=5, engine=eng)
+    assert eng.stats()["routes"].get("stacked", 0) > 0, \
+        eng.stats()["routes"]
+    ed, eg = _oracle(m.snapshot(), q, 5)
+    assert np.array_equal(i1, eg)
+    d2, i2 = m.query(q, k=5, engine=eng)  # warm: bit-identical
+    assert np.array_equal(i2, i1) and np.array_equal(d2, d1)
+    assert eng.cache.stats()["hits"] >= 4

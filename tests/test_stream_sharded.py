@@ -307,6 +307,101 @@ def test_round1_caps_upper_bound_global_kth(seed):
     _exchange_invariant(seed)
 
 
+def test_stacked_round2_identical_to_sequential():
+    """Regression fence for the segment-parallel exchange: round 2 run
+    as one stacked launch under lambda0 returns the same ids (and
+    distances at f32 matmul-association tolerance) as the sequential
+    per-shard loop, and the exchange diagnostics (lambda0, round-1 caps)
+    stay valid."""
+    rng = np.random.default_rng(29)
+    m = _mk(240, 3, seed=29, delta_capacity=10, max_segments=32)
+    for i in range(80):  # churn: several segments per shard + tombstones
+        m.insert(rng.normal(size=DIM).astype(np.float32))
+    for g in range(0, 120, 4):
+        m.delete(g)
+    snap = m.snapshot()
+    assert sum(len(s.segments) for s in snap.shards) >= 4
+    q = rng.normal(size=(4, DIM + 1)).astype(np.float32)
+    for k in (1, 6):
+        sd, si, sinfo = m.query(q, k=k, stacked=False, return_info=True)
+        td, ti, tinfo = m.query(q, k=k, stacked=True, return_info=True)
+        # auto resolves by fan-out *and* grid density -- either schedule
+        # may win on this state, but the answer must match one of them
+        ad, ai = m.query(q, k=k)
+        assert np.array_equal(ai, ti) or np.array_equal(ai, si)
+        np.testing.assert_allclose(td, sd, rtol=1e-5, atol=1e-6)
+        mism = ti != si
+        if mism.any():
+            # id disagreements must be rank-order ties: both schedules
+            # computed the same candidate set, distances within one
+            # matmul-association ulp of each other
+            tol = 1e-5 * np.abs(sd) + 1e-6
+            assert (np.abs(td - sd)[mism] <= tol[mism]).all(), (k, ti, si)
+            for r in np.nonzero(mism.any(axis=1))[0]:
+                assert (sorted(ti[r][mism[r]].tolist())
+                        == sorted(si[r][mism[r]].tolist())), (k, ti, si)
+        # round 1 is untouched by the round-2 schedule
+        np.testing.assert_array_equal(tinfo["round1_kth"],
+                                      sinfo["round1_kth"])
+        np.testing.assert_array_equal(tinfo["lambda0"], sinfo["lambda0"])
+        # per-shard k-th diagnostics (the lambda cache's per-shard
+        # component) agree across schedules
+        np.testing.assert_allclose(tinfo["shard_kth"], sinfo["shard_kth"],
+                                   rtol=1e-5, atol=1e-6)
+        # and both are exact vs the union oracle
+        ed, _ = _oracle(snap, q, k)
+        np.testing.assert_allclose(td, ed, rtol=1e-4, atol=1e-5)
+
+
+def test_stacked_round1_caps_valid_mid_compaction(monkeypatch):
+    """The round-1-cap >= global-kth invariant must hold when the shards
+    are swept in one stacked launch while one of them is mid-compaction
+    (serving from a sealed delta view)."""
+    import repro.stream.mutable as mutable_mod
+
+    from repro.core.balltree import normalize_query
+
+    m = _mk(140, 2, seed=37, delta_capacity=8, background=True,
+            max_segments=32)
+    try:
+        real = mutable_mod.Segment.from_points
+        started = threading.Event()
+        release = threading.Event()
+
+        def slow(uid, points, gids, **kw):
+            started.set()
+            assert release.wait(timeout=30)
+            return real(uid, points, gids, **kw)
+
+        monkeypatch.setattr(mutable_mod.Segment, "from_points", slow)
+        n = 0
+        while not started.is_set():
+            m.insert(_mkdata(1, seed=3000 + n)[0])
+            n += 1
+            assert n < 120
+        comp = next(s for s, sh in enumerate(m.shards) if sh._compacting)
+        m.shards[comp].insert(_mkdata(1, seed=3999)[0], gid=10**6)
+        snap = m.snapshot()  # one shard mid-compaction right now
+        assert any(len(s.deltas) > 1 for s in snap.shards)
+        q = normalize_query(_mkdata(3, seed=38, dim=DIM + 1)).astype(
+            np.float32)
+        ed, _ = _oracle(snap, q, 4)
+        bd, bi, _, info = snap.query(q, 4, stacked=True,
+                                     return_counters=True,
+                                     return_info=True)
+        kth = ed[:, 3]
+        assert (info["round1_kth"] >= kth[None, :] - 1e-5).all()
+        assert (info["lambda0"] >= kth - 1e-5).all()
+        np.testing.assert_allclose(bd, ed, rtol=1e-4, atol=1e-5)
+        # identical to the sequential round 2 on the same pin
+        sd, si, _ = snap.query(q, 4, stacked=False, return_counters=True)
+        assert np.array_equal(bi, si)
+        np.testing.assert_allclose(bd, sd, rtol=1e-5, atol=1e-6)
+    finally:
+        release.set()
+        m.close()
+
+
 def test_round1_caps_valid_against_mid_compaction_shard(monkeypatch):
     """The invariant must also hold when a shard is mid-compaction (its
     pinned snapshot serving from a sealed delta view)."""
