@@ -29,9 +29,11 @@ import time
 import numpy as np
 
 try:
-    from benchmarks.common import pct, stacked_vs_seq
+    from benchmarks.common import (pct, pr4_stacked_query,
+                                   stacked_skip_profile, stacked_vs_seq)
 except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
-    from common import pct, stacked_vs_seq
+    from common import (pct, pr4_stacked_query, stacked_skip_profile,
+                        stacked_vs_seq)
 
 
 def make_workload(n=30000, d=32, n_clusters=64, scale=2.5, n_queries=32,
@@ -87,10 +89,20 @@ def bench_engine(idx, trace, k, *, use_cache, slot_size=8, passes=2):
     return per_pass
 
 
-def bench_stacked(data, trace, k, *, n0=64, fanout=6, iters=10):
+def bench_stacked(data, trace, k, *, n0=64, fanout=6, iters=10,
+                  probe_grid=(0, 2, 4, 8)):
     """Sequential vs stacked segment sweep over a fanned-out mutable
-    snapshot of the serving workload (p50/p99, tiles skipped), plus the
-    engine's auto-dispatch route counts over the same snapshot."""
+    snapshot of the serving workload, plus the engine's auto-dispatch
+    route counts over the same snapshot.
+
+    Modes: the sequential cap-threaded walk, the reconstructed PR-4
+    stacked baseline (single pass + host-side per-segment merge), and
+    the fused two-pass program at each ``probe_grid`` width plus the
+    library default -- the measured crossover ``DispatchPolicy.
+    probe_tiles`` is refit against.  ``skip_profile`` reports the
+    per-query-granularity *live*-tile skip fractions (the pruning-power
+    comparison the probe pass exists to win) and the probe-pass
+    overhead."""
     from repro.core.balltree import normalize_query
     from repro.serve import DispatchPolicy, P2HEngine
     from repro.stream import CompactionPolicy, MutableP2HIndex
@@ -106,10 +118,23 @@ def bench_stacked(data, trace, k, *, n0=64, fanout=6, iters=10):
     snap = m.snapshot()
     qn = normalize_query(trace).astype(np.float32)
     res = {"fanout": sum(1 for s in snap.segments if s.live)}
-    res.update(stacked_vs_seq(
-        lambda flag: snap.query(qn, k, stacked=flag,
-                                return_counters=True)[2],
-        iters=iters))
+    modes = {"seq": {"stacked": False}, "pr4": {"pr4": True}}
+    for p in probe_grid:
+        modes[f"stacked_p{p}"] = {"stacked": True, "probe_tiles": p}
+    modes["stacked"] = {"stacked": True, "probe_tiles": None}
+
+    def query_fn(pr4=False, **kw):
+        if pr4:
+            return pr4_stacked_query(snap, qn, k)
+        return snap.query(qn, k, return_counters=True, **kw)[2]
+
+    res.update(stacked_vs_seq(query_fn, modes=modes, iters=iters))
+    res["skip_profile"] = stacked_skip_profile(
+        snap, qn, k, probe_grid=tuple(probe_grid) + (None,))
+    # the refit: which probe width wins p50 on this registered config
+    stacked_modes = [m_ for m_ in modes if m_.startswith("stacked")]
+    res["best_probe_mode"] = min(stacked_modes,
+                                 key=lambda m_: res[m_]["p50_ms"])
     engine = P2HEngine(m, policy=DispatchPolicy(prefer_pallas=False))
     engine.query(trace, k=k)
     res["routes"] = engine.stats()["routes"]
@@ -161,24 +186,39 @@ def main(argv=None):
 
     stacked = bench_stacked(data, trace, args.k, n0=args.n0)
     seq, stk = stacked["seq"], stacked["stacked"]
+    pr4 = stacked["pr4"]
     print(f"mutable snapshot, fan-out {stacked['fanout']}: sequential "
           f"sweep p50 {seq['p50_ms']:.1f} ms p99 {seq['p99_ms']:.1f} ms "
-          f"({seq['tiles_skipped']} tiles skipped)  |  stacked "
+          f"({seq['tiles_skipped']} tiles skipped)  |  PR-4 stacked "
+          f"(host merge) p50 {pr4['p50_ms']:.1f} ms  |  two-pass stacked "
           f"p50 {stk['p50_ms']:.1f} ms p99 {stk['p99_ms']:.1f} ms "
           f"({stk['tiles_skipped']} tiles skipped, incl. forced pad/dead "
           f"skips)  ->  {seq['p50_ms'] / max(stk['p50_ms'], 1e-9):.2f}x "
-          f"p50 speedup; engine routes {stacked['routes']}")
+          f"p50 vs sequential, "
+          f"{pr4['p50_ms'] / max(stk['p50_ms'], 1e-9):.2f}x vs PR-4 "
+          f"baseline; best probe mode {stacked['best_probe_mode']}; "
+          f"engine routes {stacked['routes']}")
+    prof = stacked["skip_profile"]
+    print("live-tile skip fractions (per-query granularity): "
+          + "  ".join(f"{m}={r['skip_frac']:.3f}"
+                      for m, r in prof.items())
+          + f"; probe overhead {prof['stacked']['probe']}")
     return {"naive": naive, "cold": cold, "warm": warm,
             "stacked": stacked}
 
 
-def run(csv) -> None:
-    """benchmarks.run registry entry point: CSV rows for bench_output.
+def run(csv, *, smoke: bool = False) -> dict:
+    """benchmarks.run registry entry point: CSV rows for bench_output
+    plus the returned dict ``benchmarks.run`` serializes to
+    ``BENCH_serve.json`` (the machine-readable perf trajectory
+    successive PRs diff against).
 
     Uses main()'s defaults: the workload (n, k, clustering) is tuned so
     the warm-cache tile-skip dominance window exists (see module
-    docstring) and the closing assert holds."""
-    res = main([])
+    docstring) and the closing assert holds.  ``smoke=True`` shrinks the
+    workload to a CI-sized config (same shape, same JSON schema)."""
+    res = main(["--n", "8000", "--k", "40", "--queries", "16"]
+               if smoke else [])
     csv("serve,mode,qps,p50_ms,p99_ms,tiles_skipped,verified")
     for mode in ("naive", "cold", "warm"):
         r = res[mode]
@@ -187,10 +227,16 @@ def run(csv) -> None:
             f"{r.get('verified', '')}")
     stacked = res["stacked"]
     csv("serve_stacked,mode,p50_ms,p99_ms,tiles_skipped,fanout")
-    for mode in ("seq", "stacked"):
-        r = stacked[mode]
+    for mode, r in stacked.items():
+        if not isinstance(r, dict) or "p50_ms" not in r:
+            continue
         csv(f"serve_stacked,{mode},{r['p50_ms']:.3f},{r['p99_ms']:.3f},"
             f"{r['tiles_skipped']},{stacked['fanout']}")
+    csv("serve_stacked_skips,mode,live_skips,live_covered,skip_frac")
+    for mode, r in stacked["skip_profile"].items():
+        csv(f"serve_stacked_skips,{mode},{r['live_skips']},"
+            f"{r['live_covered']},{r['skip_frac']:.4f}")
+    return res
 
 
 if __name__ == "__main__":

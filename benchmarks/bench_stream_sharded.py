@@ -35,9 +35,11 @@ import time
 import numpy as np
 
 try:
-    from benchmarks.common import pct, stacked_vs_seq
+    from benchmarks.common import (live_tiles_covered, pct,
+                                   stacked_live_skip_entry, stacked_vs_seq)
 except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
-    from common import pct, stacked_vs_seq
+    from common import (live_tiles_covered, pct, stacked_live_skip_entry,
+                        stacked_vs_seq)
 
 
 def overlap_stats(log):
@@ -61,16 +63,22 @@ def overlap_stats(log):
     return total, overlap
 
 
-def sweep_compare(snap, queries, k, *, iters=20):
+def sweep_compare(snap, queries, k, *, iters=20, probe_grid=(0, 4)):
     """Stacked vs sequential sweep over one pinned (multi-segment)
-    snapshot: p50/p99 per query batch + tiles skipped per batch."""
+    snapshot: p50/p99 per query batch + tiles skipped per batch, for the
+    sequential exchange, the single-pass stacked round 2 (the PR-4
+    schedule, ``probe_tiles=0``) and the two-pass program at each probe
+    width plus the library default."""
     from repro.core.balltree import normalize_query
 
     qn = normalize_query(queries).astype(np.float32)
+    mode_kw = {"seq": {"stacked": False}}
+    for p in probe_grid:
+        mode_kw[f"stacked_p{p}"] = {"stacked": True, "probe_tiles": p}
+    mode_kw["stacked"] = {"stacked": True, "probe_tiles": None}
     modes = stacked_vs_seq(
-        lambda flag: snap.query(qn, k, stacked=flag,
-                                return_counters=True)[2],
-        iters=iters)
+        lambda **kw: snap.query(qn, k, return_counters=True, **kw)[2],
+        modes=mode_kw, iters=iters)
     out = {"sweep_fanout": sum(1 for seg in snap.segments if seg.live)}
     for mode, r in modes.items():
         out[f"{mode}_sweep_p50_ms"] = r["p50_ms"]
@@ -78,6 +86,43 @@ def sweep_compare(snap, queries, k, *, iters=20):
         out[f"{mode}_tiles_skipped"] = r["tiles_skipped"]
     out["stacked_speedup_p50"] = (out["seq_sweep_p50_ms"]
                                   / max(out["stacked_sweep_p50_ms"], 1e-9))
+    out["probe_speedup_p50"] = (out["stacked_p0_sweep_p50_ms"]
+                                / max(out["stacked_sweep_p50_ms"], 1e-9))
+    return out
+
+
+def round2_skip_profile(snap, queries, k, *, probe_grid=(0, 4, None)):
+    """Live-tile skip accounting for round 2 of the exchange at
+    per-query granularity (bq=1), under the same ``lambda0``: the
+    sequential per-shard loop vs the two-pass stacked program at each
+    probe width.  This is the acceptance comparison -- the probe pass
+    must restore (or beat) the sequential path's live-tile pruning."""
+    import jax.numpy as jnp
+
+    from repro.core.balltree import normalize_query
+    from repro.kernels.stacked_sweep import concat_cached
+
+    qn = normalize_query(queries).astype(np.float32)
+    _, _, info = snap.query(qn, k, return_info=True, stacked=False)
+    lam0 = jnp.asarray(info["lambda0"], jnp.float32)
+    covered = live_tiles_covered(snap.segments, qn.shape[0])
+    seq = 0
+    for sh in snap.shards:
+        if not sh.segments:
+            continue
+        _, _, cnt = sh.query(qn, k, lambda_cap=lam0,
+                             include_deltas=False, stacked=False,
+                             return_counters=True)
+        seq += int(np.asarray(cnt)[7])
+    out = {"seq": {"live_skips": seq, "live_covered": covered,
+                   "skip_frac": seq / max(1, covered)}}
+    comb = concat_cached([sh.stacked_leaves() for sh in snap.shards
+                          if sh.segments])
+    for p in probe_grid:
+        name = "stacked" if p is None else f"stacked_p{p}"
+        out[name] = stacked_live_skip_entry(
+            comb, qn, k, cap=lam0, probe=p, covered=covered,
+            is_bc=snap.variant == "bc")
     return out
 
 
@@ -137,6 +182,7 @@ def run_sharded_stream(args):
 
     # stacked vs sequential sweep on the final multi-segment pin
     sweep = sweep_compare(snap, hot, args.k)
+    skip_profile = round2_skip_profile(snap, hot, args.k)
 
     log = m.compaction_log
     pauses = [c["wall_s"] for c in log]
@@ -144,6 +190,7 @@ def run_sharded_stream(args):
     shard_tp = per_shard_writes / max(wall, 1e-9)
     res = {
         **sweep,
+        "skip_profile": skip_profile,
         "shards": args.shards,
         "ops": args.ops,
         "wall_s": wall,
@@ -214,18 +261,29 @@ def main(argv=None):
     print(f"sweep @ fan-out {res['sweep_fanout']}: sequential "
           f"p50 {res['seq_sweep_p50_ms']:.1f} ms "
           f"p99 {res['seq_sweep_p99_ms']:.1f} ms "
-          f"({res['seq_tiles_skipped']} tiles skipped)  |  stacked "
-          f"p50 {res['stacked_sweep_p50_ms']:.1f} ms "
+          f"({res['seq_tiles_skipped']} tiles skipped)  |  single-pass "
+          f"stacked (PR-4) p50 {res['stacked_p0_sweep_p50_ms']:.1f} ms  "
+          f"|  two-pass stacked p50 {res['stacked_sweep_p50_ms']:.1f} ms "
           f"p99 {res['stacked_sweep_p99_ms']:.1f} ms "
           f"({res['stacked_tiles_skipped']} tiles skipped, incl. forced "
           f"pad/dead-tile skips)  ->  {res['stacked_speedup_p50']:.2f}x "
-          "p50 speedup")
+          f"p50 vs sequential, {res['probe_speedup_p50']:.2f}x vs "
+          "single-pass")
+    prof = res["skip_profile"]
+    print("round-2 live-tile skip fractions under lambda0: "
+          + "  ".join(f"{m}={r['skip_frac']:.3f}" for m, r in prof.items())
+          + f"; probe overhead {prof['stacked']['probe']}")
     return res
 
 
-def run(csv) -> None:
-    """benchmarks.run registry entry point: CSV rows for bench_output."""
-    res = main(["--n", "8000", "--ops", "600", "--shards", "4",
+def run(csv, *, smoke: bool = False) -> dict:
+    """benchmarks.run registry entry point: CSV rows for bench_output
+    plus the returned dict ``benchmarks.run`` serializes to
+    ``BENCH_stream_sharded.json``.  ``smoke=True`` shrinks the workload
+    to a CI-sized config (same shape, same JSON schema)."""
+    res = main(["--n", "2000", "--ops", "150", "--shards", "4",
+                "--delta-capacity", "24"] if smoke else
+               ["--n", "8000", "--ops", "600", "--shards", "4",
                 "--delta-capacity", "48"])
     csv("stream_sharded,metric,value")
     for key in ("shards", "write_ops_per_s", "shard_write_ops_per_s_min",
@@ -235,12 +293,18 @@ def run(csv) -> None:
                 "compact_p50_ms", "compact_max_ms", "compact_overlap_frac",
                 "final_live", "segments", "sweep_fanout",
                 "seq_sweep_p50_ms", "seq_sweep_p99_ms",
-                "seq_tiles_skipped", "stacked_sweep_p50_ms",
+                "seq_tiles_skipped", "stacked_p0_sweep_p50_ms",
+                "stacked_sweep_p50_ms",
                 "stacked_sweep_p99_ms", "stacked_tiles_skipped",
-                "stacked_speedup_p50"):
+                "stacked_speedup_p50", "probe_speedup_p50"):
         csv(f"stream_sharded,{key},{res[key]:.3f}"
             if isinstance(res[key], float)
             else f"stream_sharded,{key},{res[key]}")
+    csv("stream_sharded_skips,mode,live_skips,live_covered,skip_frac")
+    for mode, r in res["skip_profile"].items():
+        csv(f"stream_sharded_skips,{mode},{r['live_skips']},"
+            f"{r['live_covered']},{r['skip_frac']:.4f}")
+    return res
 
 
 if __name__ == "__main__":

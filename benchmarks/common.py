@@ -58,25 +58,115 @@ def timeit(fn, *args, repeats=3, **kw):
     return min(ts), out
 
 
-def stacked_vs_seq(query_fn, *, iters=20):
-    """Stacked-vs-sequential sweep timing harness shared by bench_serve
-    and bench_stream_sharded.  ``query_fn(stacked: bool)`` runs one
-    query batch and returns the (8,) search counters; the first call per
-    mode doubles as compile warmup, then the timed iterations alternate
-    modes so machine noise hits both equally.  Returns ``{mode:
-    {"p50_ms", "p99_ms", "tiles_skipped"}}`` for modes ``seq`` /
-    ``stacked`` (stacked skip counts include the force-skipped pad/dead
-    tiles of the common grid)."""
-    modes = (("seq", False), ("stacked", True))
-    skips = {mode: int(np.asarray(query_fn(flag))[7])
-             for mode, flag in modes}
-    lat = {mode: [] for mode, _ in modes}
+def stacked_vs_seq(query_fn, *, iters=20, modes=None):
+    """Sweep-schedule timing harness shared by bench_serve and
+    bench_stream_sharded.  ``query_fn(**mode_kwargs)`` runs one query
+    batch and returns the (8,) search counters; the first call per mode
+    doubles as compile warmup, then the timed iterations alternate modes
+    so machine noise hits all equally.  ``modes`` is an ordered ``{name:
+    kwargs}`` mapping (default: the classic ``seq`` / ``stacked`` pair);
+    returns ``{mode: {"p50_ms", "p99_ms", "tiles_skipped"}}`` (stacked
+    skip counts include the force-skipped pad/dead tiles of the common
+    grid -- see :func:`stacked_skip_profile` for the live-tile view)."""
+    if modes is None:
+        modes = {"seq": {"stacked": False}, "stacked": {"stacked": True}}
+    skips = {m: int(np.asarray(query_fn(**kw))[7])
+             for m, kw in modes.items()}
+    lat = {m: [] for m in modes}
     for _ in range(iters):
-        for mode, flag in modes:
+        for m, kw in modes.items():
             t0 = time.perf_counter()
-            query_fn(flag)
-            lat[mode].append(time.perf_counter() - t0)
-    return {mode: {"p50_ms": pct(lat[mode], 50) * 1e3,
-                   "p99_ms": pct(lat[mode], 99) * 1e3,
-                   "tiles_skipped": skips[mode]}
-            for mode, _ in modes}
+            query_fn(**kw)
+            lat[m].append(time.perf_counter() - t0)
+    return {m: {"p50_ms": pct(lat[m], 50) * 1e3,
+                "p99_ms": pct(lat[m], 99) * 1e3,
+                "tiles_skipped": skips[m]}
+            for m in modes}
+
+
+def live_tiles_covered(segments, n_queries: int) -> int:
+    """Per-query-granularity live-tile coverage denominator shared by
+    the serve and sharded skip profiles (tiles holding >= 1 live point,
+    judged on the segments' current ids planes)."""
+    from repro.kernels.stacked_sweep import _segment_live_tiles
+
+    return n_queries * sum(_segment_live_tiles(s) for s in segments
+                           if s.live)
+
+
+def stacked_live_skip_entry(stk, qn, k, *, cap, probe, covered, is_bc,
+                            extra_d=None, extra_i=None):
+    """One skip-profile row: run the two-pass program at per-query
+    granularity (bq=1) and account its live-tile skips (forced pad/dead
+    skips excluded).  Shared by the serve-side and sharded-round-2
+    profiles so both acceptance comparisons use one accounting."""
+    import jax.numpy as jnp
+
+    from repro.kernels.stacked_sweep import stacked_sweep_query
+
+    _, _, cnt, info = stacked_sweep_query(
+        stk, jnp.asarray(qn), k, bq=1, lambda_cap=cap, probe_tiles=probe,
+        extra_d=extra_d, extra_i=extra_i, use_ball=is_bc, use_cone=is_bc)
+    live_skips = int(np.asarray(info["seg_skips"]).sum()
+                     - np.asarray(info["forced_skips"]).sum())
+    return {"live_skips": live_skips, "live_covered": covered,
+            "skip_frac": live_skips / max(1, covered),
+            "probe": info["probe"]}
+
+
+def pr4_stacked_query(snap, qn, k):
+    """The pre-fusion (PR-4) stacked route, reconstructed for baseline
+    timing: single-pass planes sweep under the entry cap + *host-side*
+    per-segment merge -- exactly the schedule the two-pass in-launch
+    program replaces.  Returns the (8,) counters (results materialized
+    so timing includes the device sync)."""
+    import jax.numpy as jnp
+
+    from repro.core import search
+    from repro.kernels.stacked_sweep import stacked_sweep_search
+
+    bd, bi, _ = snap.delta_candidates(jnp.asarray(qn), k)
+    B = qn.shape[0]
+    sd, sg, cnt, _ = stacked_sweep_search(
+        snap.stacked_leaves(), jnp.asarray(qn), k,
+        lambda_cap=bd[:, k - 1], probe_tiles=0,
+        use_ball=snap.variant == "bc", use_cone=snap.variant == "bc")
+    N = sd.shape[0]
+    fd, fi = search.merge_topk(
+        jnp.concatenate([bd, jnp.moveaxis(sd, 0, 1).reshape(B, N * k)],
+                        axis=1),
+        jnp.concatenate([bi, jnp.moveaxis(sg, 0, 1).reshape(B, N * k)],
+                        axis=1), k)
+    np.asarray(fd), np.asarray(fi)
+    return cnt
+
+
+def stacked_skip_profile(snap, qn, k, *, probe_grid=(0, None)):
+    """Live-tile skip accounting at per-query granularity (bq=1): the
+    sequential cap-threaded walk vs the two-pass stacked sweep at each
+    probe setting, on one pinned snapshot.
+
+    Skip *fractions* are live skips over live tiles covered, so the
+    stacked grid's force-skipped pad/dead tiles -- which pay for
+    themselves structurally -- are excluded: this is the apples-to-
+    apples pruning-power comparison the probe pass exists to win.
+    Returns ``{"seq": {...}, "stacked_p<p>": {...}, "stacked": {...}}``
+    (the unlabeled ``stacked`` entry is the library-default probe)."""
+    import jax.numpy as jnp
+
+    _, _, seq_cnt = snap.query(qn, k, stacked=False, return_counters=True)
+    covered = live_tiles_covered(snap.segments, qn.shape[0])
+    out = {"seq": {
+        "live_skips": int(np.asarray(seq_cnt)[7]),
+        "live_covered": covered,
+        "skip_frac": int(np.asarray(seq_cnt)[7]) / max(1, covered),
+    }}
+    bd, bi, _ = snap.delta_candidates(jnp.asarray(qn), k)
+    stk = snap.stacked_leaves()
+    is_bc = snap.variant == "bc"
+    for p in probe_grid:
+        name = "stacked" if p is None else f"stacked_p{p}"
+        out[name] = stacked_live_skip_entry(
+            stk, qn, k, cap=bd[:, k - 1], probe=p, covered=covered,
+            is_bc=is_bc, extra_d=bd, extra_i=bi)
+    return out

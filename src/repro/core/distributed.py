@@ -113,7 +113,8 @@ def _pad_tree(t: FlatTree, m: int, L: int, n0: int) -> FlatTree:
 def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
                        method: str = "sweep", frac: float = 1.0,
                        lambda_cap=None, return_info: bool = False,
-                       stacked: bool | None = None):
+                       stacked: bool | None = None,
+                       probe_tiles: int | None = None):
     """Host-orchestrated two-round lambda exchange over *callable shard
     backends* -- the frozen forest's exchange generalized to heterogeneous
     per-shard states.
@@ -162,17 +163,23 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     ``stacked`` controls round 2's *segment-parallel* form: shard
     backends that expose ``stacked_leaves()`` (snapshot pins of the
     mutable index) have their segment tile-sets concatenated and swept
-    by **one** device-side launch under ``lambda0``
-    (:func:`repro.kernels.stacked_sweep.stacked_sweep_search`) instead
-    of the sequential host loop; backends without stacked leaves keep
-    the loop.  ``None`` auto-promotes the exact ``sweep``/``pallas``
-    methods when the stackable shards' total live-segment fan-out
-    reaches ``STACKED_FANOUT_DEFAULT``; ``True`` (or
-    ``method="stacked"``) forces it, ``False`` forbids it (and is
-    forwarded to stackable shards so nothing stacks per-shard either --
-    the pure-sequential reference the regression fence diffs against).
-    Exact either way: every segment is swept under the same valid
-    ``lambda0`` cap; only tile-skip counts differ.
+    by **one** two-pass device program under ``lambda0``
+    (:func:`repro.kernels.stacked_sweep.stacked_sweep_query`: probe
+    pass tightens ``lambda0`` to ``lambda_probe`` on device, the main
+    pass sweeps the remaining tiles, and the cross-shard global merge
+    *and* per-shard k-th reductions run inside the same program -- the
+    stacked round 2 returns from a single device program with no
+    host-side per-segment merge; ``probe_tiles`` is the probe width).
+    Backends without stacked leaves keep the sequential loop.  ``None``
+    auto-promotes the exact ``sweep``/``pallas`` methods when the
+    stackable shards' total live-segment fan-out reaches
+    ``STACKED_FANOUT_DEFAULT``; ``True`` (or ``method="stacked"``)
+    forces it, ``False`` forbids it (and is forwarded to stackable
+    shards so nothing stacks per-shard either -- the pure-sequential
+    reference the regression fence diffs against).  Exact either way:
+    every segment is swept under valid caps; only tile-skip counts (and
+    the heavily-pruned far-shard diagnostics beyond the true top-k)
+    differ.
     """
     shards = tuple(shards)  # iterated once per round: reject generators
     q = jnp.asarray(np.atleast_2d(np.asarray(queries)), jnp.float32)
@@ -198,25 +205,29 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
             parts_i.append(jnp.asarray(bi1))
         lam0 = lam
     base = "sweep" if method == "stacked" else method
-    slabs, cnt_stk = _stacked_round2(shards, q, k, method=method,
-                                     stacked=stacked, lam0=lam0)
+    stk_merged, stk_kth, cnt_stk = _stacked_round2(
+        shards, q, k, method=method, stacked=stacked, lam0=lam0,
+        probe_tiles=probe_tiles)
     if cnt_stk is not None:
         counters += cnt_stk
+    if stk_merged is not None:
+        # ONE device program (probe + main + merge) already merged every
+        # stackable shard's segments and reduced the per-shard k-ths --
+        # it contributes a single already-merged candidate list, never a
+        # host-side per-segment merge loop
+        parts_d.append(jnp.asarray(stk_merged[0]))
+        parts_i.append(jnp.asarray(stk_merged[1]))
     round2_kth = []
     for si, s in enumerate(shards):
-        if si in slabs:
-            sd, sg = slabs[si]  # (Ns, B, k) per-segment top-k under lam0
-            Ns = sd.shape[0]
-            bd, bi = search.merge_topk(
-                jnp.moveaxis(sd, 0, 1).reshape(B, Ns * k),
-                jnp.moveaxis(sg, 0, 1).reshape(B, Ns * k), k)
-        else:
-            kw = ({"stacked": stacked}
-                  if hasattr(s, "stacked_leaves") else {})
-            bd, bi, cnt = s.query(q, k, method=base, frac=frac,
-                                  lambda_cap=lam0, return_counters=True,
-                                  include_deltas=method == "beam", **kw)
-            counters += np.asarray(cnt, np.int64)
+        if si in stk_kth:
+            round2_kth.append(np.asarray(stk_kth[si]))
+            continue
+        kw = ({"stacked": stacked}
+              if hasattr(s, "stacked_leaves") else {})
+        bd, bi, cnt = s.query(q, k, method=base, frac=frac,
+                              lambda_cap=lam0, return_counters=True,
+                              include_deltas=method == "beam", **kw)
+        counters += np.asarray(cnt, np.int64)
         round2_kth.append(np.asarray(jnp.asarray(bd)[:, k - 1]))
         parts_d.append(jnp.asarray(bd))
         parts_i.append(jnp.asarray(bi))
@@ -246,20 +257,22 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     return bd, bi, counters
 
 
-def _stacked_round2(shards, q, k, *, method, stacked, lam0):
+def _stacked_round2(shards, q, k, *, method, stacked, lam0, probe_tiles):
     """Resolve + run the segment-parallel round 2: every stackable
-    shard's segment tile-sets concatenated and swept by one launch under
-    ``lambda0``.  Returns ``({shard index: (dists (Ns, B, k), global ids
-    (Ns, B, k))}, counters)`` for the shards served by the launch --
-    ``({}, None)`` when the sequential loop should run instead."""
+    shard's segment tile-sets concatenated and swept by ONE two-pass
+    device program under ``lambda0`` (probe + main + in-launch merge +
+    per-shard k-th reductions).  Returns ``((merged dists (B, k), merged
+    global ids (B, k)), {shard index: per-shard k-th (B,)}, counters)``
+    for the shards served by the program -- ``(None, {}, None)`` when
+    the sequential loop should run instead."""
     if (lam0 is None or stacked is False
             or method not in ("sweep", "pallas", "stacked")):
-        return {}, None
+        return None, {}, None
     stackable = [(si, s) for si, s in enumerate(shards)
                  if callable(getattr(s, "stacked_leaves", None))
                  and len(getattr(s, "segments", ())) > 0]
     if not stackable:
-        return {}, None
+        return None, {}, None
     if stacked is None and method != "stacked":
         from repro.kernels.stacked_sweep import (STACKED_DENSITY_DEFAULT,
                                                  STACKED_FANOUT_DEFAULT,
@@ -270,24 +283,24 @@ def _stacked_round2(shards, q, k, *, method, stacked, lam0):
         all_segs = [seg for _, s in stackable for seg in s.segments]
         # the concatenated grid re-pads every shard to the global max
         # tile count, so density is judged on the flattened segment set
+        # (tile_density reads the *current* ids planes, so tombstoned
+        # rows degrade the signal exactly like build-time raggedness)
         if (fanout < STACKED_FANOUT_DEFAULT
                 or tile_density(all_segs) < STACKED_DENSITY_DEFAULT):
-            return {}, None
-    from repro.kernels.stacked_sweep import (concat_cached,
-                                             stacked_sweep_search)
+            return None, {}, None
+    from repro.kernels.stacked_sweep import concat_cached, stacked_sweep_query
 
     stks = [s.stacked_leaves() for _, s in stackable]
     combined = concat_cached(stks)
     is_bc = getattr(stackable[0][1], "variant", "bc") == "bc"
-    sd, sg, cnt, _ = stacked_sweep_search(
-        combined, q, k, lambda_cap=lam0, use_ball=is_bc, use_cone=is_bc,
+    fd, fi, cnt, info = stacked_sweep_query(
+        combined, q, k, lambda_cap=lam0, probe_tiles=probe_tiles,
+        shard_bounds=tuple(stk.num_segments for stk in stks),
+        use_ball=is_bc, use_cone=is_bc,
         use_kernel=True if method == "pallas" else None)
-    slabs, off = {}, 0
-    for (si, _), stk in zip(stackable, stks):
-        n = stk.num_segments
-        slabs[si] = (sd[off:off + n], sg[off:off + n])
-        off += n
-    return slabs, np.asarray(cnt, np.int64)
+    shard_kth = np.asarray(info["shard_kth"])  # (S_stackable, B)
+    kths = {si: shard_kth[row] for row, (si, _) in enumerate(stackable)}
+    return (fd, fi), kths, np.asarray(cnt, np.int64)
 
 
 @dataclasses.dataclass

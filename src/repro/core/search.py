@@ -34,7 +34,7 @@ from repro.core import bounds
 from repro.core.balltree import FlatTree
 
 __all__ = ["dfs_search", "sweep_search", "beam_search", "merge_topk",
-           "SearchStats"]
+           "merge_topk_planes", "SearchStats"]
 
 # counter indices
 C_NODES, C_PRUNED, C_LEAVES, C_IP, C_BALL, C_CONE, C_VERIFIED, C_TILE_SKIP = range(8)
@@ -77,6 +77,28 @@ def merge_topk(dists, ids, k: int):
     md = jnp.where(dup, jnp.inf, md)
     neg, arg = jax.lax.top_k(-md, k)
     return -neg, jnp.take_along_axis(mi, arg, axis=1)
+
+
+def merge_topk_planes(dists, ids, k: int, extra_d=None, extra_i=None):
+    """Cross-source :func:`merge_topk` over stacked per-source planes.
+
+    ``dists``/``ids`` are ``(N, B, k_s)`` -- one partial top-k plane per
+    source (a segment of the stacked sweep, a shard of the exchange) --
+    flattened to ``(B, N * k_s)`` and merged with :func:`merge_topk`'s
+    id-primary dedup/tie convention.  ``extra_d``/``extra_i`` (optional,
+    ``(B, M)``) append one more candidate list (e.g. the delta scan's
+    top-k) to the same merge.  Pure jnp, so it runs *inside* the stacked
+    sweep's device program (the in-launch global merge) and on the host
+    exchange path alike -- both share this one function, keeping the two
+    merge sites bit-identical.
+    """
+    N, B, ks = dists.shape
+    md = jnp.moveaxis(jnp.asarray(dists), 0, 1).reshape(B, N * ks)
+    mi = jnp.moveaxis(jnp.asarray(ids), 0, 1).reshape(B, N * ks)
+    if extra_d is not None:
+        md = jnp.concatenate([md, jnp.asarray(extra_d)], axis=1)
+        mi = jnp.concatenate([mi, jnp.asarray(extra_i)], axis=1)
+    return merge_topk(md, mi, k)
 
 
 # ======================================================================

@@ -10,7 +10,7 @@ the mutable index's segment fan-out and the two-round exchange's round
 from repro.kernels import ops, ref, stacked_sweep  # noqa: F401
 from repro.kernels.ops import sweep_search_pallas  # noqa: F401
 from repro.kernels.stacked_sweep import (  # noqa: F401
-    StackedLeaves, stacked_sweep_search)
+    StackedLeaves, stacked_sweep_query, stacked_sweep_search)
 
 __all__ = ["ops", "ref", "stacked_sweep", "sweep_search_pallas",
-           "StackedLeaves", "stacked_sweep_search"]
+           "StackedLeaves", "stacked_sweep_query", "stacked_sweep_search"]

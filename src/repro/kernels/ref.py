@@ -13,8 +13,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-import functools
-
 from repro.kernels.p2h_scan import _cone_cases
 
 __all__ = ["p2h_sweep_ref", "stacked_sweep_ref"]
@@ -24,22 +22,29 @@ def p2h_sweep_ref(
     pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm,
     queries, qnorm, cap, leaf_ip, leaf_lb, visit,
     *, k: int, bq: int = 8, use_ball: bool = True, use_cone: bool = True,
+    seed_d=None, seed_i=None,
 ):
     """Reference with identical semantics. Returns (dists, ids, skips);
     dists/ids are sorted ascending here (callers sort kernel output before
     comparing) and ``skips`` (nqb, 1) counts block-granular tile skips
-    exactly like the kernel's counter."""
+    exactly like the kernel's counter.  ``seed_d``/``seed_i`` (optional,
+    (B, k)) seed the running top-k -- the probe-pass handoff of the
+    two-pass stacked sweep (pass B resumes from pass A's state instead of
+    rescanning probed tiles); ``None`` starts cold (+inf / -1)."""
     pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm = (
         jnp.asarray(a) for a in
         (pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm))
     B = queries.shape[0]
     nqb, n_visit = visit.shape
     assert B == nqb * bq
+    if seed_d is None:
+        seed_d = jnp.full((B, k), jnp.inf, jnp.float32)
+        seed_i = jnp.full((B, k), -1, jnp.int32)
 
-    def one_block(qb, qnb, capb, ipb, lbb, order):
-        # qb (bq, dp); ipb/lbb (bq, L); order (n_visit,)
-        topd = jnp.full((bq, k), jnp.inf, jnp.float32)
-        topi = jnp.full((bq, k), -1, jnp.int32)
+    def one_block(qb, qnb, capb, ipb, lbb, order, sd, si):
+        # qb (bq, dp); ipb/lbb (bq, L); order (n_visit,); sd/si (bq, k)
+        topd = jnp.asarray(sd, jnp.float32)
+        topi = jnp.asarray(si, jnp.int32)
 
         def step(carry, leaf):
             td, ti, ns = carry
@@ -78,7 +83,9 @@ def p2h_sweep_ref(
     cp = cap.reshape(nqb, bq, 1)
     ipb = leaf_ip.reshape(nqb, bq, -1)
     lbb = leaf_lb.reshape(nqb, bq, -1)
-    td, ti, ns = jax.vmap(one_block)(qb, qn, cp, ipb, lbb, visit)
+    sd = jnp.asarray(seed_d).reshape(nqb, bq, k)
+    si = jnp.asarray(seed_i).reshape(nqb, bq, k)
+    td, ti, ns = jax.vmap(one_block)(qb, qn, cp, ipb, lbb, visit, sd, si)
     return td.reshape(B, k), ti.reshape(B, k), ns.reshape(nqb, 1)
 
 
@@ -86,18 +93,48 @@ def stacked_sweep_ref(
     pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm,
     queries, qnorm, cap, leaf_ip, leaf_lb, visit,
     *, k: int, bq: int = 8, use_ball: bool = True, use_cone: bool = True,
+    seed_d=None, seed_i=None, global_seed=None,
 ):
     """Oracle for :func:`repro.kernels.stacked_sweep.stacked_sweep`:
-    :func:`p2h_sweep_ref` vmapped over the leading segment axis.  Tile
+    :func:`p2h_sweep_ref` scanned over the leading segment axis with the
+    kernel's **in-launch global top-k** threaded through the carry.  Tile
     operands carry a leading ``N``; queries / qnorm / the entry cap are
-    shared across segments.  Returns ``(dists (N, B, k) ascending,
-    global ids (N, B, k), skips (N, B//bq, 1))`` with the same
-    block-granular skip semantics as the stacked kernel (pad tiles enter
-    with a ``+inf`` node bound, so they are always skipped and always
-    counted)."""
-    fn = functools.partial(p2h_sweep_ref, k=k, bq=bq, use_ball=use_ball,
-                           use_cone=use_cone)
-    return jax.vmap(
-        fn, in_axes=(0, 0, 0, 0, 0, 0, None, None, None, 0, 0, 0),
-    )(pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm,
-      queries, qnorm, cap, leaf_ip, leaf_lb, visit)
+    shared across segments.  Per segment, the global running k-th is
+    folded into the effective cap (the kernel reads its ``glob`` scratch
+    -- constant within a segment on both paths, because the fold happens
+    at each segment's last tile), and the segment's resulting top-k
+    *values* are merged into the carry.  ``seed_d``/``seed_i`` (optional,
+    (N, B, k)) seed each segment's running top-k -- pass B of the
+    two-pass sweep resumes from pass A's per-segment state --
+    ``global_seed`` ((B, k)) seeds the global values (pass B gets pass
+    A's merged planes).  Returns ``(dists (N, B, k) ascending, global
+    ids (N, B, k), skips (N, B//bq, 1))`` with the same block-granular
+    skip semantics as the stacked kernel (pad tiles enter with a ``+inf``
+    node bound, so they are always skipped and always counted)."""
+    N, B = pts_tiles.shape[0], queries.shape[0]
+    if seed_d is None:
+        seed_d = jnp.full((N, B, k), jnp.inf, jnp.float32)
+        seed_i = jnp.full((N, B, k), -1, jnp.int32)
+    if global_seed is None:
+        global_seed = jnp.full((B, k), jnp.inf, jnp.float32)
+
+    def seg_step(glob, seg):
+        pts, ids, rx, xc, xs, cn, ip, lb, vis, sd, si = seg
+        # the kernel's per-tile threshold min's in the global running
+        # k-th; glob only updates at segment end, so folding it into the
+        # cap here is bit-identical
+        capg = jnp.minimum(cap, jnp.max(glob, axis=1, keepdims=True))
+        td, ti, ns = p2h_sweep_ref(
+            pts, ids, rx, xc, xs, cn, queries, qnorm, capg, ip, lb, vis,
+            k=k, bq=bq, use_ball=use_ball, use_cone=use_cone,
+            seed_d=sd, seed_i=si)
+        merged = jnp.concatenate([glob, td], axis=1)
+        glob = -jax.lax.top_k(-merged, k)[0]  # k smallest values
+        return glob, (td, ti, ns)
+
+    _, (td, ti, ns) = jax.lax.scan(
+        seg_step, jnp.asarray(global_seed, jnp.float32),
+        (pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles, leaf_cnorm,
+         leaf_ip, leaf_lb, visit, jnp.asarray(seed_d),
+         jnp.asarray(seed_i)))
+    return td, ti, ns

@@ -11,25 +11,36 @@ and swept by **one** Pallas program with grid ``(N, query-blocks,
 tiles)`` -- or by its vmapped pure-jnp twin off-TPU -- under a single
 *entry* cap per query instead of the sequentially-threaded one.
 
-The tradeoff is explicit: within a segment the running top-k still
-tightens tile by tile, but segment ``i`` no longer sees segments
-``< i``'s merged k-th, so the per-tile threshold is looser and fewer
-*live* tiles are skipped than on the sequential path (``lam_stacked =
-min(entry cap, segment running k-th) >= lam_seq``, which also min's in
-the cross-segment merged k-th).  What the stack buys back is launch
-shape: one matmul-shaped program per round instead of ``N`` backend
-calls with host merges (and device syncs) between them.  Pad tiles --
-ragged segments are padded to a common quantized tile count, empty /
-all-tombstone tiles are masked via the backends' ``point_ids == -1``
-convention -- are force-skipped through a ``+inf`` node bound and show
-up in the per-segment skip counters, so the counters account for every
-tile the launch covers.
+The one-launch form originally traded cap tightness for launch shape:
+within a segment the running top-k still tightens tile by tile, but
+segment ``i`` no longer sees segments ``< i``'s merged k-th, so the
+per-tile threshold was looser and fewer *live* tiles were skipped than
+on the sequential path.  The **two-pass** program closes that gap on
+device -- the same move metric trees make by spending a cheap bounding
+pass before the expensive scan: pass A ("probe") sweeps only the top
+``probe_tiles`` preference-ordered tiles of every segment under the
+entry cap, a device-side :func:`repro.core.search.merge_topk_planes`
+reduces the per-segment probe k-ths to one tightened per-query cap
+``lambda_probe = min(entry cap, merged probe k-th)``, and pass B sweeps
+the remaining tiles of all segments under ``lambda_probe``, seeded with
+pass A's per-segment top-k state so probed tiles are never rescanned.
+The cross-segment finish (global merge + optional per-shard k-th
+reductions) runs in the same jitted program, so one serving round is
+one device program end to end -- no host-side per-segment merge.  Pad
+tiles -- ragged segments are padded to a common quantized tile count,
+empty / all-tombstone tiles are masked via the backends' ``point_ids ==
+-1`` convention -- are force-skipped through a ``+inf`` node bound and
+show up in the per-segment skip counters, so the counters account for
+every tile the launch covers.
 
 Exactness argument is unchanged from ``repro.core.search``: the entry
 cap is a valid upper bound on the global k-th distance (the delta scan's
-k-th, an engine cache cap, or the exchange's lambda0), and per-segment
-pruning against ``min(cap, running k-th)`` only ever discards candidates
-that cannot enter that segment's -- hence the merged -- top-k.
+k-th, an engine cache cap, or the exchange's lambda0); the probe pass's
+merged k-th is the distance of k real scanned points, hence also a valid
+upper bound (round 1 of the two-round exchange makes the identical
+argument); and per-segment pruning against ``min(cap, running k-th)``
+only ever discards candidates that cannot enter that segment's -- hence
+the merged -- top-k.
 """
 from __future__ import annotations
 
@@ -47,8 +58,10 @@ from repro.core import bounds
 from repro.kernels.p2h_scan import _cone_cases
 
 __all__ = ["StackedLeaves", "stacked_sweep", "stacked_sweep_search",
-           "prepare_stacked_operands", "concat_cached", "tile_density",
-           "STACKED_FANOUT_DEFAULT", "STACKED_DENSITY_DEFAULT"]
+           "stacked_sweep_query", "prepare_stacked_operands",
+           "concat_cached", "tile_density", "resolve_probe_tiles",
+           "STACKED_FANOUT_DEFAULT", "STACKED_DENSITY_DEFAULT",
+           "STACKED_PROBE_TILES_DEFAULT"]
 
 _LANE = 128
 _NEG_FILL = jnp.inf
@@ -65,17 +78,53 @@ STACKED_FANOUT_DEFAULT = 4
 #: off-TPU.  ``DispatchPolicy.stacked_min_density`` is the serving knob.
 STACKED_DENSITY_DEFAULT = 0.5
 
+#: default probe-pass width of the two-pass sweep: pass A sweeps this
+#: many preference-ordered tiles per (segment, query block) under the
+#: entry cap, their merged k-th tightens the cap every remaining tile is
+#: pruned against.  Small on purpose -- the probe's tiles would be
+#: scanned anyway (pass B is seeded with pass A's state, nothing is
+#: rescanned), so the only overhead is the second launch + the device
+#: merge, while the payoff is the cross-segment lambda the one-launch
+#: form gave up.  ``DispatchPolicy.probe_tiles`` is the serving-layer
+#: knob, refit against the registered bench configs (bench_serve /
+#: bench_stream_sharded report the crossover).
+STACKED_PROBE_TILES_DEFAULT = 4
+
+
+def _segment_live_tiles(seg) -> int:
+    """Tiles of ``seg`` holding >= 1 live point, judged on the *current*
+    ids plane (memoized per segment object -- segments are immutable;
+    tombstone rewrites produce a new object with a new plane)."""
+    n = getattr(seg, "_live_tiles", None)
+    if n is None:
+        t = seg.tree
+        pid = np.asarray(t.point_ids).reshape(t.num_leaves, t.n0)
+        n = int((pid >= 0).any(axis=1).sum())
+        try:
+            object.__setattr__(seg, "_live_tiles", n)
+        except AttributeError:
+            pass  # slotted stand-ins: recompute per call
+    return n
+
 
 def tile_density(segments) -> float:
-    """Raggedness signal: real-tile fraction of the rectangular grid
-    ``segments`` stack into, judged on the *unquantized* max tile count
-    (1.0 = perfectly even segments; the additional ``_TILE_QUANTUM``
-    rounding waste is bounded per segment and shrinks with grid size,
-    so it is not held against the decision)."""
+    """Raggedness/liveness signal: **live**-tile fraction of the
+    rectangular grid ``segments`` stack into, judged on the *unquantized*
+    max tile count (1.0 = perfectly even, fully live segments; the
+    additional ``_TILE_QUANTUM`` rounding waste is bounded per segment
+    and shrinks with grid size, so it is not held against the decision).
+
+    Live tiles are counted from the segments' *current* ids planes, not
+    their build-time geometry: tombstone republishes keep the stacked
+    grid's geometry but dead tiles are force-skipped exactly like pad
+    tiles, so a stack whose rows have been deleted out from under it is
+    as ragged as one that was built ragged -- the dispatch signal must
+    see that (stale-geometry density was the bug this fixes)."""
     counts = [s.tree.num_leaves for s in segments]
     if not counts:
         return 1.0
-    return sum(counts) / (len(counts) * max(counts))
+    live = sum(_segment_live_tiles(s) for s in segments)
+    return live / (len(counts) * max(counts))
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -89,6 +138,12 @@ def _ceil_to(x: int, m: int) -> int:
 #: which the branch-free jnp path cannot elide, only mask -- stay a small
 #: fraction of the launch.
 _TILE_QUANTUM = 8
+
+
+#: ``StackedLeaves._derived`` keys that depend only on tile *geometry*
+#: (safe to share through ids-plane-only rewrites); everything else is
+#: dropped by :meth:`StackedLeaves.with_updated_ids`.
+_GEOMETRY_DERIVED = frozenset({"pts_lane"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +176,17 @@ class StackedLeaves:
     uids: tuple  # segment uids, in stack order (cache identity)
     n0: int
     d: int
+    #: query-independent probe/sweep operands derived from the geometry
+    #: (today: the lane-padded points plane the kernel path consumes),
+    #: memoized per stack.  Tombstone republishes share it through
+    #: :meth:`with_updated_ids` (``dataclasses.replace`` keeps the same
+    #: dict -- geometry is unchanged, only ids planes move), so the pad
+    #: copy is paid once per compaction, not once per query; the
+    #: per-query probe/main visit orders are sliced from one shared
+    #: preference argsort computed inside the launch.  Excluded from
+    #: identity: a cache, not part of the stack's value.
+    _derived: dict = dataclasses.field(default_factory=dict,
+                                       compare=False, repr=False)
 
     @property
     def num_segments(self) -> int:
@@ -129,6 +195,23 @@ class StackedLeaves:
     @property
     def num_tiles(self) -> int:
         return self.pts.shape[1]
+
+    def padded_pts(self) -> jnp.ndarray:
+        """The points plane zero-padded to a lane multiple (the Pallas
+        kernel's tiling requirement), cached in :attr:`_derived` --
+        inner products are unchanged, and the jnp reference path keeps
+        :attr:`pts` at true ``d`` (lane zeros are free on the MXU but
+        quadruple CPU matmul work)."""
+        dp = _ceil_to(self.d, _LANE)
+        if dp == self.pts.shape[-1]:
+            return self.pts
+        hit = self._derived.get("pts_lane")
+        if hit is None:
+            hit = jnp.pad(
+                self.pts,
+                ((0, 0), (0, 0), (0, 0), (0, dp - self.pts.shape[-1])))
+            self._derived["pts_lane"] = hit
+        return hit
 
     # ------------------------------------------------------------------
     @classmethod
@@ -177,7 +260,9 @@ class StackedLeaves:
     def with_updated_ids(self, changed: dict) -> "StackedLeaves":
         """New stack with the ids/valid planes of ``changed`` segments
         (``{stack index: segment}``) rewritten -- the tombstone-only
-        republish path: geometry arrays are shared, not copied."""
+        republish path: geometry arrays are shared, not copied, and so
+        are the geometry-keyed ``_derived`` entries (ids-derived ones
+        are dropped: the planes just moved)."""
         ids = self.ids
         uids = list(self.uids)
         for s, seg in changed.items():
@@ -186,9 +271,11 @@ class StackedLeaves:
                 jnp.asarray(_global_ids(seg.tree, seg.gids)))
             ids = ids.at[s].set(plane)
             uids[s] = seg.uid
+        keep = {key: v for key, v in self._derived.items()
+                if key in _GEOMETRY_DERIVED}
         return dataclasses.replace(self, ids=ids,
                                    valid=(ids >= 0).any(axis=2),
-                                   uids=tuple(uids))
+                                   uids=tuple(uids), _derived=keep)
 
     @staticmethod
     def concat(stacks) -> "StackedLeaves":
@@ -310,8 +397,11 @@ def prepare_stacked_operands(stk: StackedLeaves, queries, *, frac=1.0,
     n_visit = max(1, min(L, int(round(frac * L))))
     visit = visit[:, :, :n_visit]
 
-    pts = (stk.pts if dp == d else
-           jnp.pad(stk.pts, ((0, 0), (0, 0), (0, 0), (0, dp - d))))
+    # the stack may hand us an already-lane-padded points plane (the
+    # per-stack ``padded_pts`` cache) -- pad only what still needs it
+    pts = (stk.pts if stk.pts.shape[-1] == dp else
+           jnp.pad(stk.pts,
+                   ((0, 0), (0, 0), (0, 0), (0, dp - stk.pts.shape[-1]))))
     ops = dict(
         pts_tiles=pts,
         ids_tiles=stk.ids,
@@ -342,6 +432,10 @@ def stacked_sweep_kernel(
     qn_ref,     # (bq, 1)  f32 -- ||q||
     cap_ref,    # (bq, 1)  f32 -- the single entry cap (delta k-th /
     #                             cache cap / exchange lambda0)
+    gs_ref,     # (bq, k)  f32 -- global top-k *value* seed (pass B gets
+    #                             pass A's merged planes; +inf cold)
+    sd_ref,     # (1, bq, k) f32 -- seed top-k (pass A's state; +inf cold)
+    si_ref,     # (1, bq, k) i32
     ip_ref,     # (1, bq, 1) f32 -- <q, leaf.c> for this tile
     lb_ref,     # (1, bq, 1) f32 -- node-level ball bound (+inf = pad tile)
     cn_ref,     # (1, 1, 1)  f32 -- ||leaf.c||
@@ -357,6 +451,8 @@ def stacked_sweep_kernel(
     # scratch
     topd,       # VMEM (bq, k) f32 -- running per-segment top-k
     topi,       # VMEM (bq, k) i32
+    glob,       # VMEM (nqb, bq, k) f32 -- per-block *global* top-k
+    #             values, threaded across the (sequential) segment axis
     nskip,      # SMEM (1,) i32
     *,
     k: int,
@@ -367,21 +463,40 @@ def stacked_sweep_kernel(
 
     Same tile math as :func:`repro.kernels.p2h_scan.p2h_sweep_kernel`;
     the extra leading (sequential) grid dimension is the segment, and the
-    running top-k scratch re-initializes at each segment's first tile --
-    per-segment top-k under the shared entry cap, never a cap threaded
-    across segments.
+    running top-k scratch re-initializes at each segment's first tile
+    from the *seed* planes -- +inf/-1 on a cold start, pass A's
+    per-segment state on the two-pass main sweep (so probed tiles are
+    never rescanned).
+
+    The launch also carries an **in-launch global top-k**: per query
+    block, the ``glob`` scratch accumulates the k smallest verified
+    distances over every segment processed so far (folded in at each
+    segment's last tile; the TPU grid is sequential, so segment ``s``
+    sees segments ``< s``'s merged state -- the device-side form of the
+    sequential path's cap threading).  The per-tile threshold is
+    ``min(entry cap, global running k-th, segment running k-th)``, and
+    pass B additionally seeds ``glob`` with pass A's merged probe planes
+    -- caps at least as tight as the host-threaded walk's, one launch.
     """
     del visit_ref  # consumed by the index maps
+    s = pl.program_id(0)
+    i = pl.program_id(1)
     j = pl.program_id(2)
     n_tiles = pl.num_programs(2)
 
+    @pl.when((s == 0) & (j == 0))
+    def _init_global():  # once per query block: seed the global state
+        glob[pl.ds(i, 1)] = gs_ref[...][None]
+
     @pl.when(j == 0)
-    def _init():  # fresh segment (or query block): reset the running top-k
-        topd[...] = jnp.full(topd.shape, _NEG_FILL, topd.dtype)
-        topi[...] = jnp.full(topi.shape, -1, topi.dtype)
+    def _init():  # fresh segment (or query block): resume from the seed
+        topd[...] = sd_ref[0]
+        topi[...] = si_ref[0]
         nskip[0] = 0
 
-    lam = jnp.minimum(jnp.max(topd[...], axis=1), cap_ref[..., 0])  # (bq,)
+    gmax = jnp.max(glob[pl.ds(i, 1)][0], axis=1)  # (bq,) global k-th
+    lam = jnp.minimum(jnp.minimum(jnp.max(topd[...], axis=1), gmax),
+                      cap_ref[..., 0])  # (bq,)
     active = lb_ref[0, :, 0] < lam  # Theorem 2 prune (pad tiles: lb=+inf)
 
     @pl.when(jnp.logical_not(jnp.any(active)))
@@ -444,6 +559,27 @@ def stacked_sweep_kernel(
         out_d_ref[0] = topd[...]
         out_i_ref[0] = topi[...]
         out_s_ref[0, 0, 0] = nskip[0]
+        # fold this segment's top-k values into the per-block global
+        # running state (k-smallest of the 2k values; same insertion
+        # pattern as the tile scan, values only -- ids stay per-segment)
+        g0 = glob[pl.ds(i, 1)][0]
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, g0.shape, 1)
+
+        def fold(_, carry):
+            g, cd = carry
+            m = jnp.min(cd, axis=1)
+            am = jnp.argmin(cd, axis=1).astype(jnp.int32)
+            wv = jnp.max(g, axis=1)
+            wa = jnp.argmax(g, axis=1).astype(jnp.int32)
+            better = m < wv
+            oh_w = iota_k == wa[:, None]
+            oh_c = iota_k == am[:, None]
+            g = jnp.where(oh_w & better[:, None], m[:, None], g)
+            cd = jnp.where(oh_c & better[:, None], _NEG_FILL, cd)
+            return g, cd
+
+        g, _ = jax.lax.fori_loop(0, k, fold, (g0, topd[...]))
+        glob[pl.ds(i, 1)] = g[None]
 
 
 def stacked_sweep(
@@ -465,6 +601,9 @@ def stacked_sweep(
     use_ball: bool = True,
     use_cone: bool = True,
     interpret: bool | None = None,
+    seed_d=None,  # (N, B, k) f32 -- pass A's per-segment state (None=cold)
+    seed_i=None,  # (N, B, k) i32
+    global_seed=None,  # (B, k) f32 -- in-launch global top-k value seed
 ):
     """pallas_call wrapper: grid ``(N segments, query blocks, tiles)``.
 
@@ -472,6 +611,10 @@ def stacked_sweep(
     skips (N, B//bq, 1))``; ``skips`` counts block-granular tile skips
     per segment, **including** the force-skipped pad tiles of ragged /
     empty / all-tombstone segments (they are part of the launch).
+    ``seed_d``/``seed_i`` seed each segment's running top-k (the probe
+    handoff of the two-pass sweep); ``global_seed`` seeds the in-launch
+    global top-k values every segment's threshold folds in (pass B gets
+    pass A's merged planes); ``None`` starts cold.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -480,6 +623,11 @@ def stacked_sweep(
     _, nqb, n_visit = visit.shape
     assert B == nqb * bq, (B, nqb, bq)
     assert visit.shape[0] == N, (visit.shape, N)
+    if seed_d is None:
+        seed_d = jnp.full((N, B, k), _NEG_FILL, jnp.float32)
+        seed_i = jnp.full((N, B, k), -1, jnp.int32)
+    if global_seed is None:
+        global_seed = jnp.full((B, k), _NEG_FILL, jnp.float32)
 
     grid = (N, nqb, n_visit)
 
@@ -512,6 +660,9 @@ def stacked_sweep(
                 pl.BlockSpec((bq, dp), qmap),       # queries
                 pl.BlockSpec((bq, 1), qmap),        # qnorm
                 pl.BlockSpec((bq, 1), qmap),        # cap
+                pl.BlockSpec((bq, k), qmap),        # global value seed
+                pl.BlockSpec((1, bq, k), omap),     # seed top-k dists
+                pl.BlockSpec((1, bq, k), omap),     # seed top-k ids
                 pl.BlockSpec((1, bq, 1), ipmap),    # leaf_ip
                 pl.BlockSpec((1, bq, 1), ipmap),    # leaf_lb
                 pl.BlockSpec((1, 1, 1), tmap),      # leaf_cnorm
@@ -529,6 +680,7 @@ def stacked_sweep(
             scratch_shapes=[
                 pltpu.VMEM((bq, k), jnp.float32),
                 pltpu.VMEM((bq, k), jnp.int32),
+                pltpu.VMEM((nqb, bq, k), jnp.float32),  # global top-k
                 pltpu.SMEM((1,), jnp.int32),
             ],
         ),
@@ -538,8 +690,9 @@ def stacked_sweep(
             jax.ShapeDtypeStruct((N, nqb, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(visit, queries, qnorm, cap, leaf_ip, leaf_lb, leaf_cnorm,
-      pts_tiles, ids_tiles, rx_tiles, xc_tiles, xs_tiles)
+    )(visit, queries, qnorm, cap, global_seed, seed_d, seed_i, leaf_ip,
+      leaf_lb, leaf_cnorm, pts_tiles, ids_tiles, rx_tiles, xc_tiles,
+      xs_tiles)
     return out_d, out_i, out_s
 
 
@@ -551,10 +704,35 @@ def stacked_sweep(
 @functools.partial(
     jax.jit,
     static_argnames=("n0", "d", "k", "frac", "bq", "use_ball", "use_cone",
-                     "use_kernel", "interpret"),
+                     "use_kernel", "interpret", "probe_tiles",
+                     "shard_bounds", "has_extra", "sort_planes"),
 )
-def _run_stacked(arrays, queries, lambda_cap, *, n0, d, k, frac, bq,
-                 use_ball, use_cone, use_kernel, interpret):
+def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, *, n0, d,
+                 k, frac, bq, use_ball, use_cone, use_kernel, interpret,
+                 probe_tiles, shard_bounds, has_extra, sort_planes):
+    """One device program end to end: probe pass + main pass + in-launch
+    global merge.
+
+    Pass A sweeps the first ``probe_tiles`` preference-ordered tiles of
+    every segment (under the entry cap + the in-launch global top-k the
+    launch threads across its sequential segment axis); the per-segment
+    probe planes are reduced on device by
+    :func:`repro.core.search.merge_topk_planes` into one merged value
+    set -- valid pruning state because every entry is the distance of a
+    real scanned point, so its k-th upper-bounds the global k-th (the
+    round-1 argument of the two-round exchange).  Pass B sweeps the
+    *remaining* tiles with that merged state as its global-top-k seed
+    (``lambda_probe`` = the seed's k-th, tightening further as segments
+    fold in) and pass A's per-segment top-k as its scratch seed, so
+    probed tiles are never rescanned and the union of both passes covers
+    each visit list exactly once.  The cross-source finish --
+    :func:`repro.core.search.merge_topk_planes` over the ``(N, B, k)``
+    planes plus any ``extra`` candidate list (the delta scan's top-k) --
+    and the per-shard k-th reductions (``shard_bounds``: segments per
+    shard, the exchange's cache diagnostics) run inside the same jitted
+    program: callers get the final global top-k with no host merge.
+    """
+    from repro.core import search
     from repro.kernels import ref
 
     stk = StackedLeaves(**arrays, uids=(), n0=n0, d=d)
@@ -563,16 +741,76 @@ def _run_stacked(arrays, queries, lambda_cap, *, n0, d, k, frac, bq,
         lane_pad=use_kernel)
     fn = (functools.partial(stacked_sweep, interpret=interpret)
           if use_kernel else ref.stacked_sweep_ref)
-    bd, bi, skips = fn(**ops, k=k, bq=bq, use_ball=use_ball,
-                       use_cone=use_cone)
-    order = jnp.argsort(bd, axis=2)  # per-segment top-k is unsorted
-    bd = jnp.take_along_axis(bd, order, axis=2)[:, :B0]
-    bi = jnp.take_along_axis(bi, order, axis=2)[:, :B0]
+    run = functools.partial(fn, k=k, bq=bq, use_ball=use_ball,
+                            use_cone=use_cone)
+    visit = ops["visit"]
+    N, nqb, n_visit = visit.shape
+    p = max(0, min(probe_tiles, n_visit))
+    if has_extra:
+        Bp = ops["cap"].shape[0]
+        extra_d = jnp.pad(jnp.asarray(extra_d, jnp.float32),
+                          ((0, Bp - B0), (0, 0)),
+                          constant_values=jnp.inf)
+        extra_i = jnp.pad(jnp.asarray(extra_i, jnp.int32),
+                          ((0, Bp - B0), (0, 0)), constant_values=-1)
+        # the extra candidates (the delta scan's merged top-k: real,
+        # deduplicated points disjoint from every segment) seed the
+        # in-launch global top-k, so per-segment thresholds track the
+        # *union* k-th over delta + completed segments -- exactly the
+        # sequential walk's merged running cap, not just min-of-parts
+        gseed = (extra_d if extra_d.shape[1] == k
+                 else -jax.lax.top_k(-extra_d, k)[0])
+    else:
+        extra_d = extra_i = gseed = None
+    if 0 < p < n_visit:
+        # pass A: probe the top-p preference tiles of every segment
+        da, ia, skips_a = run(**dict(ops, visit=visit[:, :, :p]),
+                              global_seed=gseed)
+        pd, _ = search.merge_topk_planes(da, ia, k)
+        cap_b = jnp.minimum(ops["cap"], pd[:, k - 1:k])  # lambda_probe
+        # pass B: remaining tiles under lambda_probe, per-segment
+        # scratch seeded by pass A.  The global top-k re-threads from
+        # the extra seed only (NOT the merged probe planes: each
+        # segment's pass A values are already inside its seeded scratch,
+        # and the value-only global fold has no id dedup, so seeding
+        # them would double-count probe candidates and break the cap's
+        # validity) -- lambda_probe carries the cross-segment probe
+        # bound instead, and the global state tightens past it as
+        # completed segments fold in.
+        bd, bi, skips_b = run(**dict(ops, visit=visit[:, :, p:],
+                                     cap=cap_b),
+                              seed_d=da, seed_i=ia, global_seed=gseed)
+        skips = skips_a + skips_b
+        probe_skips = jnp.sum(skips_a)
+    else:  # p == 0 (single pass) or p == n_visit (probe IS the sweep)
+        bd, bi, skips = run(**ops, global_seed=gseed)
+        probe_skips = (jnp.sum(skips) if p else jnp.int32(0))
+    # in-launch global merge: per-segment planes (+ the caller's extra
+    # candidates, e.g. the delta scan) -> one (B, k) answer, no host merge
+    fd, fi = search.merge_topk_planes(bd, bi, k, extra_d=extra_d,
+                                      extra_i=extra_i)
+    fd, fi = fd[:B0], fi[:B0]
+    shard_kth = None
+    if shard_bounds:
+        rows, off = [], 0
+        for ns in shard_bounds:  # static per-shard segment counts
+            skd, _ = search.merge_topk_planes(bd[off:off + ns],
+                                              bi[off:off + ns], k)
+            rows.append(skd[:B0, k - 1])
+            off += ns
+        shard_kth = jnp.stack(rows)  # (S, B)
+    if sort_planes:  # the planes API sorts; the fused query path's
+        #              merge consumes them unsorted -- skip the work
+        order = jnp.argsort(bd, axis=2)  # per-segment top-k is unsorted
+        bd = jnp.take_along_axis(bd, order, axis=2)[:, :B0]
+        bi = jnp.take_along_axis(bi, order, axis=2)[:, :B0]
+    else:
+        bd, bi = bd[:, :B0], bi[:, :B0]
     # counters follow repro.core.search conventions where derivable;
     # tile visits/skips are block-granular (the pl.when elision unit) and
-    # include the force-skipped pad tiles of the common grid.
-    N, nqb, _ = skips.shape
-    n_visit = ops["visit"].shape[-1]
+    # include the force-skipped pad tiles of the common grid.  The two
+    # passes cover each (segment, block) visit list exactly once, so the
+    # totals are pass-count independent.
     seg_skips = jnp.sum(skips, axis=(1, 2)).astype(jnp.int32)  # (N,)
     total_skip = jnp.sum(seg_skips)
     counters = (jnp.zeros((8,), jnp.int32)
@@ -580,33 +818,131 @@ def _run_stacked(arrays, queries, lambda_cap, *, n0, d, k, frac, bq,
                            * jnp.sum(stk.n_leaves).astype(jnp.int32))
                 .at[2].set(jnp.int32(N * nqb * n_visit) - total_skip)
                 .at[7].set(total_skip))
-    return bd, bi, counters, seg_skips
+    return bd, bi, fd, fi, counters, seg_skips, shard_kth, probe_skips
+
+
+def _n_visit(stk: StackedLeaves, frac: float) -> int:
+    """The visit-list length ``prepare_stacked_operands`` will produce."""
+    L = stk.num_tiles
+    return max(1, min(L, int(round(frac * L))))
+
+
+def resolve_probe_tiles(probe_tiles, n_visit: int) -> int:
+    """Clamp the probe knob to ``[0, n_visit]`` (``None`` -> the library
+    default ``STACKED_PROBE_TILES_DEFAULT``)."""
+    if probe_tiles is None:
+        probe_tiles = STACKED_PROBE_TILES_DEFAULT
+    return max(0, min(int(probe_tiles), n_visit))
+
+
+def _call_run_stacked(stk: StackedLeaves, queries, k, *, frac, bq,
+                      use_ball, use_cone, lambda_cap, probe_tiles,
+                      extra_d=None, extra_i=None, shard_bounds=None,
+                      use_kernel=None, interpret=None, sort_planes=True):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    p = resolve_probe_tiles(probe_tiles, _n_visit(stk, frac))
+    arrays = dict(pts=stk.padded_pts() if use_kernel else stk.pts,
+                  ids=stk.ids, rx=stk.rx, xc=stk.xc,
+                  xs=stk.xs, leaf_centers=stk.leaf_centers,
+                  leaf_radii=stk.leaf_radii, leaf_cnorm=stk.leaf_cnorm,
+                  valid=stk.valid, n_leaves=stk.n_leaves)
+    has_extra = extra_d is not None
+    out = _run_stacked(arrays, jnp.atleast_2d(queries), lambda_cap,
+                       extra_d if has_extra else None,
+                       extra_i if has_extra else None,
+                       n0=stk.n0, d=stk.d, k=k, frac=frac, bq=bq,
+                       use_ball=use_ball, use_cone=use_cone,
+                       use_kernel=bool(use_kernel),
+                       interpret=bool(interpret), probe_tiles=p,
+                       shard_bounds=(tuple(shard_bounds)
+                                     if shard_bounds else ()),
+                       has_extra=has_extra, sort_planes=sort_planes)
+    return out, p
 
 
 def stacked_sweep_search(stk: StackedLeaves, queries, k: int = 1, *,
                          frac: float = 1.0, bq: int = 8,
                          use_ball: bool = True, use_cone: bool = True,
-                         lambda_cap=None, use_kernel: bool | None = None,
+                         lambda_cap=None, probe_tiles: int = 0,
+                         use_kernel: bool | None = None,
                          interpret: bool | None = None):
-    """Sweep all of ``stk``'s segments in one launch under one entry cap.
+    """Sweep all of ``stk``'s segments in one launch; per-segment planes.
 
     Returns ``(dists (N, B, k) ascending, global ids (N, B, k),
-    counters (8,), per-segment skip counts (N,))``.  ``use_kernel=None``
-    resolves to the Pallas kernel on TPU and the vmapped jnp reference
-    elsewhere (interpret mode is a parity tool, not a serving backend) --
-    the same rule ``DispatchPolicy.prefer_pallas`` applies to the
-    sequential backends.
+    counters (8,), per-segment skip counts (N,))``.  ``probe_tiles > 0``
+    runs the two-pass form (probe-tightened cap, see
+    :func:`_run_stacked`); the default 0 is the single-pass sweep under
+    the entry cap alone.  ``use_kernel=None`` resolves to the Pallas
+    kernel on TPU and the vmapped jnp reference elsewhere (interpret
+    mode is a parity tool, not a serving backend) -- the same rule
+    ``DispatchPolicy.prefer_pallas`` applies to the sequential backends.
+    The serving entry point (in-launch global merge, no host merge) is
+    :func:`stacked_sweep_query`.
     """
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    arrays = dict(pts=stk.pts, ids=stk.ids, rx=stk.rx, xc=stk.xc,
-                  xs=stk.xs, leaf_centers=stk.leaf_centers,
-                  leaf_radii=stk.leaf_radii, leaf_cnorm=stk.leaf_cnorm,
-                  valid=stk.valid, n_leaves=stk.n_leaves)
-    return _run_stacked(arrays, jnp.atleast_2d(queries), lambda_cap,
-                        n0=stk.n0, d=stk.d, k=k, frac=frac, bq=bq,
-                        use_ball=use_ball, use_cone=use_cone,
-                        use_kernel=bool(use_kernel),
-                        interpret=bool(interpret))
+    out, _ = _call_run_stacked(stk, queries, k, frac=frac, bq=bq,
+                               use_ball=use_ball, use_cone=use_cone,
+                               lambda_cap=lambda_cap,
+                               probe_tiles=probe_tiles,
+                               use_kernel=use_kernel, interpret=interpret)
+    bd, bi, _, _, counters, seg_skips, _, _ = out
+    return bd, bi, counters, seg_skips
+
+
+def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
+                        frac: float = 1.0, bq: int = 8,
+                        use_ball: bool = True, use_cone: bool = True,
+                        lambda_cap=None, probe_tiles: int | None = None,
+                        extra_d=None, extra_i=None, shard_bounds=None,
+                        use_kernel: bool | None = None,
+                        interpret: bool | None = None):
+    """Serving entry point: probe + main + merge in ONE device program.
+
+    Returns ``(dists (B, k), global ids (B, k), counters (8,), info)``
+    -- the *merged* global top-k over every segment plus the optional
+    ``extra_d``/``extra_i`` ``(B, M)`` candidate list (the delta scan's
+    top-k), with no host-side per-segment merge.  ``extra`` must hold
+    real, de-duplicated candidates *disjoint from every segment* (the
+    delta/segment split guarantees this): they also seed the in-launch
+    global top-k, so duplicates would break the threshold's validity.  ``probe_tiles=None``
+    resolves to :data:`STACKED_PROBE_TILES_DEFAULT`; 0 degenerates to
+    the single-pass sweep, >= the visit-list length makes the probe pass
+    the full sweep.  ``shard_bounds`` (optional, segments per shard in
+    stack order) additionally reduces per-shard merged k-ths on device
+    (``info["shard_kth"]``, the exchange's lambda-cache diagnostic).
+
+    ``info`` carries ``seg_skips`` (N,), ``forced_skips`` (N,) --
+    the pad/dead tiles each segment's visit list force-skips, so
+    ``seg_skips - forced_skips`` is the *live*-tile skip count --
+    ``shard_kth`` ((S, B) or None) and ``probe`` (resolved tile count /
+    scanned / skipped: the probe-pass overhead surfaced in
+    ``BENCH_serve.json``).
+    """
+    out, p = _call_run_stacked(stk, queries, k, frac=frac, bq=bq,
+                               use_ball=use_ball, use_cone=use_cone,
+                               lambda_cap=lambda_cap,
+                               probe_tiles=probe_tiles,
+                               extra_d=extra_d, extra_i=extra_i,
+                               shard_bounds=shard_bounds,
+                               use_kernel=use_kernel, interpret=interpret,
+                               sort_planes=False)
+    _, _, fd, fi, counters, seg_skips, shard_kth, probe_skips = out
+    B = int(np.atleast_2d(np.asarray(queries)).shape[0])
+    nqb = -(-B // bq)
+    n_visit = _n_visit(stk, frac)
+    live = stk._derived.get("live_tiles")  # (N,) -- ids-derived, so the
+    if live is None:  # cache is dropped by ids-plane rewrites
+        live = np.asarray(stk.valid).sum(axis=1).astype(np.int64)
+        stk._derived["live_tiles"] = live
+    forced = nqb * np.maximum(0, n_visit - live)  # invalid tiles visited
+    probe_scanned = int(stk.num_segments * nqb * p) - int(probe_skips)
+    info = {
+        "seg_skips": seg_skips,
+        "forced_skips": forced,
+        "shard_kth": shard_kth,
+        "probe": {"tiles": p, "scanned": probe_scanned,
+                  "skipped": int(probe_skips)},
+    }
+    return fd, fi, counters, info

@@ -23,10 +23,11 @@ Dispatch policy (dispatch.py)
       * ``recall_target < 1``   -> ``beam`` (candidate-fraction knob,
         fraction chosen from the recall table);
       * high segment fan-out    -> ``stacked`` (all of a mutable
-        snapshot's sealed segments swept by one device-side launch under
-        a single entry cap, ``repro.kernels.stacked_sweep``; the
-        crossover folds fan-out, delta/tombstone density and grid
-        raggedness);
+        snapshot's sealed segments served by the two-pass device program
+        -- probe-tightened caps, in-launch global top-k and merge,
+        ``repro.kernels.stacked_sweep``; ``probe_tiles`` is the policy's
+        probe-width knob and the crossover folds fan-out,
+        delta/tombstone density and current-ids grid raggedness);
       * tiny occupancy          -> ``dfs`` (paper-faithful branch-and-
         bound; best single-query latency);
       * batched exact           -> ``pallas`` (fused tile-skipping sweep

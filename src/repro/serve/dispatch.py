@@ -12,13 +12,17 @@ one :class:`Route` per micro-batch.
 For mutable snapshots the serving view is a *stack* of sealed segments
 plus a delta, and a second crossover appears: below it each segment is
 one backend call (sequential, tightest caps), above it the ``stacked``
-route sweeps every segment in one device-side launch under a single
-entry cap (``repro.kernels.stacked_sweep``).  The crossover folds in the
-snapshot's composition, not just its fan-out: tombstone-heavy segments
-lower the bar (sequential launches mostly re-scan dead rows the stack
-skips wholesale), delta-heavy snapshots raise it (most of the answer
-comes from the delta scan either way, so batching the segment remnant
-buys little).
+route sweeps every segment in one two-pass device program -- a probe
+pass tightens the entry cap on device before the main sweep, and the
+cross-segment merge runs in the same launch
+(``repro.kernels.stacked_sweep``; ``probe_tiles`` is the probe-width
+knob).  The crossover folds in the snapshot's composition, not just its
+fan-out: tombstone-heavy segments lower the bar (sequential launches
+mostly re-scan dead rows the stack skips wholesale), delta-heavy
+snapshots raise it (most of the answer comes from the delta scan either
+way, so batching the segment remnant buys little), and the density
+signal reads the segments' *current* ids planes, so tombstoned rows
+degrade it exactly like build-time raggedness.
 """
 from __future__ import annotations
 
@@ -34,6 +38,9 @@ class Route:
     method: str  # "dfs" | "sweep" | "beam" | "pallas" | "sharded" | "stacked"
     frac: float = 1.0
     reason: str = ""
+    #: probe-pass width for the two-pass stacked program (None = library
+    #: default); only meaningful on the "stacked" route
+    probe_tiles: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +81,14 @@ class DispatchPolicy:
     # heavily ragged stacks (live-tile fraction of the common grid below
     # this) stay sequential: pad tiles are masked, not elided, off-TPU
     stacked_min_density: float = 0.5
+    # probe-pass width of the two-pass stacked program: pass A sweeps
+    # this many preference-ordered tiles per (segment, query block), the
+    # merged probe k-th tightens the cap pass B prunes against.  None =
+    # the library default (STACKED_PROBE_TILES_DEFAULT); 0 = single-pass
+    # (the pre-probe behavior).  The crossover is refit against the
+    # registered bench configs -- bench_serve / bench_stream_sharded
+    # sweep the knob and report p50 + live-tile skips per setting.
+    probe_tiles: int | None = None
 
     def frac_for_recall(self, recall_target: float) -> float:
         for floor, frac in self.frac_table:
@@ -121,7 +136,7 @@ class DispatchPolicy:
             return Route("sharded", reason="index is sharded")
         thr = self.stacked_fanout_threshold(delta_frac, tombstone_frac)
         if stackable >= thr and tile_density >= self.stacked_min_density:
-            return Route("stacked",
+            return Route("stacked", probe_tiles=self.probe_tiles,
                          reason=f"fanout={stackable}>={thr} "
                                 f"(delta={delta_frac:.2f}, "
                                 f"dead={tombstone_frac:.2f})")

@@ -203,7 +203,8 @@ class P2HEngine:
         # stacked decision on the engine path: pass it down explicitly so
         # snapshot/exchange auto-promotion never overrides a route the
         # crossover knobs resolved to sequential, and route stats stay
-        # truthful about which schedule actually ran
+        # truthful about which schedule actually ran.  The policy's
+        # probe_tiles knob rides along for the two-pass program.
         use_stacked = route.method == "stacked"
         if snap is not None and self._sharded_mutable:
             # epoch-vector pin: the two-round exchange also reports each
@@ -211,13 +212,14 @@ class P2HEngine:
             bd, bi, cnt, info = snap.query(
                 mb.queries, mb.k, method=route.method, frac=route.frac,
                 lambda_cap=caps, return_counters=True, return_info=True,
-                stacked=use_stacked)
+                stacked=use_stacked, probe_tiles=route.probe_tiles)
             shard_kth = info["shard_kth"]  # (S, B)
         elif snap is not None:
             bd, bi, cnt = snap.query(mb.queries, mb.k, method=route.method,
                                      frac=route.frac, lambda_cap=caps,
                                      return_counters=True,
-                                     stacked=use_stacked)
+                                     stacked=use_stacked,
+                                     probe_tiles=route.probe_tiles)
         else:
             bd, bi, cnt = self._run_backend(route, mb.queries, mb.k, caps)
         bd, bi = np.asarray(bd), np.asarray(bi)

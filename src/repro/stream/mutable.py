@@ -268,7 +268,9 @@ class MutableP2HIndex:
         :class:`repro.serve.P2HEngine` constructed over this index
         (micro-batching + epoch-tagged lambda warm start), where
         ``method=None`` means auto-dispatch and an explicit method forces
-        that route.
+        that route.  ``stacked=`` / ``probe_tiles=`` (forwarded to
+        :meth:`Snapshot.query`) control the segment-parallel two-pass
+        device program and its probe-pass width.
         """
         if engine is not None:
             return query_via_engine(self, engine, queries, k,
@@ -496,8 +498,10 @@ class MutableP2HIndex:
         """Atomic snapshot swap (caller holds the lock).  The new
         snapshot adopts the previous one's stacked-leaf cache when the
         segment set allows it (delta-only publishes reuse it as-is,
-        tombstone publishes swap just the changed ids planes), so the
-        segment-parallel sweep pays its stacking cost once per
+        tombstone publishes swap just the changed ids planes -- the
+        stack's derived probe operands, e.g. the lane-padded points
+        plane, ride along because geometry is shared), so the
+        segment-parallel sweep pays its stacking + padding cost once per
         compaction, not once per publish."""
         self._epoch += 1
         prev = self._snapshot

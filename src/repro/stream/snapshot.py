@@ -27,14 +27,17 @@ module's machinery (``repro.core.search.merge_topk``).
 
 At segment fan-out >= ``STACKED_FANOUT_DEFAULT`` (or with
 ``method="stacked"`` / ``stacked=True``) the sequential segment walk is
-replaced by **one** device-side launch: the snapshot's sealed segments
+replaced by **one** device-side program: the snapshot's sealed segments
 are stacked into a cached :class:`repro.kernels.StackedLeaves` tile grid
 (built lazily, carried forward across publishes because segments are
 immutable -- tombstone republishes swap only the ids planes) and swept
-together under the single entry cap (delta k-th / engine cache cap),
-trading the sequentially-threaded per-segment cap for one matmul-shaped
-program.  Exactness is unchanged; only tile-skip counts differ (see
-``repro.kernels.stacked_sweep``).
+by the two-pass stacked program -- a probe pass tightens the entry cap
+(delta k-th / engine cache cap) to ``lambda_probe`` on device, the main
+pass sweeps the remaining tiles under it, and the launch merges the
+per-segment planes with the delta candidates itself, so the stacked
+route returns from a single device program with no host-side
+per-segment merge.  Exactness is unchanged; only tile-skip counts
+differ (see ``repro.kernels.stacked_sweep``).
 """
 from __future__ import annotations
 
@@ -216,7 +219,7 @@ class Snapshot:
     def query(self, queries, k: int = 1, *, method: str = "sweep",
               frac: float = 1.0, lambda_cap=None,
               return_counters: bool = False, include_deltas: bool = True,
-              stacked: bool | None = None):
+              stacked: bool | None = None, probe_tiles: int | None = None):
         """Exact (or beam-budgeted) top-k over the snapshot's live set.
 
         ``queries`` must already be normalized (B, d) float32.  Returned
@@ -230,44 +233,43 @@ class Snapshot:
         merge (a delta point displaced from round-1's top-k was displaced
         by k closer real points, so it cannot be in the global top-k).
 
-        ``stacked`` controls the segment-parallel sweep (one device-side
-        launch over all segments under a single entry cap instead of the
-        sequential cap-threading walk): ``None`` auto-promotes the exact
-        ``sweep``/``pallas`` methods at live-segment fan-out >=
-        ``repro.kernels.stacked_sweep.STACKED_FANOUT_DEFAULT``, ``True``
-        forces it, ``False`` forbids it.  ``method="stacked"`` is the
-        explicit dispatch-route spelling of ``stacked=True``.  Answers
-        are exact either way; only tile-skip counters differ.
+        ``stacked`` controls the segment-parallel sweep (one two-pass
+        device program over all segments -- probe-tightened cap, main
+        sweep, in-launch global merge of the per-segment planes *and*
+        the delta candidates; no host-side per-segment merge -- instead
+        of the sequential cap-threading walk): ``None`` auto-promotes
+        the exact ``sweep``/``pallas`` methods at live-segment fan-out
+        >= ``repro.kernels.stacked_sweep.STACKED_FANOUT_DEFAULT``,
+        ``True`` forces it, ``False`` forbids it.  ``method="stacked"``
+        is the explicit dispatch-route spelling of ``stacked=True``.
+        ``probe_tiles`` is the probe-pass width (None = library default;
+        0 = the single-pass entry-cap-only sweep).  Answers are exact on
+        every path; only tile-skip counters differ.
         """
         q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
         B = q.shape[0]
         counters = np.zeros((8,), np.int64)
 
-        bd = jnp.full((B, k), jnp.inf, jnp.float32)
-        bi = jnp.full((B, k), -1, jnp.int32)
-        for view in (self.deltas if include_deltas else ()):
-            dd, di = delta_topk(view.points, view.gids, q, k)
-            bd, bi = search.merge_topk(jnp.concatenate([bd, dd], axis=1),
-                                       jnp.concatenate([bi, di], axis=1), k)
-            counters[search.C_VERIFIED] += view.live * B
+        if include_deltas:
+            bd, bi, nver = self.delta_candidates(q, k)
+            counters[search.C_VERIFIED] += nver
+        else:
+            bd = jnp.full((B, k), jnp.inf, jnp.float32)
+            bi = jnp.full((B, k), -1, jnp.int32)
         exact = method != "beam"
         ext = (None if lambda_cap is None or not exact
                else jnp.asarray(lambda_cap, jnp.float32).reshape(-1))
         if self.segments and self._use_stacked(method, stacked):
-            # single entry cap for every segment: the delta scan's merged
-            # k-th, tightened by any externally-valid cap -- never the
-            # sequentially-threaded cross-segment running k-th
+            # entry cap for every segment: the delta scan's merged k-th,
+            # tightened by any externally-valid cap; the probe pass then
+            # tightens it further on device, and the launch merges the
+            # per-segment planes with the delta candidates itself
             cap = bd[:, k - 1]
             if ext is not None:
                 cap = jnp.minimum(cap, ext)
-            sd, sg, cnt = self._stacked_query(q, k, method=method, cap=cap)
-            N = sd.shape[0]
-            bd, bi = search.merge_topk(
-                jnp.concatenate(
-                    [bd, jnp.moveaxis(sd, 0, 1).reshape(B, N * k)], axis=1),
-                jnp.concatenate(
-                    [bi, jnp.moveaxis(sg, 0, 1).reshape(B, N * k)], axis=1),
-                k)
+            bd, bi, cnt = self._stacked_query(
+                q, k, method=method, cap=cap, probe_tiles=probe_tiles,
+                extra_d=bd, extra_i=bi)
             counters += np.asarray(cnt, np.int64)
         else:
             for seg in self.segments:
@@ -295,6 +297,26 @@ class Snapshot:
             return bd, bi, counters
         return bd, bi
 
+    def delta_candidates(self, q, k: int):
+        """The delta scan's merged top-k over every delta view -- the
+        exact entry state the stacked route caps and merges against.
+        Returns ``(dists (B, k), global ids (B, k), rows verified)``.
+        One definition shared by :meth:`query`, the benches' skip
+        profiles and the live-skip regression fence, so every consumer
+        measures the same entry state."""
+        q = jnp.asarray(q, jnp.float32)
+        B = q.shape[0]
+        bd = jnp.full((B, k), jnp.inf, jnp.float32)
+        bi = jnp.full((B, k), -1, jnp.int32)
+        verified = 0
+        for view in self.deltas:
+            dd, di = delta_topk(view.points, view.gids, q, k)
+            bd, bi = search.merge_topk(jnp.concatenate([bd, dd], axis=1),
+                                       jnp.concatenate([bi, di], axis=1),
+                                       k)
+            verified += view.live * B
+        return bd, bi, verified
+
     def _use_stacked(self, method: str, stacked: bool | None) -> bool:
         """Resolve the segment-parallel dispatch decision."""
         if method == "stacked":
@@ -313,19 +335,22 @@ class Snapshot:
         return (n_live >= STACKED_FANOUT_DEFAULT
                 and tile_density(self.segments) >= STACKED_DENSITY_DEFAULT)
 
-    def _stacked_query(self, q, k: int, *, method: str, cap):
-        """One stacked launch over all segments; returns per-segment
-        ``(dists (N, B, k), global ids, counters)``."""
-        from repro.kernels.stacked_sweep import stacked_sweep_search
+    def _stacked_query(self, q, k: int, *, method: str, cap,
+                       probe_tiles=None, extra_d=None, extra_i=None):
+        """One two-pass stacked launch over all segments (probe + main +
+        in-launch merge with the ``extra`` delta candidates); returns the
+        merged ``(dists (B, k), global ids (B, k), counters)``."""
+        from repro.kernels.stacked_sweep import stacked_sweep_query
 
         is_bc = self.variant == "bc"
         # method="pallas" pins the kernel (interpret-mode parity runs);
         # sweep/stacked auto-resolve: Mosaic on TPU, vmapped jnp ref off
         use_kernel = True if method == "pallas" else None
-        sd, sg, cnt, _ = stacked_sweep_search(
+        fd, fi, cnt, _ = stacked_sweep_query(
             self.stacked_leaves(), q, k, lambda_cap=cap,
+            probe_tiles=probe_tiles, extra_d=extra_d, extra_i=extra_i,
             use_ball=is_bc, use_cone=is_bc, use_kernel=use_kernel)
-        return sd, sg, cnt
+        return fd, fi, cnt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -402,21 +427,24 @@ class ShardedSnapshot:
     def query(self, queries, k: int = 1, *, method: str = "sweep",
               frac: float = 1.0, frac1: float = 0.25, lambda_cap=None,
               return_counters: bool = False, return_info: bool = False,
-              stacked: bool | None = None):
+              stacked: bool | None = None, probe_tiles: int | None = None):
         """Top-k over the cross-shard live set via the two-round lambda
         exchange; same contract as :meth:`Snapshot.query` (normalized
         queries in, global ids out) plus ``frac1``, the round-1 prefix
         fraction.  ``return_info`` also returns the exchange's
         ``lambda0`` / per-shard round-1 k-th distances (invariant-test
         surface).  ``stacked`` controls round 2's segment-parallel form
-        (all shards' segments in one launch under lambda0, see
-        :func:`repro.core.distributed.two_round_exchange`)."""
+        (all shards' segments in one two-pass device program under
+        lambda0 -- probe-tightened cap, in-launch merge, see
+        :func:`repro.core.distributed.two_round_exchange`);
+        ``probe_tiles`` is that program's probe-pass width."""
         from repro.core.distributed import two_round_exchange
 
         out = two_round_exchange(self.shards, queries, k, frac1=frac1,
                                  method=method, frac=frac,
                                  lambda_cap=lambda_cap,
-                                 return_info=return_info, stacked=stacked)
+                                 return_info=return_info, stacked=stacked,
+                                 probe_tiles=probe_tiles)
         if return_info:
             bd, bi, cnt, info = out
             return (bd, bi, cnt, info) if return_counters else (bd, bi, info)

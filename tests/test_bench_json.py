@@ -1,0 +1,60 @@
+"""Fence for the bench-trajectory tooling: ``tools/check_bench_json.py``
+must accept a schema-complete ``BENCH_*.json`` and reject missing files,
+malformed JSON, and documents that lost required keys -- the CI
+bench-smoke lane leans on these exit codes."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import check_bench_json  # noqa: E402
+
+
+def _minimal_serve():
+    """Smallest document satisfying the BENCH_serve.json schema."""
+    num = {"qps": 1.0, "p50_ms": 1.0, "p99_ms": 2.0, "tiles_skipped": 3}
+    mode = {"p50_ms": 1.0, "p99_ms": 2.0, "tiles_skipped": 3}
+    probe = {"tiles": 4, "scanned": 10, "skipped": 2}
+    prof = {"skip_frac": 0.1}
+    return {
+        "naive": num, "cold": num, "warm": num,
+        "stacked": {
+            "fanout": 6, "seq": mode, "pr4": mode, "stacked": mode,
+            "best_probe_mode": "stacked",
+            "skip_profile": {"seq": prof,
+                             "stacked": {**prof, "probe": probe}},
+        },
+    }
+
+
+def test_check_bench_json_accepts_valid(tmp_path):
+    path = tmp_path / "BENCH_serve.json"
+    path.write_text(json.dumps(_minimal_serve()))
+    assert check_bench_json.main([str(path)]) == 0
+
+
+def test_check_bench_json_rejects_missing_and_malformed(tmp_path):
+    missing = tmp_path / "BENCH_serve.json"
+    assert check_bench_json.main([str(missing)]) == 1
+    missing.write_text("{not json")
+    assert check_bench_json.main([str(missing)]) == 1
+    unknown = tmp_path / "BENCH_mystery.json"
+    unknown.write_text("{}")
+    assert check_bench_json.main([str(unknown)]) == 1
+
+
+@pytest.mark.parametrize("drop", ["stacked.pr4.p50_ms",
+                                  "stacked.skip_profile.stacked.probe",
+                                  "warm.tiles_skipped"])
+def test_check_bench_json_rejects_lost_keys(tmp_path, drop):
+    doc = _minimal_serve()
+    node = doc
+    *parents, leaf = drop.split(".")
+    for part in parents:
+        node = node[part]
+    del node[leaf]
+    path = tmp_path / "BENCH_serve.json"
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1

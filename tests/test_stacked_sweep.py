@@ -277,56 +277,257 @@ def test_stacked_property_exact_vs_sequential_and_oracle(seed):
     _stacked_property(seed)
 
 
-# ------------------------------------------------- skip-count parity
-def test_stacked_skip_counts_dominate_sequential():
-    """The stacked launch covers a common padded tile grid: every
-    pad/dead tile it force-skips is counted, so its per-segment skip
-    counts sum to >= the sequential path's skips on the same snapshot --
-    while per *live* tile its single entry cap is looser than the
-    sequential running cap (that is the documented tradeoff; the win is
-    one launch instead of N).  Raggedness (empty + single-point
-    segments) guarantees the padded grid dominates."""
+# ------------------------------------------------- skip-count fences
+def _clustered(n, seed, dim=DIM, n_clusters=12, scale=3.0):
+    """Clustered base data: tight leaf balls -> node bounds that
+    actually prune, so live-tile skips are non-trivial on both
+    schedules (pure isotropic noise skips ~nothing either way)."""
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(n_clusters, dim)) * scale
+    return (c[rng.integers(0, n_clusters, n)]
+            + rng.normal(size=(n, dim))).astype(np.float32)
+
+
+def _mk_churned_clustered(seed, *, chunks=6, chunk=120, n0=16):
+    """A property-suite-shaped churn state (several sealed segments +
+    live delta rows + tombstones) over clustered data."""
+    rng = np.random.default_rng(seed)
+    data = _clustered(chunks * chunk, seed)
+    m = MutableP2HIndex.from_data(
+        data[:chunk], n0=n0,
+        policy=CompactionPolicy(delta_capacity=chunk, tombstone_frac=0.95,
+                                max_segments=64))
+    for c in range(1, chunks):
+        m.insert_batch(data[c * chunk:(c + 1) * chunk])
+    for _ in range(5):
+        m.insert(rng.normal(size=DIM).astype(np.float32))
+    for g in range(0, chunks * chunk, 9):
+        m.delete(g)
+    return m
+
+
+def _live_skip_stats(snap, q, k, probe_tiles):
+    """Two-pass stacked live-tile skips at per-query granularity (bq=1),
+    on the serving route's exact state (delta entry cap + extra
+    candidates seeding the in-launch global top-k, via the same
+    ``Snapshot.delta_candidates`` the serving path uses)."""
+    from repro.kernels.stacked_sweep import stacked_sweep_query
+
+    bd, bi, _ = snap.delta_candidates(jnp.asarray(q), k)
+    fd, fi, cnt, info = stacked_sweep_query(
+        snap.stacked_leaves(), jnp.asarray(q), k, bq=1,
+        lambda_cap=bd[:, k - 1], probe_tiles=probe_tiles,
+        extra_d=bd, extra_i=bi)
+    live = int(np.asarray(info["seg_skips"]).sum()
+               - np.asarray(info["forced_skips"]).sum())
+    return live, (np.asarray(fd), np.asarray(fi)), info
+
+
+@pytest.mark.parametrize("seed", [0, 2, 17, 41])
+def test_two_pass_live_skips_dominate_sequential(seed):
+    """Regression fence (the inverted PR-4 dominance tradeoff): the
+    two-pass stacked program's *live*-tile skips -- forced pad/dead
+    skips excluded -- are >= the sequential cap-threaded walk's skips on
+    property-suite-shaped churn states, at matching per-query
+    granularity.  The probe pass + the in-launch global top-k are what
+    buy this: seed 17 is a state where the single-pass (probe_tiles=0)
+    form still loses to sequential, so the fence pins the two-pass
+    default, not a structural pad-tile artifact."""
+    m = _mk_churned_clustered(seed)
+    snap = m.snapshot()
+    assert sum(1 for s in snap.segments if s.live) >= 4
+    q = normalize_query(
+        np.random.default_rng(seed + 100)
+        .normal(size=(6, DIM + 1)).astype(np.float32))
+    k = 5
+    _, _, seq_cnt = snap.query(q, k, stacked=False, return_counters=True)
+    seq_skips = int(np.asarray(seq_cnt)[C_TILE_SKIP])
+    live, (fd, fi), _ = _live_skip_stats(snap, q, k, probe_tiles=None)
+    assert live >= seq_skips, (live, seq_skips)
+    # and the two-pass answers stay exact vs the sequential route
+    sd, si = snap.query(q, k, stacked=False)
+    np.testing.assert_allclose(fd, sd, rtol=1e-5, atol=1e-6)
+    mism = fi != si
+    if mism.any():  # id disagreements must be exact-distance ties
+        tol = 1e-5 * np.abs(sd) + 1e-6
+        assert (np.abs(fd - sd)[mism] <= tol[mism]).all()
+
+
+def test_stacked_total_skips_account_every_tile():
+    """The stacked launch covers a common padded tile grid: per-segment
+    skip counts sum to the total counter, pad/dead tiles are always
+    force-skipped (they are part of the launch), and raggedness (empty +
+    single-point segments) makes the forced share dominate here."""
     segs = _ragged_segments(seed=21)
     stk = StackedLeaves.from_segments(segs)
     q = normalize_query(_mkdata(8, seed=22, dim=DIM + 1))
     k = 5
-    # sequential: per-segment pallas sweeps threading the running cap,
-    # exactly like Snapshot.query's loop (entry cap inf, delta empty)
-    from repro.kernels.ops import sweep_search_pallas
-
-    seq_skips = 0
-    bd = jnp.full((q.shape[0], k), jnp.inf, jnp.float32)
-    bi = jnp.full((q.shape[0], k), -1, jnp.int32)
-    for seg in segs:
-        pid = np.asarray(seg.tree.point_ids)
-        if (pid >= 0).sum() == 0:
-            continue  # the sequential walk skips dead segments outright
-        cap = bd[:, k - 1]
-        sd, si, cnt = sweep_search_pallas(seg.tree, jnp.asarray(q), k,
-                                          lambda_cap=cap)
-        sg = jnp.where(si >= 0,
-                       jnp.take(jnp.asarray(seg.gids),
-                                jnp.clip(si, 0, len(seg.gids) - 1)), -1)
-        bd, bi = merge_topk(jnp.concatenate([bd, sd], axis=1),
-                            jnp.concatenate([bi, sg], axis=1), k)
-        seq_skips += int(np.asarray(cnt)[C_TILE_SKIP])
     td, ti, cnt_stk, seg_skips = stacked_sweep_search(
         stk, jnp.asarray(q), k, use_kernel=True)
     stacked_skips = int(np.asarray(seg_skips).sum())
     assert stacked_skips == int(np.asarray(cnt_stk)[C_TILE_SKIP])
-    assert stacked_skips >= seq_skips, (stacked_skips, seq_skips)
-    # same answers under both schedules
-    fd, fi = _merged(td, ti, k)
-    np.testing.assert_allclose(np.asarray(fd), np.asarray(bd), rtol=1e-5,
-                               atol=1e-6)
-    assert np.array_equal(np.asarray(fi), np.asarray(bi))
-    # the dominance is structural on this snapshot: the grid's invalid
-    # (pad/dead) tiles alone outnumber every live tile the sequential
-    # walk could possibly have skipped
+    # every invalid (pad/dead) tile is skipped for every query block
     n_invalid = int((~np.asarray(stk.valid)).sum())
-    n_live_tiles = sum(s.tree.num_leaves for s in segs
-                       if (np.asarray(s.tree.point_ids) >= 0).any())
-    assert n_invalid >= n_live_tiles, (n_invalid, n_live_tiles)
+    assert stacked_skips >= n_invalid  # 8 queries = one block
+    dead = len(segs) - 1  # the all-tombstone segment: all tiles forced
+    assert (np.asarray(seg_skips)[dead] == stk.num_tiles).all()
+
+
+# ------------------------------------------- device merge_topk parity
+def test_merge_topk_planes_device_matches_host():
+    """The in-launch merge and the host exchange share one function:
+    jitted ``merge_topk_planes`` must be bit-identical to an eager
+    ``merge_topk`` over the flattened planes, including the id-primary
+    tiebreak and duplicate-id masking (repeats keep their smallest
+    distance) and the extra-candidate path."""
+    import jax
+
+    from repro.core.search import merge_topk_planes
+
+    rng = np.random.default_rng(81)
+    N, B, k = 4, 5, 6
+    dists = rng.uniform(0.1, 3.0, (N, B, k)).astype(np.float32)
+    ids = rng.integers(0, 40, (N, B, k)).astype(np.int32)  # many dups
+    # inject exact distance ties across sources + invalid slots
+    dists[1] = dists[0]
+    ids[1, :, :3] = ids[0, :, :3]  # dup ids with equal dists
+    ids[2, :, 0] = -1
+    dists[2, :, 0] = np.inf
+    extra_d = rng.uniform(0.1, 3.0, (B, 3)).astype(np.float32)
+    extra_i = rng.integers(0, 40, (B, 3)).astype(np.int32)
+    flat_d = np.moveaxis(dists, 0, 1).reshape(B, N * k)
+    flat_i = np.moveaxis(ids, 0, 1).reshape(B, N * k)
+    hd, hi = merge_topk(jnp.asarray(np.concatenate([flat_d, extra_d], 1)),
+                        jnp.asarray(np.concatenate([flat_i, extra_i], 1)),
+                        k)
+    dd, di = jax.jit(merge_topk_planes, static_argnames=("k",))(
+        jnp.asarray(dists), jnp.asarray(ids), k=k,
+        extra_d=jnp.asarray(extra_d), extra_i=jnp.asarray(extra_i))
+    np.testing.assert_array_equal(np.asarray(dd), np.asarray(hd))
+    np.testing.assert_array_equal(np.asarray(di), np.asarray(hi))
+    # a repeated id must keep only its smallest distance
+    best = {}
+    for src in range(N):
+        for col in range(k):
+            i_, d_ = int(ids[src, 0, col]), float(dists[src, 0, col])
+            if i_ >= 0:
+                best[i_] = min(best.get(i_, np.inf), d_)
+    for col in range(3):
+        best[int(extra_i[0, col])] = min(
+            best.get(int(extra_i[0, col]), np.inf),
+            float(extra_d[0, col]))
+    for rank in range(k):
+        if int(di[0, rank]) >= 0:
+            assert float(dd[0, rank]) == best[int(di[0, rank])]
+
+
+def test_stacked_query_shard_bounds_kths():
+    """``shard_bounds`` reduces per-shard merged k-ths inside the device
+    program: each row must equal the host-side merge of that shard's
+    plane slice, and upper-bound the shard's true local k-th."""
+    from repro.core.search import merge_topk_planes
+    from repro.kernels.stacked_sweep import stacked_sweep_query
+
+    segs = _ragged_segments(seed=77)
+    stk = StackedLeaves.from_segments(segs)
+    q = normalize_query(_mkdata(4, seed=78, dim=DIM + 1))
+    k = 5
+    bounds = (2, 3)  # segments per "shard", in stack order
+    _, _, _, info = stacked_sweep_query(stk, jnp.asarray(q), k,
+                                        shard_bounds=bounds,
+                                        use_kernel=False)
+    sd, sg, _, _ = stacked_sweep_search(stk, jnp.asarray(q), k,
+                                        use_kernel=False)
+    off = 0
+    for row, ns in enumerate(bounds):
+        hd, _ = merge_topk_planes(sd[off:off + ns], sg[off:off + ns], k)
+        np.testing.assert_allclose(
+            np.asarray(info["shard_kth"])[row], np.asarray(hd)[:, k - 1],
+            rtol=1e-6, atol=1e-7)
+        X, G = _live_union(segs[off:off + ns])
+        kk = min(k, len(X))
+        if kk:
+            ed, _ = exact_search(jnp.asarray(X), jnp.asarray(q), k=kk)
+            assert (np.asarray(info["shard_kth"])[row]
+                    >= np.asarray(ed)[:, kk - 1] - 1e-5).all()
+        off += ns
+
+
+def test_padded_pts_cache_shared_across_tombstone_update():
+    """The stack's derived probe operands (the lane-padded points plane)
+    are cached and survive ids-plane-only updates -- geometry is shared,
+    so the pad copy is paid once per compaction, not per query."""
+    segs = _ragged_segments(seed=79)
+    stk = StackedLeaves.from_segments(segs)
+    padded = stk.padded_pts()
+    assert padded is stk.padded_pts()  # memoized
+    assert padded.shape[-1] % 128 == 0
+    stk2 = stk.with_updated_ids({0: segs[0]})
+    assert stk2.padded_pts() is padded  # derived cache rides along
+    # concat builds a fresh grid: fresh cache, same pad invariant
+    comb = StackedLeaves.concat([stk, stk])
+    assert comb.padded_pts().shape[-1] % 128 == 0
+
+
+# -------------------------------------------- density signal freshness
+def test_tile_density_reads_current_ids_planes():
+    """Stale-density regression fence: ``tile_density`` must be
+    computed from the segments' *current* ids planes, not build-time
+    geometry -- an ids-plane-only tombstone publish (geometry shared)
+    degrades the dispatch signal exactly like build-time raggedness."""
+    from repro.kernels.stacked_sweep import tile_density
+
+    # tombstone_frac > 1: a fully-dead segment must NOT trigger a
+    # rewrite, so the publish stays ids-plane-only (the stale path)
+    data = _mkdata(6 * 40, seed=91)
+    m = MutableP2HIndex.from_data(
+        data[:40], n0=16,
+        policy=CompactionPolicy(delta_capacity=40, tombstone_frac=2.0,
+                                max_segments=64))
+    for c in range(1, 6):
+        m.insert_batch(data[c * 40:(c + 1) * 40])
+    snap0 = m.snapshot()
+    stk0 = snap0.stacked_leaves()
+    d0 = tile_density(snap0.segments)
+    # tombstone one entire segment (ids-plane-only publish)
+    seg = max(snap0.segments, key=lambda s: s.live)
+    pid = np.asarray(seg.tree.point_ids)
+    for gid in seg.gids[pid[pid >= 0]]:
+        assert m.delete(int(gid))
+    snap1 = m.snapshot()
+    # geometry is shared (the adopt path swapped only ids planes) ...
+    stk1 = snap1.stacked_leaves()
+    assert stk1.pts is stk0.pts
+    # ... yet the density signal must drop: a whole segment's tiles are
+    # now dead weight the stacked launch force-skips like pad tiles
+    d1 = tile_density(snap1.segments)
+    assert d1 < d0, (d1, d0)
+    live_tiles = sum((np.asarray(s.tree.point_ids).reshape(
+        s.tree.num_leaves, s.tree.n0) >= 0).any(axis=1).sum()
+        for s in snap1.segments)
+    grid = (len(snap1.segments)
+            * max(s.tree.num_leaves for s in snap1.segments))
+    assert d1 == pytest.approx(live_tiles / grid)
+
+
+def test_dispatch_policy_probe_tiles_knob():
+    """The policy's probe_tiles knob rides the stacked route."""
+    from repro.serve import DispatchPolicy
+
+    pol = DispatchPolicy(prefer_pallas=False, probe_tiles=7)
+    r = pol.route(8, 5, segments=5, stackable=4)
+    assert r.method == "stacked" and r.probe_tiles == 7
+    # default: the library resolves None to STACKED_PROBE_TILES_DEFAULT
+    r2 = DispatchPolicy(prefer_pallas=False).route(8, 5, segments=5,
+                                                   stackable=4)
+    assert r2.method == "stacked" and r2.probe_tiles is None
+    from repro.kernels.stacked_sweep import (STACKED_PROBE_TILES_DEFAULT,
+                                             resolve_probe_tiles)
+
+    assert resolve_probe_tiles(None, 100) == STACKED_PROBE_TILES_DEFAULT
+    assert resolve_probe_tiles(None, 2) == 2  # clamped to the visit list
+    assert resolve_probe_tiles(9, 4) == 4
+    assert resolve_probe_tiles(0, 4) == 0
 
 
 # -------------------------------------------------- cache semantics
@@ -405,6 +606,114 @@ def test_engine_policy_overrides_library_auto_promotion():
     assert np.array_equal(i1, eg)
 
 
+# ------------------------------------------- two-pass probe exactness
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_probe_degenerate_endpoints(use_kernel):
+    """``probe_tiles=0`` is the single-pass sweep (PR-4's schedule --
+    answers identical; only the in-launch global threading's skip
+    counters improved on it) and ``probe_tiles >= L`` makes the probe
+    pass the full sweep: both endpoints must produce identical planes
+    and skip counts, and exact merged answers."""
+    segs = _ragged_segments(seed=51)
+    stk = StackedLeaves.from_segments(segs)
+    X, G = _live_union(segs)
+    q = normalize_query(_mkdata(5, seed=52, dim=DIM + 1))
+    k = 6
+    ed, ei = exact_search(jnp.asarray(X), jnp.asarray(q), k=k)
+    ed, eg = np.asarray(ed), G[np.asarray(ei)]
+    d0, i0, c0, s0 = stacked_sweep_search(stk, jnp.asarray(q), k,
+                                          probe_tiles=0,
+                                          use_kernel=use_kernel)
+    dL, iL, cL, sL = stacked_sweep_search(stk, jnp.asarray(q), k,
+                                          probe_tiles=10 ** 6,
+                                          use_kernel=use_kernel)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(dL))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(iL))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(sL))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(cL))
+    for dd, ii in ((d0, i0), (dL, iL)):
+        fd, fi = _merged(dd, ii, k)
+        np.testing.assert_allclose(np.asarray(fd), ed, rtol=1e-4,
+                                   atol=1e-5)
+        assert np.array_equal(np.asarray(fi), eg)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("probe", [1, 3])
+def test_probe_seeded_pass_never_rescans(use_kernel, probe):
+    """No-rescan invariant of the seeded handoff: pass B resumes from
+    pass A's per-segment top-k over a *disjoint* visit suffix, so no
+    per-(segment, query) plane may hold a duplicate live id (the kernel
+    has no dedup -- a rescan of a probed tile would surface its points
+    twice) -- and the two-pass result stays exact."""
+    segs = _ragged_segments(seed=61)
+    stk = StackedLeaves.from_segments(segs)
+    X, G = _live_union(segs)
+    q = normalize_query(_mkdata(4, seed=62, dim=DIM + 1))
+    k = 6
+    bd, bi, cnt, _ = stacked_sweep_search(stk, jnp.asarray(q), k,
+                                          probe_tiles=probe,
+                                          use_kernel=use_kernel)
+    ids = np.asarray(bi)  # (N, B, k)
+    for s in range(ids.shape[0]):
+        for b in range(ids.shape[1]):
+            row = ids[s, b][ids[s, b] >= 0]
+            assert len(set(row.tolist())) == len(row), (s, b, row)
+    ed, ei = exact_search(jnp.asarray(X), jnp.asarray(q), k=k)
+    fd, fi = _merged(bd, bi, k)
+    np.testing.assert_allclose(np.asarray(fd), np.asarray(ed),
+                               rtol=1e-4, atol=1e-5)
+    assert np.array_equal(np.asarray(fi), G[np.asarray(ei)])
+    # probe accounting: the probe pass covers exactly p tiles per
+    # (segment, block) -- scanned + skipped must add up
+    from repro.kernels.stacked_sweep import stacked_sweep_query
+
+    _, _, _, info = stacked_sweep_query(stk, jnp.asarray(q), k,
+                                        probe_tiles=probe,
+                                        use_kernel=use_kernel)
+    nqb = -(-q.shape[0] // 8)
+    pr = info["probe"]
+    assert pr["tiles"] == probe
+    assert pr["scanned"] + pr["skipped"] == stk.num_segments * nqb * probe
+
+
+def test_fused_query_matches_host_merge_bit_exactly():
+    """The in-launch global merge is ``core.search.merge_topk`` run
+    inside the device program: fusing must be a pure code motion --
+    ``stacked_sweep_query`` output equals planes API + host-side
+    ``merge_topk_planes`` bit for bit, extra candidates included."""
+    from repro.core.search import merge_topk_planes
+    from repro.kernels.stacked_sweep import stacked_sweep_query
+
+    segs = _ragged_segments(seed=71)
+    stk = StackedLeaves.from_segments(segs)
+    q = normalize_query(_mkdata(6, seed=72, dim=DIM + 1))
+    k = 5
+    rng = np.random.default_rng(73)
+    # empty extras (all +inf/-1): the fused path's global seed is a
+    # no-op, so planes are identical and the equality is a pure
+    # code-motion check (including the -1-slot dedup convention);
+    # finite extras (fake "delta" rows, fresh ids) also tighten the
+    # fused path's thresholds -- the merged top-k must still agree on
+    # this state (both are exact, same candidates survive)
+    empty_d = np.full((6, k), np.inf, np.float32)
+    empty_i = np.full((6, k), -1, np.int32)
+    fin_d = np.sort(rng.uniform(0.2, 2.0, (6, k))).astype(np.float32)
+    fin_i = (1000 + np.arange(6 * k).reshape(6, k)).astype(np.int32)
+    for extra_d, extra_i in ((empty_d, empty_i), (fin_d, fin_i)):
+        for p in (0, 3):
+            fd, fi, cnt, _ = stacked_sweep_query(
+                stk, jnp.asarray(q), k, probe_tiles=p,
+                extra_d=extra_d, extra_i=extra_i, use_kernel=False)
+            sd, sg, cnt2, _ = stacked_sweep_search(
+                stk, jnp.asarray(q), k, probe_tiles=p, use_kernel=False,
+                lambda_cap=jnp.asarray(extra_d[:, k - 1]))
+            hd, hi = merge_topk_planes(sd, sg, k, extra_d=extra_d,
+                                       extra_i=extra_i)
+            np.testing.assert_array_equal(np.asarray(fd), np.asarray(hd))
+            np.testing.assert_array_equal(np.asarray(fi), np.asarray(hi))
+
+
 def test_engine_routes_stacked_and_stays_exact():
     """The engine auto-routes high-fan-out snapshots to the stacked
     launch; warm answers stay bit-identical and oracle-exact."""
@@ -423,3 +732,33 @@ def test_engine_routes_stacked_and_stays_exact():
     d2, i2 = m.query(q, k=5, engine=eng)  # warm: bit-identical
     assert np.array_equal(i2, i1) and np.array_equal(d2, d1)
     assert eng.cache.stats()["hits"] >= 4
+
+
+def test_engine_forwards_probe_tiles_and_stays_exact():
+    """The policy's probe_tiles knob reaches the device program through
+    the engine path, and any probe width serves exact answers."""
+    from repro.serve import DispatchPolicy, P2HEngine
+
+    m = _mk_fanned(61, chunks=8)
+    q = _mkdata(4, seed=62, dim=DIM + 1)
+    ed, eg = _oracle(m.snapshot(), q, 5)
+    outs = []
+    for probe in (0, 1, None):
+        eng = P2HEngine(m, slot_size=4,
+                        policy=DispatchPolicy(prefer_pallas=False,
+                                              probe_tiles=probe))
+        d, i = m.query(q, k=5, engine=eng)
+        assert eng.stats()["routes"].get("stacked", 0) > 0
+        np.testing.assert_allclose(d, ed, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"probe={probe}")
+        mism = i != eg  # id disagreements must be exact-distance ties
+        if mism.any():
+            tol = 1e-5 * np.abs(ed) + 1e-6
+            assert (np.abs(d - ed)[mism] <= tol[mism]).all(), probe
+            for r in np.nonzero(mism.any(axis=1))[0]:
+                assert (sorted(i[r][mism[r]].tolist())
+                        == sorted(eg[r][mism[r]].tolist())), probe
+        outs.append((d, i))
+    d0, i0 = outs[0]  # probe width never changes the answer
+    for d, i in outs[1:]:
+        np.testing.assert_allclose(d, d0, rtol=1e-6, atol=1e-7)

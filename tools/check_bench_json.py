@@ -1,0 +1,116 @@
+"""CI fence for the machine-readable bench trajectory: fail the
+bench-smoke lane when a ``BENCH_*.json`` is missing, malformed, or has
+lost the keys successive PRs diff against.
+
+``benchmarks.run`` serializes each JSON-returning lane's result dict to
+``BENCH_<lane>.json``; this tool validates the files' schema (presence +
+type of the headline metrics, not their values -- a smoke config's
+numbers are meaningless, its *shape* is the contract).
+
+Usage (CI bench-smoke lane; see .github/workflows/ci.yml):
+
+    python -m benchmarks.run --only serve,stream_sharded --smoke \
+        --out-dir bench-json
+    python tools/check_bench_json.py bench-json/BENCH_serve.json \
+        bench-json/BENCH_stream_sharded.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_NUM = (int, float)
+
+#: required dotted paths + expected types, keyed by file basename.
+#: "<mode>" expands over the listed skip-profile modes.
+SCHEMAS = {
+    "BENCH_serve.json": {
+        "naive.qps": _NUM, "naive.p50_ms": _NUM, "naive.p99_ms": _NUM,
+        "cold.qps": _NUM, "cold.tiles_skipped": _NUM,
+        "warm.qps": _NUM, "warm.p50_ms": _NUM, "warm.p99_ms": _NUM,
+        "warm.tiles_skipped": _NUM,
+        "stacked.fanout": _NUM,
+        "stacked.seq.p50_ms": _NUM,
+        "stacked.seq.tiles_skipped": _NUM,
+        "stacked.pr4.p50_ms": _NUM,
+        "stacked.stacked.p50_ms": _NUM,
+        "stacked.stacked.p99_ms": _NUM,
+        "stacked.stacked.tiles_skipped": _NUM,
+        "stacked.best_probe_mode": str,
+        "stacked.skip_profile.seq.skip_frac": _NUM,
+        "stacked.skip_profile.stacked.skip_frac": _NUM,
+        "stacked.skip_profile.stacked.probe.tiles": _NUM,
+        "stacked.skip_profile.stacked.probe.scanned": _NUM,
+        "stacked.skip_profile.stacked.probe.skipped": _NUM,
+    },
+    "BENCH_stream_sharded.json": {
+        "shards": _NUM,
+        "write_ops_per_s": _NUM,
+        "query_p50_ms": _NUM, "query_p99_ms": _NUM,
+        "sweep_fanout": _NUM,
+        "seq_sweep_p50_ms": _NUM, "seq_tiles_skipped": _NUM,
+        "stacked_p0_sweep_p50_ms": _NUM,
+        "stacked_sweep_p50_ms": _NUM, "stacked_sweep_p99_ms": _NUM,
+        "stacked_tiles_skipped": _NUM,
+        "probe_speedup_p50": _NUM,
+        "skip_profile.seq.skip_frac": _NUM,
+        "skip_profile.stacked.skip_frac": _NUM,
+        "skip_profile.stacked.probe.tiles": _NUM,
+    },
+}
+
+
+def check_file(path: str) -> list:
+    """Schema errors for one BENCH_*.json (empty list = valid)."""
+    name = os.path.basename(path)
+    schema = SCHEMAS.get(name)
+    if schema is None:
+        return [f"{path}: no schema registered for {name!r} "
+                f"(known: {sorted(SCHEMAS)})"]
+    if not os.path.exists(path):
+        return [f"{path}: missing"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/malformed JSON ({e})"]
+    errors = []
+    _missing = object()  # distinct from a JSON null value
+    for dotted, typ in schema.items():
+        node = doc
+        for part in dotted.split("."):
+            if not isinstance(node, dict) or part not in node:
+                errors.append(f"{path}: missing key {dotted!r}")
+                node = _missing
+                break
+            node = node[part]
+        if node is _missing:
+            continue
+        # bool is an int subclass but never a valid metric; a JSON null
+        # (e.g. a NaN metric serialized away) must fail the type check
+        if isinstance(node, bool) or not isinstance(node, typ):
+            errors.append(f"{path}: {dotted!r} has type "
+                          f"{type(node).__name__}, expected "
+                          f"{getattr(typ, '__name__', typ)}")
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = argv if argv is not None else sys.argv[1:]
+    if not paths:
+        print("usage: check_bench_json.py BENCH_*.json ...",
+              file=sys.stderr)
+        return 2
+    errors = []
+    for path in paths:
+        errors += check_file(path)
+    for e in errors:
+        print(f"check_bench_json: FAIL -- {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_bench_json: {len(paths)} file(s) valid")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
