@@ -118,10 +118,17 @@ def bench_stacked(data, trace, k, *, n0=64, fanout=6, iters=10,
     snap = m.snapshot()
     qn = normalize_query(trace).astype(np.float32)
     res = {"fanout": sum(1 for s in snap.segments if s.live)}
-    modes = {"seq": {"stacked": False}, "pr4": {"pr4": True}}
+    # probe-mode keys carry a "mode_" prefix so the JSON section
+    # ("stacked") can never collide with a mode of the same name --
+    # check_bench_json.py validates dotted paths and used to see
+    # "stacked.stacked" as ambiguous
+    modes = {"mode_seq": {"stacked": False}, "mode_pr4": {"pr4": True}}
+    stacked_modes = []
     for p in probe_grid:
-        modes[f"stacked_p{p}"] = {"stacked": True, "probe_tiles": p}
-    modes["stacked"] = {"stacked": True, "probe_tiles": None}
+        modes[f"mode_p{p}"] = {"stacked": True, "probe_tiles": p}
+        stacked_modes.append(f"mode_p{p}")
+    modes["mode_stacked"] = {"stacked": True, "probe_tiles": None}
+    stacked_modes.append("mode_stacked")
 
     def query_fn(pr4=False, **kw):
         if pr4:
@@ -132,7 +139,6 @@ def bench_stacked(data, trace, k, *, n0=64, fanout=6, iters=10,
     res["skip_profile"] = stacked_skip_profile(
         snap, qn, k, probe_grid=tuple(probe_grid) + (None,))
     # the refit: which probe width wins p50 on this registered config
-    stacked_modes = [m_ for m_ in modes if m_.startswith("stacked")]
     res["best_probe_mode"] = min(stacked_modes,
                                  key=lambda m_: res[m_]["p50_ms"])
     engine = P2HEngine(m, policy=DispatchPolicy(prefer_pallas=False))
@@ -185,8 +191,8 @@ def main(argv=None):
         "warm lambda cache must prune strictly more tiles than cold"
 
     stacked = bench_stacked(data, trace, args.k, n0=args.n0)
-    seq, stk = stacked["seq"], stacked["stacked"]
-    pr4 = stacked["pr4"]
+    seq, stk = stacked["mode_seq"], stacked["mode_stacked"]
+    pr4 = stacked["mode_pr4"]
     print(f"mutable snapshot, fan-out {stacked['fanout']}: sequential "
           f"sweep p50 {seq['p50_ms']:.1f} ms p99 {seq['p99_ms']:.1f} ms "
           f"({seq['tiles_skipped']} tiles skipped)  |  PR-4 stacked "
@@ -203,8 +209,12 @@ def main(argv=None):
           + "  ".join(f"{m}={r['skip_frac']:.3f}"
                       for m, r in prof.items())
           + f"; probe overhead {prof['stacked']['probe']}")
+    from repro.kernels.stacked_sweep import stacked_compile_stats
+    cst = stacked_compile_stats()
     return {"naive": naive, "cold": cold, "warm": warm,
-            "stacked": stacked}
+            "stacked": stacked,
+            "compile_count": cst["compile_count"],
+            "cache_hit": cst["cache_hit"]}
 
 
 def run(csv, *, smoke: bool = False) -> dict:

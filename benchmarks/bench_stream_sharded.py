@@ -145,6 +145,23 @@ def run_sharded_stream(args):
 
     hot = rng.normal(size=(4, args.d + 1)).astype(np.float32)
     live = list(range(args.n))
+
+    # warmup: compile the serving programs (engine route, stacked
+    # round 2, delta scan) before the timed loop -- steady state is the
+    # metric, and the shape-bucketed compile cache + the compactor's
+    # pre-publish warmup keep mid-run republishes on already-compiled
+    # programs thereafter.  Stats are reset so compile_count/cache_hit
+    # report the *timed* window only (the fence wants zero query-path
+    # compiles there).
+    from repro.kernels.stacked_sweep import (reset_stacked_compile_stats,
+                                             stacked_compile_stats)
+    warm_trace = np.stack([hot[i % len(hot)] for i in range(8)])
+    for _ in range(3):
+        eng.query(warm_trace, k=args.k)
+    m.wait_compaction()
+    reset_stacked_compile_stats()
+    eng.reset_stats()
+
     ins_lat, del_lat, q_lat = [], [], []
     per_shard_writes = np.zeros((args.shards,), np.int64)
     t_all = time.perf_counter()
@@ -170,6 +187,11 @@ def run_sharded_stream(args):
             q_lat.append(time.perf_counter() - t0)
     m.wait_compaction()
     wall = time.perf_counter() - t_all
+    # query-path compile accounting over the timed window (the CI fence
+    # reads these: a retrace spike in the timed loop shows up here long
+    # before it shows up in a smoke config's noisy percentiles)
+    cst = stacked_compile_stats()
+    admission = m.admission_stats()
 
     # exactness spot-check on the final live set
     snap = m.snapshot()
@@ -217,6 +239,12 @@ def run_sharded_stream(args):
         "epoch": m.epoch,
         "segments": len(snap.segments),
         "lambda_cache": eng.cache.stats(),
+        "compile_count": cst["compile_count"],
+        "cache_hit": cst["cache_hit"],
+        "warm_compiles": cst["warm_compiles"],
+        "query_misses": cst["misses"],
+        "recent_misses": [list(s) for s in cst["recent_misses"]],
+        "admission": admission,
     }
     m.close()
     return res
@@ -251,6 +279,11 @@ def main(argv=None):
     print(f"cross-shard query p50 {res['query_p50_ms']:.1f} ms  "
           f"p99 {res['query_p99_ms']:.1f} ms (two-round exchange, warm "
           f"per-shard cache: {res['lambda_cache']})")
+    print(f"timed-window compiles: {res['query_misses']} query-path, "
+          f"{res['warm_compiles']} pre-publish warm, "
+          f"{res['cache_hit']} cache hits; admission {res['admission']}")
+    if res["recent_misses"]:
+        print(f"  query-path miss signatures: {res['recent_misses']}")
     print(f"compactions: {res['compactions']} "
           f"(p50 {res['compact_p50_ms']:.1f} ms, "
           f"max {res['compact_max_ms']:.1f} ms, "
@@ -296,7 +329,8 @@ def run(csv, *, smoke: bool = False) -> dict:
                 "seq_tiles_skipped", "stacked_p0_sweep_p50_ms",
                 "stacked_sweep_p50_ms",
                 "stacked_sweep_p99_ms", "stacked_tiles_skipped",
-                "stacked_speedup_p50", "probe_speedup_p50"):
+                "stacked_speedup_p50", "probe_speedup_p50",
+                "compile_count", "cache_hit"):
         csv(f"stream_sharded,{key},{res[key]:.3f}"
             if isinstance(res[key], float)
             else f"stream_sharded,{key},{res[key]}")

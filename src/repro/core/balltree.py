@@ -27,7 +27,8 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["FlatTree", "build_tree", "append_ones", "normalize_query"]
+__all__ = ["FlatTree", "build_tree", "append_ones", "normalize_query",
+           "leaf_pad_quantum", "pad_tree_leaves", "built_leaves"]
 
 
 def append_ones(data: np.ndarray) -> np.ndarray:
@@ -241,4 +242,64 @@ def build_tree(
         num_nodes=m,
         num_leaves=L,
         max_depth=max_depth[0],
+    )
+
+
+def built_leaves(tree: FlatTree) -> int:
+    """Leaf count of the *built* tree, excluding any
+    :func:`pad_tree_leaves` padding.  Pad leaves own no node, so the
+    largest leaf slot referenced by the node array is the last real
+    leaf -- heuristics that reason about wasted tiles (e.g. the stacked
+    dispatch's density floor) should divide by this, not ``num_leaves``.
+    """
+    return int(np.asarray(tree.node_leaf).max()) + 1
+
+
+def leaf_pad_quantum(num_leaves: int) -> int:
+    """Leaf-count quantum for :func:`pad_tree_leaves`: coarser as trees
+    grow, so a churning index's freshly-compacted segments keep landing
+    on already-compiled sweep shapes (the same ladder shape as the
+    stacked launch's tile quantum)."""
+    if num_leaves <= 128:
+        return 8
+    if num_leaves <= 512:
+        return 16
+    return 32
+
+
+def pad_tree_leaves(tree: FlatTree, num_leaves: int) -> FlatTree:
+    """Pad ``tree``'s leaf/point arrays to ``num_leaves`` leaf slots.
+
+    Pad leaves replicate leaf 0's geometry but hold no valid points
+    (``point_ids == -1``, ``rx == -1``) -- the repo-wide empty-tile
+    convention, so every search scheme treats them as skippable and
+    results are bit-identical to the unpadded tree on exact paths.  The
+    node arrays are untouched: no node references a pad leaf, so tree
+    walks (dfs) never see them; only the flat leaf sweeps (whose jit
+    programs are keyed on the leaf count -- the point of padding) do.
+    """
+    pl = num_leaves - tree.num_leaves
+    if pl <= 0:
+        return tree
+    n0 = tree.n0
+
+    def padl(a):  # leaf arrays: replicate row 0 geometry
+        rep = np.broadcast_to(np.asarray(a)[:1], (pl,) + np.shape(a)[1:])
+        return np.concatenate([np.asarray(a), rep], axis=0)
+
+    def padp(a, fill):  # point rows: empty tiles
+        w = [(0, pl * n0)] + [(0, 0)] * (np.asarray(a).ndim - 1)
+        return np.pad(np.asarray(a), w, constant_values=fill)
+
+    return dataclasses.replace(
+        tree,
+        leaf_centers=padl(tree.leaf_centers),
+        leaf_radii=padl(tree.leaf_radii),
+        leaf_cnorm=padl(tree.leaf_cnorm),
+        points=padp(tree.points, 0.0),
+        point_ids=padp(tree.point_ids, -1),
+        rx=padp(tree.rx, -1.0),  # pad sorts to the end (desc)
+        xcos=padp(tree.xcos, 0.0),
+        xsin=padp(tree.xsin, 0.0),
+        num_leaves=num_leaves,
     )

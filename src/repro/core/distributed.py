@@ -29,8 +29,10 @@ measured in ``benchmarks/bench_distributed.py``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import threading
 from typing import Sequence
 
 import jax
@@ -42,7 +44,67 @@ from jax.sharding import PartitionSpec as P
 from repro.core import search
 from repro.core.balltree import FlatTree, build_tree
 
-__all__ = ["ShardedP2HIndex", "two_round_exchange"]
+__all__ = ["ShardedP2HIndex", "two_round_exchange", "warm_round1"]
+
+# ---------------------------------------------------------------------------
+# Round-1 template registry.
+#
+# Round 1 of the exchange runs ``method="beam"`` per shard, which bottoms
+# out in :func:`repro.core.search.sweep_search` -- a ``lax.scan`` program
+# whose jit cache is keyed on each segment tree's shapes (num_leaves, n0,
+# d) plus (B, k, n_visit).  A compaction mints a brand-new tree shape, so
+# without warmup the first post-publish exchange pays that compile on the
+# query path (the residual seconds-scale p99 spike after the stacked
+# program is warmed).  ``two_round_exchange`` records the (B, k, frac1)
+# templates it actually serves; the background compactor replays them
+# against the freshly built tree via :func:`warm_round1` *before* the
+# publish flips the epoch.
+_ROUND1_LOCK = threading.Lock()
+_ROUND1_TEMPLATES: "collections.OrderedDict[tuple, None]" = (
+    collections.OrderedDict())
+_ROUND1_MAX_TEMPLATES = 8
+
+
+def _record_round1(B: int, k: int, frac1: float) -> None:
+    key = (int(B), int(k), float(frac1))
+    with _ROUND1_LOCK:
+        _ROUND1_TEMPLATES[key] = None
+        _ROUND1_TEMPLATES.move_to_end(key)
+        while len(_ROUND1_TEMPLATES) > _ROUND1_MAX_TEMPLATES:
+            _ROUND1_TEMPLATES.popitem(last=False)
+
+
+def warm_round1(tree, *, is_bc: bool = True, templates=None) -> int:
+    """Pre-compile the per-segment exchange sweeps for ``tree``'s shapes.
+
+    Replays every recorded (B, k, frac1) exchange template against
+    ``tree`` with dummy queries so both per-segment ``sweep_search``
+    forms are in the jit cache before the segment is ever published:
+
+      * the round-1 beam form (``frac=frac1``, capless), and
+      * the round-2 / sequential exact form (``frac=1.0`` with a
+        ``lambda_cap`` operand) -- the one a below-stacked-fan-out
+        round 2 (or a per-shard sequential fallback) runs on path.
+
+    Returns the number of programs replayed (0 when none recorded).
+    """
+    with _ROUND1_LOCK:
+        tpls = list(templates if templates is not None
+                    else _ROUND1_TEMPLATES)
+    warmed = 0
+    for B, k, frac1 in tpls:
+        q = jnp.ones((B, tree.d), jnp.float32)
+        cap = jnp.ones((B,), jnp.float32)
+        for kw in ({"frac": frac1},
+                   {"frac": 1.0, "lambda_cap": cap}):
+            try:
+                bd, bi, _ = search.sweep_search(
+                    tree, q, k, use_ball=is_bc, use_cone=is_bc, **kw)
+                np.asarray(bd), np.asarray(bi)  # force compile + execute
+                warmed += 1
+            except Exception:
+                pass  # warming is best-effort; serving stays correct
+    return warmed
 
 # shard_map moved to the jax top level (and check_rep was renamed to
 # check_vma) in newer releases; support both.  The check is disabled either
@@ -191,6 +253,7 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     round1_kth = []
     parts_d, parts_i = [], []
     if method != "beam":
+        _record_round1(B, k, frac1)  # template for pre-publish warmup
         lam = jnp.full((B,), jnp.inf, jnp.float32) if ext is None else ext
         for s in shards:
             bd1, bi1, c1 = s.query(q, k, method="beam", frac=frac1,
@@ -293,8 +356,13 @@ def _stacked_round2(shards, q, k, *, method, stacked, lam0, probe_tiles):
     stks = [s.stacked_leaves() for _, s in stackable]
     combined = concat_cached(stks)
     is_bc = getattr(stackable[0][1], "variant", "bc") == "bc"
+    # probe_route="round2": the sweep enters with lambda0, the exchanged
+    # round-1 k-th -- the same tightening the probe pass would recreate
+    # -- so the route's default is single-pass (measured: the probe
+    # yields ~0 extra live skips here and a 0.94x p50 regression)
     fd, fi, cnt, info = stacked_sweep_query(
         combined, q, k, lambda_cap=lam0, probe_tiles=probe_tiles,
+        probe_route="round2",
         shard_bounds=tuple(stk.num_segments for stk in stks),
         use_ball=is_bc, use_cone=is_bc,
         use_kernel=True if method == "pallas" else None)

@@ -323,8 +323,15 @@ def sweep_search(
     qn = jnp.sqrt(jnp.sum(queries * queries, axis=1))  # (B,)
     ipc = queries @ tree.leaf_centers.T  # (B, L)
     lb_all = bounds.node_ball_bound(ipc, qn[:, None], tree.leaf_radii[None, :])
+    # tiles with no valid point (pad_tree_leaves quantization pads,
+    # fully-tombstoned tiles): force their bound to +inf so they sort
+    # after every live tile (a budgeted sweep never spends visit slots
+    # on them) and are unconditionally skipped by the lambda test
+    tile_dead = ~(tree.point_ids.reshape(L, n0) >= 0).any(axis=1)  # (L,)
+    lb_all = jnp.where(tile_dead[None, :], jnp.inf, lb_all)
     if order == "center":
-        visit = jnp.argsort(jnp.abs(ipc), axis=1)
+        visit = jnp.argsort(
+            jnp.where(tile_dead[None, :], jnp.inf, jnp.abs(ipc)), axis=1)
     else:
         visit = jnp.lexsort((jnp.abs(ipc), lb_all), axis=1)
     n_visit = max(1, min(L, int(round(frac * L))))
@@ -371,7 +378,11 @@ def sweep_search(
         absip = jnp.abs(jnp.einsum("bnd,bd->bn", blk, queries))
         cand = jnp.where(keep, absip, jnp.inf)
         cnt = cnt.at[C_VERIFIED].add(jnp.sum(keep).astype(jnp.int32))
-        cnt = cnt.at[C_TILE_SKIP].add(jnp.sum(skip).astype(jnp.int32))
+        # dead tiles are forced skips, not pruning wins: count neither
+        # a skip nor a scanned leaf for them (their +inf bound already
+        # guarantees skip=True above)
+        cnt = cnt.at[C_TILE_SKIP].add(
+            jnp.sum(skip & ~tile_dead[leaf]).astype(jnp.int32))
         cnt = cnt.at[C_LEAVES].add(jnp.sum(~skip).astype(jnp.int32))
         md = jnp.concatenate([bd, cand], axis=1)
         mi = jnp.concatenate([bi, idst], axis=1)

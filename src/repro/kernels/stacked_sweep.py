@@ -44,6 +44,7 @@ the merged -- top-k.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import threading
@@ -60,8 +61,11 @@ from repro.kernels.p2h_scan import _cone_cases
 __all__ = ["StackedLeaves", "stacked_sweep", "stacked_sweep_search",
            "stacked_sweep_query", "prepare_stacked_operands",
            "concat_cached", "tile_density", "resolve_probe_tiles",
+           "warm_stacked", "stacked_compile_stats",
+           "reset_stacked_compile_stats",
            "STACKED_FANOUT_DEFAULT", "STACKED_DENSITY_DEFAULT",
-           "STACKED_PROBE_TILES_DEFAULT"]
+           "STACKED_PROBE_TILES_DEFAULT",
+           "STACKED_PROBE_TILES_ROUND2_DEFAULT"]
 
 _LANE = 128
 _NEG_FILL = jnp.inf
@@ -89,6 +93,17 @@ STACKED_DENSITY_DEFAULT = 0.5
 #: knob, refit against the registered bench configs (bench_serve /
 #: bench_stream_sharded report the crossover).
 STACKED_PROBE_TILES_DEFAULT = 4
+
+#: probe-pass width for round 2 of the two-round exchange
+#: (``probe_route="round2"``): 0, i.e. single pass.  Round 2 already
+#: enters with ``lambda0`` -- round 1's merged k-th over every shard --
+#: which is exactly the cross-segment tightening the probe pass exists
+#: to recreate, so the probe's extra launch buys nothing there (the
+#: registered sharded config measures 0 probe-induced live skips and a
+#: 0.94x p50 *regression*).  The snapshot route keeps
+#: :data:`STACKED_PROBE_TILES_DEFAULT`: its entry cap is only the delta
+#: scan's k-th (or nothing), so the probe still earns its launch.
+STACKED_PROBE_TILES_ROUND2_DEFAULT = 0
 
 
 def _segment_live_tiles(seg) -> int:
@@ -119,8 +134,16 @@ def tile_density(segments) -> float:
     grid's geometry but dead tiles are force-skipped exactly like pad
     tiles, so a stack whose rows have been deleted out from under it is
     as ragged as one that was built ragged -- the dispatch signal must
-    see that (stale-geometry density was the bug this fixes)."""
-    counts = [s.tree.num_leaves for s in segments]
+    see that (stale-geometry density was the bug this fixes).
+
+    The denominator uses each tree's *built* leaf count
+    (:func:`repro.core.balltree.built_leaves`), not ``num_leaves``:
+    ``pad_tree_leaves`` quantization pads are compile-shape waste of the
+    same species as the tile-quantum rounding, already excused above --
+    counting them would demote well-packed stacks below the floor just
+    because their trees were rounded up for program-cache reuse."""
+    from repro.core.balltree import built_leaves
+    counts = [built_leaves(s.tree) for s in segments]
     if not counts:
         return 1.0
     live = sum(_segment_live_tiles(s) for s in segments)
@@ -131,13 +154,47 @@ def _ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-#: tile-count quantum: the common grid's tile count is the max segment's,
-#: rounded up to a multiple of this.  Coarse enough that snapshots which
-#: only differ by a few leaves share jit traces (and cross-shard stacks
-#: usually concatenate without re-padding), fine enough that pad tiles --
-#: which the branch-free jnp path cannot elide, only mask -- stay a small
-#: fraction of the launch.
+#: base tile-count quantum: the common grid's tile count is the max
+#: segment's, rounded up to a multiple of :func:`_tile_quantum`.  Coarse
+#: enough that snapshots which only differ by a few leaves share jit
+#: traces (and cross-shard stacks usually concatenate without
+#: re-padding), fine enough that pad tiles -- which the branch-free jnp
+#: path cannot elide, only mask -- stay a small fraction of the launch.
 _TILE_QUANTUM = 8
+
+
+def _tile_quantum(max_leaves: int) -> int:
+    """Size-scaled tile quantum: bigger grids take coarser rounding so
+    successive compactions keep landing on the same padded tile count
+    (the pad waste stays a bounded *fraction*, while the set of distinct
+    jit shapes a churning index visits stays small)."""
+    if max_leaves <= 128:
+        return _TILE_QUANTUM
+    if max_leaves <= 512:
+        return 2 * _TILE_QUANTUM
+    return 4 * _TILE_QUANTUM
+
+
+def _bucket_segments(n: int) -> int:
+    """Quantized segment count the launch is padded to: exact for small
+    stacks (where a pad row is a large relative cost on the branch-free
+    jnp path and compaction tends to *change* the count anyway), coarser
+    as the stack grows, so republishes after compaction / shard churn
+    land on an already-compiled grid signature instead of retracing.
+    The ladder starts quantizing at 5 (not 9): a churning sharded index
+    crosses 5..8 one compaction at a time, and ceil-to-2 there turns
+    every *other* crossing into an already-compiled signature -- halving
+    the background compile windows whose CPU contention is what the
+    query tail actually sees once warmup keeps compiles off-path."""
+    if n <= 4:
+        return n
+    if n <= 16:
+        return _ceil_to(n, 2)
+    if n <= 32:
+        return _ceil_to(n, 4)
+    if n <= 64:
+        return _ceil_to(n, 8)
+    return _ceil_to(n, 16)
 
 
 #: ``StackedLeaves._derived`` keys that depend only on tile *geometry*
@@ -223,8 +280,8 @@ class StackedLeaves:
         assert segments, "cannot stack zero segments"
         t0 = segments[0].tree
         n0, d = t0.n0, t0.d
-        L = _ceil_to(max(t.tree.num_leaves for t in segments),
-                     _TILE_QUANTUM)
+        max_leaves = max(t.tree.num_leaves for t in segments)
+        L = _ceil_to(max_leaves, _tile_quantum(max_leaves))
         N = len(segments)
         pts = np.zeros((N, L, n0, d), np.float32)
         ids = np.full((N, L, n0), -1, np.int32)
@@ -262,19 +319,21 @@ class StackedLeaves:
         (``{stack index: segment}``) rewritten -- the tombstone-only
         republish path: geometry arrays are shared, not copied, and so
         are the geometry-keyed ``_derived`` entries (ids-derived ones
-        are dropped: the planes just moved)."""
-        ids = self.ids
+        are dropped: the planes just moved).  Pure host numpy on
+        purpose: the ids plane is tiny, and jnp scatter ops here would
+        jit-compile per stack shape -- a ~200 ms spike the first
+        post-delete query on every fresh shape would eat."""
+        ids = np.array(self.ids)  # host copy, (S, T, n0) i32 -- small
         uids = list(self.uids)
         for s, seg in changed.items():
-            plane = jnp.full((self.num_tiles, self.n0), -1, jnp.int32)
-            plane = plane.at[:seg.tree.num_leaves].set(
-                jnp.asarray(_global_ids(seg.tree, seg.gids)))
-            ids = ids.at[s].set(plane)
+            plane = np.full((self.num_tiles, self.n0), -1, np.int32)
+            plane[:seg.tree.num_leaves] = _global_ids(seg.tree, seg.gids)
+            ids[s] = plane
             uids[s] = seg.uid
         keep = {key: v for key, v in self._derived.items()
-                if key in _GEOMETRY_DERIVED}
-        return dataclasses.replace(self, ids=ids,
-                                   valid=(ids >= 0).any(axis=2),
+                if key in _GEOMETRY_DERIVED or key.startswith("geom:")}
+        return dataclasses.replace(self, ids=jnp.asarray(ids),
+                                   valid=jnp.asarray((ids >= 0).any(axis=2)),
                                    uids=tuple(uids), _derived=keep)
 
     @staticmethod
@@ -705,11 +764,12 @@ def stacked_sweep(
     jax.jit,
     static_argnames=("n0", "d", "k", "frac", "bq", "use_ball", "use_cone",
                      "use_kernel", "interpret", "probe_tiles",
-                     "shard_bounds", "has_extra", "sort_planes"),
+                     "num_shards", "has_extra", "sort_planes"),
 )
-def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, *, n0, d,
-                 k, frac, bq, use_ball, use_cone, use_kernel, interpret,
-                 probe_tiles, shard_bounds, has_extra, sort_planes):
+def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, seg_shard,
+                 n_true, *, n0, d, k, frac, bq, use_ball, use_cone,
+                 use_kernel, interpret, probe_tiles, num_shards, has_extra,
+                 sort_planes):
     """One device program end to end: probe pass + main pass + in-launch
     global merge.
 
@@ -728,9 +788,17 @@ def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, *, n0, d,
     each visit list exactly once.  The cross-source finish --
     :func:`repro.core.search.merge_topk_planes` over the ``(N, B, k)``
     planes plus any ``extra`` candidate list (the delta scan's top-k) --
-    and the per-shard k-th reductions (``shard_bounds``: segments per
-    shard, the exchange's cache diagnostics) run inside the same jitted
+    and the per-shard k-th reductions run inside the same jitted
     program: callers get the final global top-k with no host merge.
+
+    Everything that churns under a mutable index is **dynamic**, so the
+    trace is shared across republishes: the segment axis is padded to a
+    :func:`_bucket_segments` bucket (dead pad rows: ``valid=False``,
+    ``n_leaves=0`` -> +inf node bounds, force-skipped), ``n_true`` (a
+    traced scalar) masks those rows out of the counters, and shard
+    membership arrives as the ``seg_shard`` vector (segment -> shard
+    index, -1 = pad) against a *static* shard count -- a shard-local
+    compaction changes values, not the trace.
     """
     from repro.core import search
     from repro.kernels import ref
@@ -745,6 +813,9 @@ def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, *, n0, d,
                             use_cone=use_cone)
     visit = ops["visit"]
     N, nqb, n_visit = visit.shape
+    true_row = jnp.arange(N) < n_true  # bucket-pad rows: swept (force-
+    #   skipped via +inf bounds) but never *counted* -- the counters must
+    #   match what an unpadded launch would report
     p = max(0, min(probe_tiles, n_visit))
     if has_extra:
         Bp = ops["cap"].shape[0]
@@ -781,23 +852,29 @@ def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, *, n0, d,
                                      cap=cap_b),
                               seed_d=da, seed_i=ia, global_seed=gseed)
         skips = skips_a + skips_b
-        probe_skips = jnp.sum(skips_a)
+        probe_skips = jnp.sum(
+            jnp.where(true_row[:, None, None], skips_a, 0))
     else:  # p == 0 (single pass) or p == n_visit (probe IS the sweep)
         bd, bi, skips = run(**ops, global_seed=gseed)
-        probe_skips = (jnp.sum(skips) if p else jnp.int32(0))
+        probe_skips = (jnp.sum(jnp.where(true_row[:, None, None],
+                                         skips, 0))
+                       if p else jnp.int32(0))
     # in-launch global merge: per-segment planes (+ the caller's extra
     # candidates, e.g. the delta scan) -> one (B, k) answer, no host merge
     fd, fi = search.merge_topk_planes(bd, bi, k, extra_d=extra_d,
                                       extra_i=extra_i)
     fd, fi = fd[:B0], fi[:B0]
     shard_kth = None
-    if shard_bounds:
-        rows, off = [], 0
-        for ns in shard_bounds:  # static per-shard segment counts
-            skd, _ = search.merge_topk_planes(bd[off:off + ns],
-                                              bi[off:off + ns], k)
+    if num_shards:
+        rows = []
+        for s in range(num_shards):  # static shard count; membership is
+            # the dynamic seg_shard vector, so a shard-local compaction
+            # (or bucket re-pad) changes values, never the trace
+            m = (seg_shard == s)[:, None, None]
+            skd, _ = search.merge_topk_planes(
+                jnp.where(m, bd, jnp.inf),
+                jnp.where(m, bi, -1), k)
             rows.append(skd[:B0, k - 1])
-            off += ns
         shard_kth = jnp.stack(rows)  # (S, B)
     if sort_planes:  # the planes API sorts; the fused query path's
         #              merge consumes them unsorted -- skip the work
@@ -812,11 +889,12 @@ def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, *, n0, d,
     # passes cover each (segment, block) visit list exactly once, so the
     # totals are pass-count independent.
     seg_skips = jnp.sum(skips, axis=(1, 2)).astype(jnp.int32)  # (N,)
-    total_skip = jnp.sum(seg_skips)
+    total_skip = jnp.sum(jnp.where(true_row, seg_skips, 0))
     counters = (jnp.zeros((8,), jnp.int32)
                 .at[3].set(jnp.int32(queries.shape[0])
                            * jnp.sum(stk.n_leaves).astype(jnp.int32))
-                .at[2].set(jnp.int32(N * nqb * n_visit) - total_skip)
+                .at[2].set(n_true.astype(jnp.int32)
+                           * jnp.int32(nqb * n_visit) - total_skip)
                 .at[7].set(total_skip))
     return bd, bi, fd, fi, counters, seg_skips, shard_kth, probe_skips
 
@@ -827,40 +905,227 @@ def _n_visit(stk: StackedLeaves, frac: float) -> int:
     return max(1, min(L, int(round(frac * L))))
 
 
-def resolve_probe_tiles(probe_tiles, n_visit: int) -> int:
-    """Clamp the probe knob to ``[0, n_visit]`` (``None`` -> the library
-    default ``STACKED_PROBE_TILES_DEFAULT``)."""
+def resolve_probe_tiles(probe_tiles, n_visit: int,
+                        route: str = "snapshot") -> int:
+    """Clamp the probe knob to ``[0, n_visit]``.  ``None`` resolves to
+    the *route's* default -- ``STACKED_PROBE_TILES_DEFAULT`` on the
+    snapshot route, ``STACKED_PROBE_TILES_ROUND2_DEFAULT`` (0: the
+    probe's cross-segment tightening is redundant under the exchange's
+    ``lambda0``) on round 2 of the two-round exchange."""
     if probe_tiles is None:
-        probe_tiles = STACKED_PROBE_TILES_DEFAULT
+        probe_tiles = (STACKED_PROBE_TILES_ROUND2_DEFAULT
+                       if route == "round2"
+                       else STACKED_PROBE_TILES_DEFAULT)
     return max(0, min(int(probe_tiles), n_visit))
+
+
+def _pad_rows(a, pad: int, fill):
+    """Append ``pad`` constant-filled rows along the leading axis."""
+    if pad == 0:
+        return a
+    w = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, w, constant_values=fill)
+
+
+def _bucketed_arrays(stk: StackedLeaves, *, use_kernel: bool):
+    """The launch's arrays dict with the segment axis padded to the
+    :func:`_bucket_segments` bucket.  Pad rows are dead (``valid=False``,
+    ``n_leaves=0``, ids -1) so the sweep force-skips them; the padded
+    geometry planes are memoized in ``_derived`` under ``geom:``-prefixed
+    keys (shared through tombstone republishes -- geometry never moves),
+    the ids-derived pads under plain keys (rebuilt when the planes do
+    move).  Returns ``(arrays, padded segment count)``."""
+    N = stk.num_segments
+    Np = _bucket_segments(N)
+    pad = Np - N
+    pts = stk.padded_pts() if use_kernel else stk.pts
+    if pad == 0:
+        return dict(pts=pts, ids=stk.ids, rx=stk.rx, xc=stk.xc,
+                    xs=stk.xs, leaf_centers=stk.leaf_centers,
+                    leaf_radii=stk.leaf_radii, leaf_cnorm=stk.leaf_cnorm,
+                    valid=stk.valid, n_leaves=stk.n_leaves), Np
+    gkey = f"geom:bucket:{Np}:{'lane' if use_kernel else 'raw'}"
+    geom = stk._derived.get(gkey)
+    if geom is None:
+        geom = dict(pts=_pad_rows(pts, pad, 0.0),
+                    rx=_pad_rows(stk.rx, pad, -1.0),
+                    xc=_pad_rows(stk.xc, pad, 0.0),
+                    xs=_pad_rows(stk.xs, pad, 0.0),
+                    leaf_centers=_pad_rows(stk.leaf_centers, pad, 0.0),
+                    leaf_radii=_pad_rows(stk.leaf_radii, pad, 0.0),
+                    leaf_cnorm=_pad_rows(stk.leaf_cnorm, pad, 0.0))
+        stk._derived[gkey] = geom
+    lkey = f"bucket:{Np}:ids"
+    live = stk._derived.get(lkey)
+    if live is None:
+        live = dict(ids=_pad_rows(stk.ids, pad, -1),
+                    valid=_pad_rows(stk.valid, pad, False),
+                    n_leaves=_pad_rows(stk.n_leaves, pad, 0))
+        stk._derived[lkey] = live
+    return {**geom, **live}, Np
+
+
+# ----------------------------------------------------------------------
+# compile-signature registry: every `_call_run_stacked` dispatch is
+# classified as a hit (an already-seen jit signature: shapes + statics)
+# or a miss (a fresh trace/compile).  The benches surface the totals and
+# the CI ratio fence leans on them; `warm_stacked` replays the recent
+# *templates* (signatures minus the stack's grid dims) against a
+# soon-to-be-published stack so the first query on a new epoch finds its
+# program compiled.
+# ----------------------------------------------------------------------
+_COMPILE_LOCK = threading.Lock()
+_COMPILE_SIGS: "dict[tuple, int]" = {}
+_COMPILE_STATS = {"misses": 0, "hits": 0,
+                  "warm_compiles": 0, "warm_hits": 0}
+_RECENT_TEMPLATES: "collections.OrderedDict[tuple, bool]" = \
+    collections.OrderedDict()
+_RECENT_TEMPLATES_SIZE = 16
+# last few query-path misses (full signatures) -- the thing you grep
+# when the timed-window miss counter is nonzero and you need to know
+# *which* shape slipped past the warmup
+_RECENT_MISSES: "collections.deque[tuple]" = collections.deque(maxlen=8)
+
+
+def _record_sig(sig: tuple, template: tuple, warm: bool) -> bool:
+    """Count one dispatch against the signature registry; remember the
+    template (LRU) unless this is itself a warmup call."""
+    with _COMPILE_LOCK:
+        known = sig in _COMPILE_SIGS
+        _COMPILE_SIGS[sig] = _COMPILE_SIGS.get(sig, 0) + 1
+        if warm:
+            _COMPILE_STATS["warm_hits" if known else "warm_compiles"] += 1
+        else:
+            _COMPILE_STATS["hits" if known else "misses"] += 1
+            if not known:
+                _RECENT_MISSES.append(sig)
+            _RECENT_TEMPLATES.pop(template, None)
+            _RECENT_TEMPLATES[template] = True
+            while len(_RECENT_TEMPLATES) > _RECENT_TEMPLATES_SIZE:
+                _RECENT_TEMPLATES.popitem(last=False)
+        return known
+
+
+def stacked_compile_stats() -> dict:
+    """Registry counters: ``misses``/``hits`` (serving dispatches that
+    did / did not need a fresh trace), ``warm_compiles``/``warm_hits``
+    (same, for :func:`warm_stacked` replays), plus the bench-facing
+    aliases ``compile_count`` (all fresh traces, warm included -- warm
+    ones are *off* the query path, which is the point) and ``cache_hit``
+    (serving hits)."""
+    with _COMPILE_LOCK:
+        st = dict(_COMPILE_STATS)
+        st["signatures"] = len(_COMPILE_SIGS)
+        st["recent_misses"] = list(_RECENT_MISSES)
+    st["compile_count"] = st["misses"] + st["warm_compiles"]
+    st["cache_hit"] = st["hits"]
+    return st
+
+
+def reset_stacked_compile_stats(full: bool = False) -> None:
+    """Zero the counters; ``full=True`` also forgets the seen signatures
+    and recent templates (a from-cold registry, for tests)."""
+    with _COMPILE_LOCK:
+        for key in _COMPILE_STATS:
+            _COMPILE_STATS[key] = 0
+        _RECENT_MISSES.clear()
+        if full:
+            _COMPILE_SIGS.clear()
+            _RECENT_TEMPLATES.clear()
 
 
 def _call_run_stacked(stk: StackedLeaves, queries, k, *, frac, bq,
                       use_ball, use_cone, lambda_cap, probe_tiles,
-                      extra_d=None, extra_i=None, shard_bounds=None,
-                      use_kernel=None, interpret=None, sort_planes=True):
+                      probe_route="snapshot", extra_d=None, extra_i=None,
+                      shard_bounds=None, use_kernel=None, interpret=None,
+                      sort_planes=True, _warm=False):
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    p = resolve_probe_tiles(probe_tiles, _n_visit(stk, frac))
-    arrays = dict(pts=stk.padded_pts() if use_kernel else stk.pts,
-                  ids=stk.ids, rx=stk.rx, xc=stk.xc,
-                  xs=stk.xs, leaf_centers=stk.leaf_centers,
-                  leaf_radii=stk.leaf_radii, leaf_cnorm=stk.leaf_cnorm,
-                  valid=stk.valid, n_leaves=stk.n_leaves)
+    p = resolve_probe_tiles(probe_tiles, _n_visit(stk, frac),
+                            route=probe_route)
+    N = stk.num_segments
+    arrays, Np = _bucketed_arrays(stk, use_kernel=bool(use_kernel))
+    bounds = tuple(int(x) for x in shard_bounds) if shard_bounds else ()
+    num_shards = len(bounds)
+    seg_shard = np.full((Np,), -1, np.int32)
+    if bounds:
+        assert sum(bounds) == N, (bounds, N)
+        seg_shard[:N] = np.repeat(
+            np.arange(num_shards, dtype=np.int32), bounds)
     has_extra = extra_d is not None
-    out = _run_stacked(arrays, jnp.atleast_2d(queries), lambda_cap,
+    q2 = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+    B = int(q2.shape[0])
+    extra_k = int(extra_d.shape[1]) if has_extra else 0
+    has_cap = lambda_cap is not None
+    # the template omits the stack's grid dims (what warm_stacked fills
+    # in from the stack it warms) and keeps the *requested* probe knob
+    # (re-resolved per stack); the signature mirrors the jit cache key:
+    # statics + every dynamic shape.
+    template = (B, k, float(frac), int(bq), bool(use_ball),
+                bool(use_cone), bool(use_kernel), bool(interpret),
+                None if probe_tiles is None else int(probe_tiles),
+                probe_route, num_shards, has_extra, extra_k, has_cap,
+                bool(sort_planes))
+    sig = (Np, stk.num_tiles, stk.n0, stk.d, B, k, float(frac), int(bq),
+           bool(use_ball), bool(use_cone), bool(use_kernel),
+           bool(interpret), p, num_shards, has_extra, extra_k, has_cap,
+           bool(sort_planes))
+    _record_sig(sig, template, _warm)
+    out = _run_stacked(arrays, q2, lambda_cap,
                        extra_d if has_extra else None,
                        extra_i if has_extra else None,
+                       jnp.asarray(seg_shard), np.int32(N),
                        n0=stk.n0, d=stk.d, k=k, frac=frac, bq=bq,
                        use_ball=use_ball, use_cone=use_cone,
                        use_kernel=bool(use_kernel),
                        interpret=bool(interpret), probe_tiles=p,
-                       shard_bounds=(tuple(shard_bounds)
-                                     if shard_bounds else ()),
+                       num_shards=num_shards,
                        has_extra=has_extra, sort_planes=sort_planes)
+    if Np != N:  # per-segment outputs slice back to the true rows
+        bd, bi, fd, fi, counters, seg_skips, shard_kth, probe_skips = out
+        out = (bd[:N], bi[:N], fd, fi, counters, seg_skips[:N],
+               shard_kth, probe_skips)
     return out, p
+
+
+def warm_stacked(stk: StackedLeaves, templates=None) -> int:
+    """Pre-compile the stacked programs a soon-to-be-published stack will
+    be queried through: replay ``templates`` (default: the registry's
+    recently-seen ones) against ``stk`` with throwaway operands, so the
+    jit cache is hot before the first real query lands.  Dummy caps are
+    ``+inf`` arrays and dummy extras empty (+inf/-1) lists -- same
+    shapes/tree-structure as serving, so the same trace; shard layout is
+    fabricated (membership is dynamic, only the shard *count* shapes the
+    program).  Returns the number of templates replayed."""
+    if templates is None:
+        with _COMPILE_LOCK:
+            templates = list(_RECENT_TEMPLATES)
+    n = 0
+    for t in templates:
+        (B, k, frac, bq, use_ball, use_cone, use_kernel, interpret,
+         probe_tiles, probe_route, num_shards, has_extra, extra_k,
+         has_cap, sort_planes) = t
+        q = np.ones((B, stk.d), np.float32)
+        cap = np.full((B,), np.inf, np.float32) if has_cap else None
+        ed = (np.full((B, extra_k), np.inf, np.float32)
+              if has_extra else None)
+        ei = np.full((B, extra_k), -1, np.int32) if has_extra else None
+        sb = (([stk.num_segments] + [0] * (num_shards - 1))
+              if num_shards else None)
+        try:
+            _call_run_stacked(
+                stk, q, k, frac=frac, bq=bq, use_ball=use_ball,
+                use_cone=use_cone, lambda_cap=cap,
+                probe_tiles=probe_tiles, probe_route=probe_route,
+                extra_d=ed, extra_i=ei, shard_bounds=sb,
+                use_kernel=use_kernel, interpret=interpret,
+                sort_planes=sort_planes, _warm=True)
+            n += 1
+        except Exception:  # warmup must never break a publish
+            continue
+    return n
 
 
 def stacked_sweep_search(stk: StackedLeaves, queries, k: int = 1, *,
@@ -895,6 +1160,7 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
                         frac: float = 1.0, bq: int = 8,
                         use_ball: bool = True, use_cone: bool = True,
                         lambda_cap=None, probe_tiles: int | None = None,
+                        probe_route: str = "snapshot",
                         extra_d=None, extra_i=None, shard_bounds=None,
                         use_kernel: bool | None = None,
                         interpret: bool | None = None):
@@ -906,10 +1172,11 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
     top-k), with no host-side per-segment merge.  ``extra`` must hold
     real, de-duplicated candidates *disjoint from every segment* (the
     delta/segment split guarantees this): they also seed the in-launch
-    global top-k, so duplicates would break the threshold's validity.  ``probe_tiles=None``
-    resolves to :data:`STACKED_PROBE_TILES_DEFAULT`; 0 degenerates to
-    the single-pass sweep, >= the visit-list length makes the probe pass
-    the full sweep.  ``shard_bounds`` (optional, segments per shard in
+    global top-k, so duplicates would break the threshold's validity.
+    ``probe_tiles=None`` resolves to ``probe_route``'s default
+    (:func:`resolve_probe_tiles`); 0 degenerates to the single-pass
+    sweep, >= the visit-list length makes the probe pass the full
+    sweep.  ``shard_bounds`` (optional, segments per shard in
     stack order) additionally reduces per-shard merged k-ths on device
     (``info["shard_kth"]``, the exchange's lambda-cache diagnostic).
 
@@ -924,6 +1191,7 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
                                use_ball=use_ball, use_cone=use_cone,
                                lambda_cap=lambda_cap,
                                probe_tiles=probe_tiles,
+                               probe_route=probe_route,
                                extra_d=extra_d, extra_i=extra_i,
                                shard_bounds=shard_bounds,
                                use_kernel=use_kernel, interpret=interpret,

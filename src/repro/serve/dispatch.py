@@ -84,8 +84,14 @@ class DispatchPolicy:
     # probe-pass width of the two-pass stacked program: pass A sweeps
     # this many preference-ordered tiles per (segment, query block), the
     # merged probe k-th tightens the cap pass B prunes against.  None =
-    # the library default (STACKED_PROBE_TILES_DEFAULT); 0 = single-pass
-    # (the pre-probe behavior).  The crossover is refit against the
+    # the *per-route* library default: STACKED_PROBE_TILES_DEFAULT on
+    # the snapshot route (the probe's cap-tightening pays for itself
+    # there), STACKED_PROBE_TILES_ROUND2_DEFAULT = 0 (single-pass) on
+    # the exchange's round-2 route, which already enters with the
+    # exchanged lambda0 -- the same tightening the probe would recreate
+    # (measured on the sharded bench config: ~0 probe-induced live
+    # skips, probe_speedup_p50 = 0.94, a net loss).  0 = force
+    # single-pass everywhere.  The crossover is refit against the
     # registered bench configs -- bench_serve / bench_stream_sharded
     # sweep the knob and report p50 + live-tile skips per setting.
     probe_tiles: int | None = None

@@ -310,6 +310,12 @@ class P2HEngine:
         }
         if self.cache is not None:
             out["lambda_cache"] = self.cache.stats()
+        admission = getattr(self.mutable, "admission_stats", None)
+        if callable(admission):
+            # write-admission counters (seals/stalls/pending) from the
+            # mutable index: the serving-side view of whether compaction
+            # backpressure ever stalled an acknowledged write
+            out["admission"] = admission()
         return out
 
     def reset_stats(self):

@@ -48,6 +48,12 @@ class CompactionPolicy:
     tombstone_frac: float = 0.25  # dead/total per segment before rewrite
     max_segments: int = 4  # segment-stack depth before a full merge
     min_flush: int = 1  # don't build trees over fewer live rows
+    # admission control: a writer hitting a full delta while the
+    # background compactor is busy seals the delta and keeps going, up
+    # to this many sealed-but-unconsumed buffers; past it the writer
+    # blocks (bounded memory) -- the only place backpressure may stall
+    # an acknowledged write
+    max_pending_seals: int = 2
 
     def plan(self, *, delta_full: bool, delta_live: int,
              segments) -> CompactionPlan:

@@ -31,6 +31,7 @@ replaying a write log.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -97,6 +98,19 @@ class MutableP2HIndex:
         self._pending_tombstones: set[int] = set()
         self._compact_errors: list[BaseException] = []
         self.compaction_log: list[dict] = []  # wall/rows/reason per run
+        self._tl = threading.local()  # delete-path compaction tripwire
+        self._admission = {"seals": 0, "stalls": 0}  # write admission
+        #: optional callable(prebuilt StackedLeaves) the compactor runs
+        #: during pre-publish warmup -- the sharded front-end hooks this
+        #: to also pre-compile the cross-shard round-2 program
+        self._warmup_hook = None
+        #: optional threading.Lock shared by every shard of a sharded
+        #: front-end: held from pre-publish warmup through the epoch
+        #: flip, it serializes concurrent shard publishes so each warmup
+        #: predicts the cross-shard composition it will actually publish
+        #: into (compactions overlap ~80% under heavy churn; without the
+        #: gate, two racing publishes warm each other's stale state)
+        self._publish_gate = None
 
         self._background = bool(background)
         self._stop = False
@@ -197,7 +211,20 @@ class MutableP2HIndex:
             self._raise_compact_errors_locked()  # don't spin forever
             if self._background:
                 self._compact_event.set()
-                self._cond.wait(timeout=1.0)  # compactor republishes
+                if len(self._sealed) < self.policy.max_pending_seals:
+                    # admission control: seal the full delta and keep
+                    # writing into a fresh one instead of stalling the
+                    # acknowledged write behind the compactor.  Sealed
+                    # buffers stay queryable (snapshot delta views) and
+                    # deletable (the locator walks them); the compactor
+                    # consumes them like failure leftovers.
+                    self._sealed.append(self._delta)
+                    self._delta = DeltaBuffer(self.policy.delta_capacity,
+                                              self.d)
+                    self._admission["seals"] += 1
+                else:
+                    self._admission["stalls"] += 1
+                    self._cond.wait(timeout=1.0)  # compactor republishes
             else:
                 self._compact_locked(self._plan_locked())
         if gid is None:
@@ -214,29 +241,45 @@ class MutableP2HIndex:
         return gid
 
     def delete(self, gid: int) -> bool:
-        """Delete by global id; returns False if the id is not live."""
+        """Delete by global id; returns False if the id is not live.
+
+        O(tombstone flip) + one snapshot publish.  Compaction is *never*
+        run on this thread (the old inline ``_maybe_compact_locked`` here
+        was the delete-p99 cliff: one unlucky delete paid a full rebuild
+        under the writer lock): background mode signals the compactor
+        thread, inline mode defers to the next insert / ``compact()``
+        call.  A tripwire in ``_pin_inputs_locked`` asserts the
+        invariant."""
         gid = int(gid)
-        with self._lock:
-            loc = self._locator.pop(gid, None)
-            if loc is None:
-                return False
-            if loc[0] == "delta":
-                _, buf_id, row = loc
-                for buf in [self._delta, *self._sealed]:
-                    if id(buf) == buf_id:
-                        buf.tombstone(row)
-                        break
-            else:
-                _, uid, local = loc
-                self._segments[uid] = self._segments[uid].with_tombstone(local)
-            if self._compacting:
-                # the in-flight compaction copied its input rows before
-                # this delete; re-apply it to the output at publish time
-                self._pending_tombstones.add(gid)
-            self._live_count -= 1
-            self._last_delete_epoch = self._epoch + 1  # epoch after publish
-            self._publish()
-            self._maybe_compact_locked()
+        self._tl.in_delete = True
+        try:
+            with self._lock:
+                loc = self._locator.pop(gid, None)
+                if loc is None:
+                    return False
+                if loc[0] == "delta":
+                    _, buf_id, row = loc
+                    for buf in [self._delta, *self._sealed]:
+                        if id(buf) == buf_id:
+                            buf.tombstone(row)
+                            break
+                else:
+                    _, uid, local = loc
+                    self._segments[uid] = \
+                        self._segments[uid].with_tombstone(local)
+                if self._compacting:
+                    # the in-flight compaction copied its input rows
+                    # before this delete; re-apply it to the output at
+                    # publish time
+                    self._pending_tombstones.add(gid)
+                self._live_count -= 1
+                self._last_delete_epoch = self._epoch + 1  # post-publish
+                self._publish()
+                if (self._background and not self._compacting
+                        and self._plan_locked()):
+                    self._compact_event.set()
+        finally:
+            self._tl.in_delete = False
         return True
 
     # ------------------------------------------------------------------
@@ -257,6 +300,15 @@ class MutableP2HIndex:
     @property
     def max_norm(self) -> float:
         return self._snapshot.max_norm
+
+    def admission_stats(self) -> dict:
+        """Write-admission counters: ``seals`` (full deltas sealed
+        without blocking the writer), ``stalls`` (writer had to wait for
+        the compactor -- only once ``max_pending_seals`` sealed buffers
+        piled up), ``pending_seals`` (current backlog)."""
+        with self._lock:
+            return dict(self._admission,
+                        pending_seals=len(self._sealed))
 
     def query(self, queries, k: int = 1, *, method: str | None = None,
               frac: float = 1.0, normalize: bool = True,
@@ -368,10 +420,39 @@ class MutableP2HIndex:
                     if not plan or self._compacting:
                         continue
                     pin = self._pin_inputs_locked(plan)
+                # row copies, the tree build and the stacked-program
+                # pre-compilation all run OFF the writer lock: raced
+                # deletes land in _pending_tombstones (re-applied to the
+                # built segment, by gid, at publish)
+                self._collect_pinned_rows(pin)
                 built = self._build_segment(pin)
-                with self._lock:
-                    self._publish_compaction_locked(pin, built)
-                    self._cond.notify_all()
+                # the gate (shared across a sharded front-end's shards)
+                # makes warm-then-flip atomic w.r.t. other shards'
+                # publishes: the warmup's predicted cross-shard
+                # composition IS the one this publish creates
+                gate = self._publish_gate or contextlib.nullcontext()
+                with gate:
+                    prepub = self._prewarm_publish(pin, built)
+                    with self._lock:
+                        self._publish_compaction_locked(pin, built,
+                                                        prepub=prepub)
+                        if self._plan_locked():
+                            # admission seals (or churn) accumulated
+                            # while this run was in flight: keep draining
+                            self._compact_event.set()
+                        self._cond.notify_all()
+                # post-publish re-warm (outside the gate): ungated
+                # publishes -- deletes, seals -- may still have raced the
+                # warmup; re-running the hook against the now-published
+                # stack closes that window to publish-vs-first-query
+                # (still on this thread, off the lock, best-effort)
+                hook = self._warmup_hook
+                if hook is not None and prepub is not None \
+                        and prepub.get("stacked") is not None:
+                    try:
+                        hook(prepub["stacked"])
+                    except Exception:
+                        pass
             except BaseException as e:
                 # never die wedged: writers blocked on _compacting would
                 # hang forever.  Pinned buffers stay in _sealed (still
@@ -392,17 +473,22 @@ class MutableP2HIndex:
         if not plan:
             return
         pin = self._pin_inputs_locked(plan)
+        self._collect_pinned_rows(pin)
         built = self._build_segment(pin)
         self._publish_compaction_locked(pin, built)
         self._cond.notify_all()
 
     # -- compaction phases (pin/build/publish) --------------------------
     def _pin_inputs_locked(self, plan: CompactionPlan) -> dict:
-        """Seal the delta (if consumed) and collect live input rows.
+        """Seal the delta (if consumed) and capture input *references*
+        -- O(1) under the lock; the row copies happen in
+        :meth:`_collect_pinned_rows`, outside it in background mode.
 
-        Any buffers already in ``_sealed`` are leftovers of a failed
-        background run; every compaction re-consumes them so their rows
-        eventually land in a segment."""
+        Any buffers already in ``_sealed`` are admission seals or
+        leftovers of a failed background run; every compaction
+        re-consumes them so their rows eventually land in a segment."""
+        assert not getattr(self._tl, "in_delete", False), \
+            "compaction must never run on a delete caller's thread"
         t0 = time.perf_counter()
         pinned = list(self._sealed)
         if plan.include_delta:
@@ -410,22 +496,33 @@ class MutableP2HIndex:
             self._sealed.append(buf)
             self._delta = DeltaBuffer(self.policy.delta_capacity, self.d)
             pinned.append(buf)
+        # pinned segment objects, not uids: deletes that race the build
+        # replace self._segments entries with re-tombstoned copies, and
+        # those deletes are re-applied by gid at publish anyway
+        segs = [self._segments[uid] for uid in plan.segment_uids]
+        self._compacting = True
+        self._pending_tombstones = set()
+        return dict(plan=plan, bufs=pinned, segs=segs, t0=t0)
+
+    def _collect_pinned_rows(self, pin: dict) -> None:
+        """Copy the pinned inputs' live rows into ``pin`` -- safe off
+        the lock once ``_compacting`` is set: pinned segments are
+        immutable objects, pinned buffers only receive single-word
+        tombstone writes, and any delete that races either lands in
+        ``_pending_tombstones`` and is re-applied by gid at publish."""
         parts_p, parts_g = [], []
-        for buf in pinned:
+        for buf in pin["bufs"]:
             p, g = buf.live_rows()
             parts_p.append(p)
             parts_g.append(g)
-        for uid in plan.segment_uids:
-            p, g = self._segments[uid].live_rows()
+        for seg in pin["segs"]:
+            p, g = seg.live_rows()
             parts_p.append(p)
             parts_g.append(g)
-        self._compacting = True
-        self._pending_tombstones = set()
-        return dict(plan=plan, bufs=pinned, t0=t0,
-                    points=(np.concatenate(parts_p) if parts_p
-                            else np.zeros((0, self.d), np.float32)),
-                    gids=(np.concatenate(parts_g) if parts_g
-                          else np.zeros((0,), np.int32)))
+        pin["points"] = (np.concatenate(parts_p) if parts_p
+                         else np.zeros((0, self.d), np.float32))
+        pin["gids"] = (np.concatenate(parts_g) if parts_g
+                       else np.zeros((0,), np.int32))
 
     def _build_segment(self, pin: dict) -> Segment | None:
         """Tree build over the pinned rows -- runs outside the lock in
@@ -436,14 +533,73 @@ class MutableP2HIndex:
                                    pin["gids"], n0=self.n0,
                                    seed=self.seed + self._epoch + 1)
 
+    def _prewarm_publish(self, pin: dict, built: Segment | None):
+        """Pre-compilation of the post-compaction stacked state, run by
+        the *background* compactor off the lock, before the publish
+        flips the epoch: predict the post-publish segment set, stack it,
+        replay the recently-seen query templates against it
+        (:func:`repro.kernels.stacked_sweep.warm_stacked`), and prebuild
+        the new segment's locator entries so the publish's lock hold is
+        one dict update instead of a Python loop.  Only the compactor
+        mutates the segment *set* while ``_compacting`` is held (deletes
+        only replace objects), so the prediction can only go stale in
+        ways :meth:`Snapshot.adopt_prebuilt_stacked` re-diffs.
+        Best-effort: any failure just means the first post-publish query
+        pays the compile, as before."""
+        try:
+            from repro.kernels.stacked_sweep import (StackedLeaves,
+                                                     warm_stacked)
+
+            plan: CompactionPlan = pin["plan"]
+            with self._lock:
+                segs = [seg for uid, seg in self._segments.items()
+                        if uid not in plan.segment_uids]
+            if built is not None:
+                segs.append(built)
+            prepub = dict(stacked=None, sources=None, locator=None,
+                          warmed=0)
+            if segs:
+                stk = StackedLeaves.from_segments(segs)
+                prepub.update(stacked=stk, sources=tuple(segs))
+                hook = self._warmup_hook
+                if hook is None:
+                    # single-host: the shard-local stack IS the serving
+                    # program -- warm it
+                    prepub["warmed"] = warm_stacked(stk)
+                else:
+                    # sharded: serving always goes through the hook's
+                    # cross-shard concatenation; compiling the never-
+                    # dispatched shard-local program would only burn CPU
+                    # next to the query path
+                    try:
+                        hook(stk)
+                        prepub["warmed"] += 1
+                    except Exception:
+                        pass
+            if built is not None:
+                # the exchange's round 1 beams each segment tree with its
+                # own shape-keyed program; warm it for the new tree too,
+                # or the first post-publish exchange compiles on-path
+                from repro.core.distributed import warm_round1
+                prepub["warmed"] += warm_round1(
+                    built.tree, is_bc=(self.variant == "bc"))
+                pid = np.asarray(built.tree.point_ids)
+                prepub["locator"] = {
+                    int(built.gids[local]): ("seg", built.uid, int(local))
+                    for local in pid[pid >= 0]}
+            return prepub
+        except Exception:
+            return None  # warmup must never break the compaction
+
     def _publish_compaction_locked(self, pin: dict,
-                                   built: Segment | None) -> None:
+                                   built: Segment | None,
+                                   prepub: dict | None = None) -> None:
         plan: CompactionPlan = pin["plan"]
-        if built is not None and self._pending_tombstones:
+        dead_gids = self._pending_tombstones
+        if built is not None and dead_gids:
             # deletes that raced the build: mask them in the new segment
             # (vectorized -- this runs under the writer lock)
-            dead = np.fromiter(self._pending_tombstones, np.int64,
-                               len(self._pending_tombstones))
+            dead = np.fromiter(dead_gids, np.int64, len(dead_gids))
             locals_ = np.nonzero(np.isin(built.gids, dead))[0]
             built = built.with_tombstones(locals_)
         for buf in pin["bufs"]:
@@ -452,14 +608,19 @@ class MutableP2HIndex:
             del self._segments[uid]
         if built is not None:
             self._segments[built.uid] = built
-            pid = np.asarray(built.tree.point_ids)
-            live_locals = pid[pid >= 0]
-            for local in live_locals:
-                self._locator[int(built.gids[local])] = (
-                    "seg", built.uid, int(local))
+            loc = (prepub.get("locator")
+                   if prepub is not None else None)
+            if loc is None:
+                pid = np.asarray(built.tree.point_ids)
+                loc = {int(built.gids[local]): ("seg", built.uid,
+                                                int(local))
+                       for local in pid[pid >= 0]}
+            for gid in dead_gids:  # never resurrect a raced delete
+                loc.pop(gid, None)
+            self._locator.update(loc)
         self._compacting = False
         self._pending_tombstones = set()
-        self._publish()
+        self._publish(prepub=prepub)
         t1 = time.perf_counter()
         self.compaction_log.append(dict(
             wall_s=t1 - pin["t0"],
@@ -470,6 +631,7 @@ class MutableP2HIndex:
             rows=int(len(pin["gids"])),
             reason=plan.reason,
             epoch=self._epoch,
+            warmed=(0 if prepub is None else int(prepub["warmed"])),
         ))
 
     # ------------------------------------------------------------------
@@ -494,7 +656,7 @@ class MutableP2HIndex:
             d=self.d,
         )
 
-    def _publish(self) -> None:
+    def _publish(self, prepub: dict | None = None) -> None:
         """Atomic snapshot swap (caller holds the lock).  The new
         snapshot adopts the previous one's stacked-leaf cache when the
         segment set allows it (delta-only publishes reuse it as-is,
@@ -502,11 +664,17 @@ class MutableP2HIndex:
         stack's derived probe operands, e.g. the lane-padded points
         plane, ride along because geometry is shared), so the
         segment-parallel sweep pays its stacking + padding cost once per
-        compaction, not once per publish."""
+        compaction, not once per publish.  A compaction publish passes
+        the compactor's pre-built *and pre-warmed* stack (``prepub``):
+        adopting it means the first query on the new epoch hits a
+        program that was compiled off the query path."""
         self._epoch += 1
         prev = self._snapshot
         snap = self._make_snapshot()
         snap.adopt_stacked_from(prev)
+        if prepub is not None and prepub.get("stacked") is not None:
+            snap.adopt_prebuilt_stacked(prepub["stacked"],
+                                        prepub["sources"])
         self._snapshot = snap
 
     # ------------------------------------------------------------------

@@ -49,6 +49,7 @@ what lets per-shard write throughput scale with the shard count.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 import threading
 from typing import Any
@@ -135,6 +136,16 @@ class ShardedMutableP2HIndex:
         self._gid_lock = threading.Lock()
         self._next_gid = max((sh._next_gid for sh in self.shards),
                              default=0)
+        # pre-publish warmup: when shard i's compactor pre-compiles its
+        # post-compaction stack, also pre-compile the *cross-shard*
+        # round-2 program that stack will participate in.  One shared
+        # publish gate serializes warm-then-flip across shards, so the
+        # composition each warmup compiles is the one it publishes into
+        # (shard compactions overlap heavily under churn)
+        gate = threading.Lock()
+        for s, sh in enumerate(self.shards):
+            sh._warmup_hook = functools.partial(self._prepublish_warm, s)
+            sh._publish_gate = gate
 
     # ------------------------------------------------------------------
     @classmethod
@@ -194,6 +205,40 @@ class ShardedMutableP2HIndex:
         """Delete by global id, forwarded to the owning shard; returns
         False if the id is not live."""
         return self.shards[self.router.shard_of(gid)].delete(gid)
+
+    def _prepublish_warm(self, shard_idx: int, prebuilt_stk) -> None:
+        """Compactor warmup hook (runs on shard ``shard_idx``'s
+        background thread, off every lock): predict the cross-shard
+        stack the two-round exchange will concatenate once this shard
+        publishes -- the *other* shards' current stacks with
+        ``prebuilt_stk`` in this shard's slot, same order as
+        ``_stacked_round2`` -- and replay the recent query templates
+        against it, so the first post-publish cross-shard query finds
+        its round-2 program compiled.  Best-effort by contract (the
+        caller swallows exceptions); other shards may republish before
+        the flip, in which case this warms a stale-but-bucketed shape
+        and the miss falls back to query-path compile as before."""
+        from repro.kernels.stacked_sweep import concat_cached, warm_stacked
+
+        stks = []
+        for s, sh in enumerate(self.shards):
+            if s == shard_idx:
+                stks.append(prebuilt_stk)
+                continue
+            snap = sh.snapshot()
+            if snap.segments:
+                stks.append(snap.stacked_leaves())
+        if stks:
+            warm_stacked(concat_cached(stks))
+
+    def admission_stats(self) -> dict:
+        """Cross-shard write-admission counters (sums of each shard's
+        :meth:`MutableP2HIndex.admission_stats`)."""
+        out = {"seals": 0, "stalls": 0, "pending_seals": 0}
+        for sh in self.shards:
+            for key, val in sh.admission_stats().items():
+                out[key] += val
+        return out
 
     # ------------------------------------------------------------------
     # read path (epoch-vector pinned)
@@ -373,6 +418,7 @@ class ShardedMutableP2HIndex:
             "num_shards": self.num_shards,
             "live_count": sum(p.live_count for p in pins),
             "epoch": tuple(p.epoch for p in pins),
+            "admission": self.admission_stats(),
             "per_shard": [
                 {"live": p.live_count, "epoch": p.epoch,
                  "segments": len(p.segments),

@@ -86,10 +86,20 @@ class Segment:
     @classmethod
     def from_points(cls, uid: int, points: np.ndarray, gids: np.ndarray,
                     *, n0: int, seed: int = 0) -> "Segment":
-        """Seal a batch of already-appended (n, d) points into a tree."""
-        from repro.core.balltree import build_tree
+        """Seal a batch of already-appended (n, d) points into a tree.
+
+        The leaf count is padded to a quantum so successive compactions
+        (whose row counts drift by a few percent) land on already-
+        compiled sweep/exchange program shapes instead of forcing a
+        fresh XLA trace per republish -- background compiles next to
+        the query path are what the p99 tail is made of."""
+        from repro.core.balltree import (build_tree, leaf_pad_quantum,
+                                         pad_tree_leaves)
 
         tree = build_tree(points, n0=n0, seed=seed, append_one=False)
+        quantum = leaf_pad_quantum(tree.num_leaves)
+        tree = pad_tree_leaves(
+            tree, -(-tree.num_leaves // quantum) * quantum)
         pid = np.asarray(tree.point_ids)
         row_of_local = np.full((len(gids),), -1, np.int32)
         rows = np.nonzero(pid >= 0)[0]
@@ -168,12 +178,22 @@ class Snapshot:
         snapshot: segments are immutable, so stacking is a one-time cost
         per compaction -- the mutable index carries the memo forward
         across publishes (:meth:`adopt_stacked_from`), and tombstone
-        republishes rewrite only the changed ids planes."""
+        republishes rewrite only the changed ids planes.  The rewrite is
+        applied **lazily** here, on first stacked access: a base stack
+        plus pending ids-plane diffs travel through publishes as plain
+        Python references, so the publish path (and in particular the
+        delete path, which republishes per tombstone) never dispatches
+        device work."""
         stk = self.__dict__.get("_stacked")
         if stk is None and self.segments:
-            from repro.kernels.stacked_sweep import StackedLeaves
+            base = self.__dict__.get("_stacked_base")
+            if base is not None:
+                stk = base.with_updated_ids(
+                    self.__dict__.get("_stacked_pending") or {})
+            else:
+                from repro.kernels.stacked_sweep import StackedLeaves
 
-            stk = StackedLeaves.from_segments(self.segments)
+                stk = StackedLeaves.from_segments(self.segments)
             object.__setattr__(self, "_stacked", stk)
         return stk
 
@@ -181,22 +201,57 @@ class Snapshot:
         """Carry ``prev``'s stacked-leaf memo forward when the segment
         set allows it (publish-time hook of the mutable index): same
         uids + unchanged geometry means delta-only publishes reuse the
-        stack as-is and tombstone publishes swap just the ids planes."""
-        stk = prev.__dict__.get("_stacked") if prev is not None else None
-        if stk is None or len(self.segments) != len(prev.segments):
+        stack as-is and tombstone publishes defer an ids-plane diff for
+        :meth:`stacked_leaves` to apply on first access.  Pure Python --
+        publish stays O(changed segments) bookkeeping."""
+        if prev is None:
             return
-        if tuple(s.uid for s in self.segments) != stk.uids:
+        base = prev.__dict__.get("_stacked")
+        pending = {}
+        if base is None:
+            base = prev.__dict__.get("_stacked_base")
+            pending = dict(prev.__dict__.get("_stacked_pending") or {})
+        if base is None or len(self.segments) != len(prev.segments):
+            return
+        if tuple(s.uid for s in self.segments) != base.uids:
             return  # compaction changed the set: rebuild lazily
-        changed = {}
         for i, (new, old) in enumerate(zip(self.segments, prev.segments)):
             if new is old:
                 continue
             if new.tree.points is not old.tree.points:
                 return  # geometry rewrite: rebuild lazily
-            changed[i] = new
-        if changed:
-            stk = stk.with_updated_ids(changed)
-        object.__setattr__(self, "_stacked", stk)
+            pending[i] = new  # latest plane wins over an older diff
+        if pending:
+            object.__setattr__(self, "_stacked_base", base)
+            object.__setattr__(self, "_stacked_pending", pending)
+        else:
+            object.__setattr__(self, "_stacked", base)
+
+    def adopt_prebuilt_stacked(self, stk, sources) -> bool:
+        """Adopt a stack the background compactor built (and pre-warmed)
+        *before* the publish flipped the epoch.  ``sources`` are the
+        segments ``stk`` was stacked from; any segment that moved on
+        since (a tombstone raced the prewarm) becomes a pending ids-plane
+        diff, exactly like :meth:`adopt_stacked_from`.  Returns False --
+        leaving the lazy-rebuild path in charge -- when the published
+        segment set no longer matches the prebuilt stack."""
+        if stk is None or len(sources) != len(self.segments):
+            return False
+        if tuple(s.uid for s in self.segments) != stk.uids:
+            return False
+        pending = {}
+        for i, (new, old) in enumerate(zip(self.segments, sources)):
+            if new is old:
+                continue
+            if new.tree.points is not old.tree.points:
+                return False
+            pending[i] = new
+        if pending:
+            object.__setattr__(self, "_stacked_base", stk)
+            object.__setattr__(self, "_stacked_pending", pending)
+        else:
+            object.__setattr__(self, "_stacked", stk)
+        return True
 
     def live_points(self):
         """The live set as ``(points (n, d), gids (n,))`` host arrays --

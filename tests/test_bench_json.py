@@ -1,7 +1,8 @@
 """Fence for the bench-trajectory tooling: ``tools/check_bench_json.py``
 must accept a schema-complete ``BENCH_*.json`` and reject missing files,
-malformed JSON, and documents that lost required keys -- the CI
-bench-smoke lane leans on these exit codes."""
+malformed JSON, documents that lost required keys, and tail-latency
+blowups (p99/p50 past ``--max-p99-p50-ratio``) -- the CI bench-smoke
+lane leans on these exit codes."""
 import json
 import os
 import sys
@@ -20,12 +21,35 @@ def _minimal_serve():
     prof = {"skip_frac": 0.1}
     return {
         "naive": num, "cold": num, "warm": num,
+        "compile_count": 2, "cache_hit": 5,
         "stacked": {
-            "fanout": 6, "seq": mode, "pr4": mode, "stacked": mode,
-            "best_probe_mode": "stacked",
+            "fanout": 6, "mode_seq": mode, "mode_pr4": mode,
+            "mode_stacked": mode,
+            "best_probe_mode": "mode_stacked",
             "skip_profile": {"seq": prof,
                              "stacked": {**prof, "probe": probe}},
         },
+    }
+
+
+def _minimal_stream_sharded():
+    """Smallest document satisfying the BENCH_stream_sharded.json
+    schema, with healthy (ratio-passing) tails."""
+    prof = {"skip_frac": 0.1}
+    return {
+        "shards": 4, "write_ops_per_s": 100.0,
+        "query_p50_ms": 10.0, "query_p99_ms": 40.0,
+        "delete_p50_us": 100.0, "delete_p99_us": 400.0,
+        "sweep_fanout": 6,
+        "seq_sweep_p50_ms": 1.0, "seq_tiles_skipped": 3,
+        "stacked_p0_sweep_p50_ms": 1.0,
+        "stacked_sweep_p50_ms": 1.0, "stacked_sweep_p99_ms": 2.0,
+        "stacked_tiles_skipped": 3,
+        "probe_speedup_p50": 1.0,
+        "compile_count": 0, "cache_hit": 7,
+        "skip_profile": {"seq": prof,
+                         "stacked": {**prof,
+                                     "probe": {"tiles": 4}}},
     }
 
 
@@ -45,9 +69,10 @@ def test_check_bench_json_rejects_missing_and_malformed(tmp_path):
     assert check_bench_json.main([str(unknown)]) == 1
 
 
-@pytest.mark.parametrize("drop", ["stacked.pr4.p50_ms",
+@pytest.mark.parametrize("drop", ["stacked.mode_pr4.p50_ms",
                                   "stacked.skip_profile.stacked.probe",
-                                  "warm.tiles_skipped"])
+                                  "warm.tiles_skipped",
+                                  "compile_count"])
 def test_check_bench_json_rejects_lost_keys(tmp_path, drop):
     doc = _minimal_serve()
     node = doc
@@ -56,5 +81,39 @@ def test_check_bench_json_rejects_lost_keys(tmp_path, drop):
         node = node[part]
     del node[leaf]
     path = tmp_path / "BENCH_serve.json"
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1
+
+
+def test_check_bench_json_accepts_healthy_tail(tmp_path):
+    path = tmp_path / "BENCH_stream_sharded.json"
+    path.write_text(json.dumps(_minimal_stream_sharded()))
+    assert check_bench_json.main([str(path)]) == 0
+
+
+@pytest.mark.parametrize("p50_key,p99_key", [
+    ("query_p50_ms", "query_p99_ms"),
+    ("delete_p50_us", "delete_p99_us")])
+def test_check_bench_json_rejects_tail_blowup(tmp_path, p50_key, p99_key):
+    doc = _minimal_stream_sharded()
+    doc[p99_key] = doc[p50_key] * 53.0  # the bug this PR fixed
+    path = tmp_path / "BENCH_stream_sharded.json"
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1
+    # explicit flag wins over the default
+    assert check_bench_json.main(
+        ["--max-p99-p50-ratio", "100", str(path)]) == 0
+    # 0 disables the fence entirely
+    assert check_bench_json.main(
+        ["--max-p99-p50-ratio", "0", str(path)]) == 0
+
+
+def test_check_bench_json_ratio_guards_degenerate_p50(tmp_path):
+    # p50 == 0 (empty latency list in a pathological smoke run) must
+    # still trip the fence rather than divide it away or crash
+    doc = _minimal_stream_sharded()
+    doc["query_p50_ms"] = 0.0
+    doc["query_p99_ms"] = 100.0
+    path = tmp_path / "BENCH_stream_sharded.json"
     path.write_text(json.dumps(doc))
     assert check_bench_json.main([str(path)]) == 1

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from _hyp import given_int_seed
 from repro.core import exact_search
-from repro.core.balltree import append_ones, build_tree, normalize_query
+from repro.core.balltree import (append_ones, build_tree, built_leaves,
+                                 normalize_query)
 from repro.core.search import C_TILE_SKIP, merge_topk
 from repro.kernels.ref import stacked_sweep_ref
 from repro.kernels.stacked_sweep import (StackedLeaves,
@@ -505,8 +506,10 @@ def test_tile_density_reads_current_ids_planes():
     live_tiles = sum((np.asarray(s.tree.point_ids).reshape(
         s.tree.num_leaves, s.tree.n0) >= 0).any(axis=1).sum()
         for s in snap1.segments)
+    # denominator excludes pad_tree_leaves quantization pads: they are
+    # compile-shape waste, not raggedness (see tile_density docstring)
     grid = (len(snap1.segments)
-            * max(s.tree.num_leaves for s in snap1.segments))
+            * max(built_leaves(s.tree) for s in snap1.segments))
     assert d1 == pytest.approx(live_tiles / grid)
 
 
@@ -540,15 +543,20 @@ def test_stacked_cache_adopted_updated_and_rebuilt():
     m.insert(np.zeros(DIM, np.float32))
     snap1 = m.snapshot()
     assert snap1.__dict__.get("_stacked") is stk0
-    # tombstone publish: ids plane swapped, geometry arrays shared
+    # tombstone publish: the ids-plane swap is DEFERRED to the first
+    # read (the delete path is O(tombstone flip); no device dispatch
+    # under the writer lock) -- geometry arrays shared once applied
     seg = next(s for s in snap1.segments if s.live)
     pid = np.asarray(seg.tree.point_ids)
     victim = int(seg.gids[pid[pid >= 0][0]])
     seg_uids = tuple(s.uid for s in snap1.segments)
     assert m.delete(victim)
     snap2 = m.snapshot()
-    stk2 = snap2.__dict__.get("_stacked")
-    assert stk2 is not None and stk2 is not stk0
+    assert snap2.__dict__.get("_stacked") is None  # lazy: not yet built
+    assert snap2.__dict__.get("_stacked_base") is stk0
+    stk2 = snap2.stacked_leaves()
+    assert stk2 is snap2.stacked_leaves()  # memoized once applied
+    assert stk2 is not stk0
     assert stk2.pts is stk0.pts and stk2.rx is stk0.rx
     assert stk2.uids == seg_uids
     assert victim not in set(np.asarray(stk2.ids).ravel().tolist())

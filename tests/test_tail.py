@@ -1,0 +1,227 @@
+"""Tail-latency regression fences: the retrace/stall spikes behind the
+one-time 53x query-p99 (jit retraces on republish) and 92x delete-p99
+(inline compaction under the writer lock) must stay dead.
+
+Covers, per the tentpole's four pieces:
+
+  * the shape-bucketed compile registry -- a tombstone-only republish
+    and a shard-recomposition both reuse the compiled stacked program;
+  * pre-publish warmup -- after the background compactor's
+    ``warm_stacked`` pass, the first post-publish query is a registry
+    *hit*, never a query-path compile;
+  * the non-blocking delete path -- deletes are O(tombstone flip), the
+    tripwire guarantees compaction never runs on a delete caller's
+    thread, and admission control seals full deltas instead of stalling
+    acknowledged writes behind a busy compactor;
+  * torn-epoch safety -- snapshots pinned mid-churn are internally
+    consistent against their own brute-force oracle.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.balltree import normalize_query
+from repro.kernels.stacked_sweep import (
+    STACKED_PROBE_TILES_DEFAULT, STACKED_PROBE_TILES_ROUND2_DEFAULT,
+    resolve_probe_tiles, reset_stacked_compile_stats,
+    stacked_compile_stats, warm_stacked)
+from repro.stream.compaction import CompactionPolicy
+from repro.stream.mutable import MutableP2HIndex
+
+D, N0, K = 8, 16, 5
+
+
+@pytest.fixture(autouse=True)
+def _cold_registry():
+    """Each test starts (and leaves behind) a from-cold compile registry
+    so hit/miss assertions are not cross-test coupled."""
+    reset_stacked_compile_stats(full=True)
+    yield
+    reset_stacked_compile_stats(full=True)
+
+
+def _index(n=150, *, background=False, seed=0, **pol):
+    rng = np.random.default_rng(seed)
+    pol.setdefault("delta_capacity", 32)
+    idx = MutableP2HIndex(D, n0=N0, policy=CompactionPolicy(**pol),
+                          background=background)
+    idx.bulk_seed(rng.normal(size=(n, D)).astype(np.float32))
+    return idx, rng
+
+
+def _oracle_check(idx, q, k=K):
+    bd, _ = idx.query(q, k=k, stacked=True)
+    X, _ = idx.snapshot().live_points()
+    want = np.sort(np.sort(np.abs(normalize_query(q) @ X.T),
+                           axis=1)[:, :k], axis=1)
+    np.testing.assert_allclose(np.sort(bd, axis=1), want,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- (a)
+def test_tombstone_republish_reuses_program():
+    idx, rng = _index()
+    q = rng.normal(size=(4, D + 1)).astype(np.float32)
+    idx.query(q, k=K, stacked=True)
+    st0 = stacked_compile_stats()
+    snap0 = idx.snapshot()
+    stk0 = snap0.stacked_leaves()
+    for gid in (3, 77, 141):
+        assert idx.delete(gid)
+    snap1 = idx.snapshot()
+    assert snap1 is not snap0, "delete must republish"
+    stk1 = snap1.stacked_leaves()
+    # geometry planes ride through the ids-only republish by identity --
+    # that is what keeps the jit cache key (shapes) and the memoized
+    # derived pads stable
+    assert stk1.pts is stk0.pts and stk1.rx is stk0.rx
+    assert stk1.ids is not stk0.ids
+    _oracle_check(idx, q)
+    st1 = stacked_compile_stats()
+    assert st1["misses"] == st0["misses"], \
+        "tombstone-only republish retraced the stacked program"
+    assert st1["hits"] > st0["hits"]
+    assert st1["signatures"] == st0["signatures"]
+
+
+# ---------------------------------------------------------------- (b)
+def test_post_compaction_publish_is_cache_hit_after_warmup():
+    idx, rng = _index(background=True, delta_capacity=16)
+    q = rng.normal(size=(4, D + 1)).astype(np.float32)
+    idx.query(q, k=K, stacked=True)  # seeds the template registry
+    st0 = stacked_compile_stats()
+    assert st0["misses"] >= 1
+    # overflow the delta -> background compaction -> republish
+    idx.insert_batch(rng.normal(size=(40, D)).astype(np.float32))
+    # generous deadline: a compaction is seconds of tree-build + warmup
+    # on an idle machine but can stretch far past that when the whole
+    # suite is loading every core
+    deadline = time.time() + 120
+    while not idx.compaction_log and time.time() < deadline:
+        idx.wait_compaction()
+        time.sleep(0.05)
+    assert idx.compaction_log, "background compaction never ran"
+    assert idx.compaction_log[-1]["warmed"] >= 1, \
+        "compactor published without pre-warming the new stack"
+    _oracle_check(idx, q)
+    st1 = stacked_compile_stats()
+    assert st1["misses"] == st0["misses"], \
+        "first post-compaction query paid a query-path compile"
+    idx.close()
+
+
+def test_warm_stacked_replays_registry_templates():
+    idx, rng = _index()
+    q = rng.normal(size=(4, D + 1)).astype(np.float32)
+    idx.query(q, k=K, stacked=True)
+    # a differently-shaped stack: warm it explicitly, then serve it
+    other, _ = _index(n=600, seed=1)
+    stk = other.snapshot().stacked_leaves()
+    assert warm_stacked(stk) >= 1
+    st0 = stacked_compile_stats()
+    _oracle_check(other, q)
+    st1 = stacked_compile_stats()
+    assert st1["misses"] == st0["misses"]
+    assert st1["hits"] == st0["hits"] + 1
+
+
+# ---------------------------------------------------------------- (c)
+def test_no_torn_epoch_during_background_churn():
+    idx, rng = _index(n=200, background=True, delta_capacity=16)
+    q = rng.normal(size=(4, D + 1)).astype(np.float32)
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        try:
+            gids = list(range(200))
+            while not stop.is_set():
+                gids.append(int(idx.insert(
+                    rng.normal(size=D).astype(np.float32))))
+                if len(gids) % 3 == 0:
+                    idx.delete(gids.pop(0))
+        except BaseException as e:  # surfaces in the main thread
+            errors.append(e)
+
+    t = threading.Thread(target=churn)
+    t.start()
+    try:
+        qn = normalize_query(q)
+        for _ in range(12):
+            # one pin must be internally consistent: the query and the
+            # oracle read the SAME snapshot, never a half-published one
+            snap = idx.snapshot()
+            bd, _, _ = snap.query(qn.astype(np.float32), K,
+                                  return_counters=True, stacked=True)
+            X, _ = snap.live_points()
+            want = np.sort(np.sort(np.abs(qn @ X.T), axis=1)[:, :K],
+                           axis=1)
+            np.testing.assert_allclose(np.sort(np.asarray(bd), axis=1),
+                                       want, rtol=1e-4, atol=1e-5)
+            assert snap.live_count == len(X)
+    finally:
+        stop.set()
+        t.join(timeout=10)
+        idx.close()
+    assert not errors, errors
+
+
+# ------------------------------------------------- non-blocking delete
+def test_delete_never_compacts_on_caller_thread():
+    # tombstone_frac ~0 makes every delete trip the compaction plan; in
+    # inline mode the old code would have compacted inside delete()
+    idx, _ = _index(tombstone_frac=0.01)
+    runs_before = len(idx.compaction_log)
+    for gid in (10, 11, 12):  # past tombstone_frac on the seed segment
+        assert idx.delete(gid)
+    assert len(idx.compaction_log) == runs_before, \
+        "delete() ran a compaction on the caller's thread"
+    assert idx._plan_locked(), "the deferred plan should be pending"
+    # the deferred compaction runs on the next write-path call instead
+    idx.insert(np.zeros((D,), np.float32))
+    assert len(idx.compaction_log) > runs_before
+
+
+def test_delete_thread_tripwire():
+    idx, _ = _index(tombstone_frac=0.01)
+    idx._tl.in_delete = True
+    try:
+        with pytest.raises(AssertionError, match="delete caller"):
+            idx.compact(force=True)
+    finally:
+        idx._tl.in_delete = False
+    idx.compact(force=True)  # same call is fine off the delete path
+
+
+def test_admission_seals_instead_of_stalling():
+    cap, seals = 4, 2
+    idx, rng = _index(n=0, background=True, delta_capacity=cap,
+                      max_pending_seals=seals)
+    idx.close()  # kill the compactor: worst-case backpressure
+    t0 = time.perf_counter()
+    gids = [int(idx.insert(rng.normal(size=D).astype(np.float32)))
+            for _ in range(cap * (seals + 1))]
+    elapsed = time.perf_counter() - t0
+    st = idx.admission_stats()
+    assert st["seals"] == seals and st["pending_seals"] == seals
+    assert st["stalls"] == 0
+    assert elapsed < 1.0, \
+        f"acknowledged writes stalled behind a dead compactor ({elapsed:.1f}s)"
+    # sealed buffers stay queryable and deletable
+    q = rng.normal(size=(2, D + 1)).astype(np.float32)
+    _oracle_check(idx, q, k=3)
+    assert idx.delete(gids[1])  # row lives in a sealed buffer
+    assert idx.live_count == len(gids) - 1
+    _oracle_check(idx, q, k=3)
+
+
+# ------------------------------------------------- route-aware probing
+def test_round2_probe_default_is_single_pass():
+    assert STACKED_PROBE_TILES_ROUND2_DEFAULT == 0
+    assert resolve_probe_tiles(None, 8, route="round2") == 0
+    assert resolve_probe_tiles(None, 8) == min(
+        STACKED_PROBE_TILES_DEFAULT, 8)
+    # an explicit width still wins on either route
+    assert resolve_probe_tiles(2, 8, route="round2") == 2

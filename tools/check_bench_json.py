@@ -7,15 +7,24 @@ lost the keys successive PRs diff against.
 type of the headline metrics, not their values -- a smoke config's
 numbers are meaningless, its *shape* is the contract).
 
+Beyond schema, the tool fences *tail* latency: ``--max-p99-p50-ratio``
+(default 10, ``0`` disables) caps the query and delete p99/p50 ratios of
+``BENCH_stream_sharded.json`` -- the retrace/stall spikes that once put
+query p99 at ~53x p50 hide entirely in medians, so the ratio is the
+regression signal CI watches (values stay config-dependent, the ratio
+does not).
+
 Usage (CI bench-smoke lane; see .github/workflows/ci.yml):
 
     python -m benchmarks.run --only serve,stream_sharded --smoke \
         --out-dir bench-json
-    python tools/check_bench_json.py bench-json/BENCH_serve.json \
+    python tools/check_bench_json.py --max-p99-p50-ratio 10 \
+        bench-json/BENCH_serve.json \
         bench-json/BENCH_stream_sharded.json
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -31,13 +40,18 @@ SCHEMAS = {
         "warm.qps": _NUM, "warm.p50_ms": _NUM, "warm.p99_ms": _NUM,
         "warm.tiles_skipped": _NUM,
         "stacked.fanout": _NUM,
-        "stacked.seq.p50_ms": _NUM,
-        "stacked.seq.tiles_skipped": _NUM,
-        "stacked.pr4.p50_ms": _NUM,
-        "stacked.stacked.p50_ms": _NUM,
-        "stacked.stacked.p99_ms": _NUM,
-        "stacked.stacked.tiles_skipped": _NUM,
+        # probe-mode keys carry a "mode_" prefix: the section is named
+        # "stacked" and one of its modes used to be too, making the
+        # dotted path "stacked.stacked" ambiguous
+        "stacked.mode_seq.p50_ms": _NUM,
+        "stacked.mode_seq.tiles_skipped": _NUM,
+        "stacked.mode_pr4.p50_ms": _NUM,
+        "stacked.mode_stacked.p50_ms": _NUM,
+        "stacked.mode_stacked.p99_ms": _NUM,
+        "stacked.mode_stacked.tiles_skipped": _NUM,
         "stacked.best_probe_mode": str,
+        "compile_count": _NUM,
+        "cache_hit": _NUM,
         "stacked.skip_profile.seq.skip_frac": _NUM,
         "stacked.skip_profile.stacked.skip_frac": _NUM,
         "stacked.skip_profile.stacked.probe.tiles": _NUM,
@@ -54,15 +68,31 @@ SCHEMAS = {
         "stacked_sweep_p50_ms": _NUM, "stacked_sweep_p99_ms": _NUM,
         "stacked_tiles_skipped": _NUM,
         "probe_speedup_p50": _NUM,
+        "compile_count": _NUM,
+        "cache_hit": _NUM,
         "skip_profile.seq.skip_frac": _NUM,
         "skip_profile.stacked.skip_frac": _NUM,
         "skip_profile.stacked.probe.tiles": _NUM,
     },
 }
 
+#: tail-latency fences: (p50 key, p99 key) pairs whose ratio
+#: --max-p99-p50-ratio caps, keyed by file basename.  Only the streaming
+#: bench is fenced -- its timed loop is the serving path the retrace /
+#: delete-stall spikes used to hit; bench_serve's per-mode numbers are
+#: compile-inclusive microbenchmarks.
+RATIO_KEYS = {
+    "BENCH_stream_sharded.json": (
+        ("query_p50_ms", "query_p99_ms"),
+        ("delete_p50_us", "delete_p99_us"),
+    ),
+}
 
-def check_file(path: str) -> list:
-    """Schema errors for one BENCH_*.json (empty list = valid)."""
+
+def check_file(path: str, max_ratio: float = 0.0) -> list:
+    """Schema (+ optional tail-ratio) errors for one BENCH_*.json
+    (empty list = valid).  ``max_ratio`` > 0 additionally caps the
+    file's registered p99/p50 pairs (see :data:`RATIO_KEYS`)."""
     name = os.path.basename(path)
     schema = SCHEMAS.get(name)
     if schema is None:
@@ -93,22 +123,42 @@ def check_file(path: str) -> list:
             errors.append(f"{path}: {dotted!r} has type "
                           f"{type(node).__name__}, expected "
                           f"{getattr(typ, '__name__', typ)}")
+    if max_ratio > 0:
+        for p50_key, p99_key in RATIO_KEYS.get(name, ()):
+            p50, p99 = doc.get(p50_key), doc.get(p99_key)
+            if not (isinstance(p50, _NUM) and isinstance(p99, _NUM)):
+                continue  # missing/typed wrong: reported above
+            # epsilon floor: a degenerate p50 of ~0 (empty latency list
+            # serialized as 0/NaN) must not divide the fence away
+            ratio = p99 / max(float(p50), 1e-9)
+            if p50 != p50 or p99 != p99:  # NaN-ridden smoke run
+                continue
+            if ratio > max_ratio:
+                errors.append(
+                    f"{path}: {p99_key}/{p50_key} = {p99:.3f}/{p50:.3f} "
+                    f"= {ratio:.1f}x exceeds --max-p99-p50-ratio "
+                    f"{max_ratio:g} (tail-latency regression)")
     return errors
 
 
 def main(argv=None) -> int:
-    paths = argv if argv is not None else sys.argv[1:]
-    if not paths:
-        print("usage: check_bench_json.py BENCH_*.json ...",
-              file=sys.stderr)
+    ap = argparse.ArgumentParser(prog="check_bench_json.py")
+    ap.add_argument("paths", nargs="*", metavar="BENCH_*.json")
+    ap.add_argument("--max-p99-p50-ratio", type=float, default=10.0,
+                    help="cap on the registered p99/p50 latency pairs "
+                         "(default %(default)s; 0 disables)")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    if not args.paths:
+        print("usage: check_bench_json.py [--max-p99-p50-ratio R] "
+              "BENCH_*.json ...", file=sys.stderr)
         return 2
     errors = []
-    for path in paths:
-        errors += check_file(path)
+    for path in args.paths:
+        errors += check_file(path, max_ratio=args.max_p99_p50_ratio)
     for e in errors:
         print(f"check_bench_json: FAIL -- {e}", file=sys.stderr)
     if not errors:
-        print(f"check_bench_json: {len(paths)} file(s) valid")
+        print(f"check_bench_json: {len(args.paths)} file(s) valid")
     return 1 if errors else 0
 
 
