@@ -134,8 +134,18 @@ def run_sharded_stream(args):
 
     import jax.numpy as jnp
 
+    from repro.data import make_p2h_dataset
+
     rng = np.random.default_rng(args.seed)
-    data = rng.normal(size=(args.n, args.d)).astype(np.float32)
+    # one generator call covers the seed set, the insert stream and the
+    # hot queries, so streamed-in points follow the same distribution as
+    # the bulk load (kind="planted" is the low-intrinsic-dim config
+    # where the tree's pruning -- and hence live-skip fractions -- are
+    # actually exercised; rng.normal here used to read as skip_frac ~ 0)
+    pool, hot = make_p2h_dataset(args.n + args.ops, args.d,
+                                 kind=args.kind, n_queries=4,
+                                 seed=args.seed)
+    data, insert_pool = pool[:args.n], pool[args.n:]
     policy = CompactionPolicy(delta_capacity=args.delta_capacity)
     m = ShardedMutableP2HIndex.from_data(
         data, args.shards, n0=args.n0, policy=policy,
@@ -143,7 +153,6 @@ def run_sharded_stream(args):
     eng = P2HEngine(m, slot_size=8,
                     policy=DispatchPolicy(prefer_pallas=False))
 
-    hot = rng.normal(size=(4, args.d + 1)).astype(np.float32)
     live = list(range(args.n))
 
     # warmup: compile the serving programs (engine route, stacked
@@ -164,11 +173,13 @@ def run_sharded_stream(args):
 
     ins_lat, del_lat, q_lat = [], [], []
     per_shard_writes = np.zeros((args.shards,), np.int64)
+    ins_i = 0
     t_all = time.perf_counter()
     for step in range(args.ops):
         r = rng.random()
         if r < 0.55:
-            x = rng.normal(size=args.d).astype(np.float32)
+            x = insert_pool[ins_i % len(insert_pool)]
+            ins_i += 1
             t0 = time.perf_counter()
             gid = m.insert(x)
             ins_lat.append(time.perf_counter() - t0)
@@ -259,6 +270,12 @@ def main(argv=None):
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--ops", type=int, default=2000)
     ap.add_argument("--delta-capacity", type=int, default=256)
+    ap.add_argument("--kind", default="planted",
+                    choices=["normal", "clustered", "planted", "unit",
+                             "heavy"],
+                    help="data distribution (default: planted clusters "
+                         "in a low-dim latent subspace, where the tree "
+                         "actually prunes)")
     ap.add_argument("--background", action="store_true", default=True)
     ap.add_argument("--no-background", dest="background",
                     action="store_false")

@@ -17,6 +17,10 @@ DATASETS = {
     "Synth-Cluster": (20000, 64, "clustered"),
     "Synth-Unit": (20000, 48, "unit"),
     "Synth-Heavy": (10000, 96, "heavy"),
+    # low intrinsic dimension (planted clusters in a latent subspace):
+    # the regime where ball/cone bounds actually prune -- streaming
+    # live-skip fractions are meaningful here, not ~0
+    "Synth-Planted": (20000, 64, "planted"),
 }
 N_QUERIES = 20
 

@@ -6,10 +6,12 @@ Lanes whose ``run(csv)`` returns a result dict additionally get it
 serialized to ``BENCH_<lane>.json`` next to the CSV output (``--out-dir``,
 default CWD) -- the machine-readable perf trajectory successive PRs
 compare against (today: ``BENCH_serve.json`` with qps / p50 / p99 /
-tile-skip / probe-overhead numbers and ``BENCH_stream_sharded.json``
-with the sharded equivalents).  ``--only serve,stream_sharded --smoke``
-is the CI bench-smoke entry point: tiny registered configs, same JSON
-schema, validated by ``tools/check_bench_json.py``.
+tile-skip / probe-overhead numbers, ``BENCH_stream_sharded.json`` with
+the sharded equivalents, and ``BENCH_durability.json`` with WAL replay
+throughput / recovery latency / the zero-invariant loss counters).
+``--only serve,stream_sharded,durability --smoke`` is the CI
+bench-smoke entry point: tiny registered configs, same JSON schema,
+validated by ``tools/check_bench_json.py``.
 """
 from __future__ import annotations
 
@@ -54,8 +56,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_ablations, bench_distributed,
-                            bench_indexing, bench_kernel, bench_query,
-                            bench_serve, bench_stream, bench_stream_sharded)
+                            bench_durability, bench_indexing, bench_kernel,
+                            bench_query, bench_serve, bench_stream,
+                            bench_stream_sharded)
 
     t0 = time.time()
     emitted = []
@@ -75,6 +78,8 @@ def main(argv=None) -> None:
          bench_stream),
         ("Sharded streaming index (routed writes, two-round exchange)",
          "stream_sharded", bench_stream_sharded),
+        ("Durability (WAL kill-and-recover chaos)", "durability",
+         bench_durability),
     ]
     only = (None if args.only is None
             else {s.strip() for s in args.only.split(",") if s.strip()})

@@ -33,19 +33,37 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager", "write_json_atomic", "read_json"]
+__all__ = ["CheckpointManager", "write_json_atomic", "read_json",
+           "fsync_dir"]
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory: a rename is only durable once the parent
+    directory's metadata is flushed -- fsyncing the file alone leaves a
+    crash window where the rename itself is lost (the torn-manifest
+    bug).  Best-effort on filesystems that refuse directory fsync."""
+    fd = os.open(path or ".", getattr(os, "O_DIRECTORY", os.O_RDONLY))
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def write_json_atomic(path: str, obj: Any) -> None:
     """Write a JSON document with the checkpoint directory's atomicity
-    discipline: fsync'd tmp file + rename, so a reader never sees a torn
-    manifest (used by the sharded streaming index's top-level manifest)."""
+    discipline: fsync'd tmp file + rename + parent-dir fsync, so a
+    reader never sees a torn manifest and a crash after the rename
+    cannot roll it back (used by the sharded streaming index's
+    top-level manifest and the migration journal)."""
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:
         json.dump(obj, fh)
         fh.flush()
         os.fsync(fh.fileno())
     os.replace(tmp, path)
+    fsync_dir(os.path.dirname(path))
 
 
 def read_json(path: str) -> Any:
@@ -117,6 +135,7 @@ class CheckpointManager:
                     os.fsync(fh.fileno())
                 shutil.rmtree(final, ignore_errors=True)
                 os.rename(tmp, final)
+                fsync_dir(self.dir)  # make the rename itself durable
                 self._gc()
             except BaseException as e:  # surfaced at next wait()
                 self._error.append(e)

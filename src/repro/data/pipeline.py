@@ -78,7 +78,11 @@ def make_p2h_dataset(n: int, d: int, *, kind: str = "clustered",
 
     Kinds: "normal" (isotropic), "clustered" (GMM, the common real-data
     shape), "unit" (normalized -- the regime where the pre-NH/FH hashing
-    schemes apply), "heavy" (Cauchy-ish heavy tails).
+    schemes apply), "heavy" (Cauchy-ish heavy tails), "planted"
+    (clustered points near a low-dimensional subspace -- the
+    low-intrinsic-dimension regime where metric-tree bounds actually
+    prune; isotropic gaussians in high ambient dimension concentrate
+    all pairwise distances and read as live-skip fractions of ~0).
     """
     rng = np.random.default_rng(seed)
     if kind == "normal":
@@ -87,6 +91,19 @@ def make_p2h_dataset(n: int, d: int, *, kind: str = "clustered",
         k = max(4, d // 8)
         centers = rng.normal(size=(k, d)) * 4.0
         x = centers[rng.integers(0, k, n)] + rng.normal(size=(n, d)) * 0.5
+    elif kind == "planted":
+        # planted clusters in a k_lat-dim latent subspace, projected to
+        # the ambient dim with small isotropic noise: intrinsic dim ~
+        # k_lat << d, so ball radii shrink fast with depth and the
+        # tree's pruning is exercised the way real image/embedding data
+        # exercises it
+        k_lat = max(2, d // 16)
+        n_c = 8
+        basis = np.linalg.qr(rng.normal(size=(d, k_lat)))[0]
+        centers = rng.normal(size=(n_c, k_lat)) * 6.0
+        z = centers[rng.integers(0, n_c, n)] \
+            + rng.normal(size=(n, k_lat))
+        x = z @ basis.T + rng.normal(size=(n, d)) * 0.05
     elif kind == "unit":
         x = rng.normal(size=(n, d))
         x /= np.linalg.norm(x, axis=1, keepdims=True)

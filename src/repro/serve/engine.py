@@ -99,6 +99,13 @@ class P2HEngine:
         self._latencies_s: list[float] = []
         self._batches = 0
         self._queries_served = 0
+        # placement generation tracking (sharded mutable): every batch
+        # pins the router version its snapshot was routed under, so a
+        # live split/merge is observable as a version transition here --
+        # cap *soundness* across the transition is the lambda cache's
+        # epoch-vector length check, not this counter
+        self._router_version = None
+        self._router_transitions = 0
 
     # ------------------------------------------------------------------
     # streaming API
@@ -153,6 +160,12 @@ class P2HEngine:
         # pin one consistent view for the whole micro-batch: concurrent
         # inserts/deletes publish new snapshots, this batch never sees them
         snap = self.mutable.snapshot() if self.mutable is not None else None
+        if snap is not None and self._sharded_mutable:
+            rv = getattr(snap, "router_version", 0)
+            if self._router_version is not None \
+                    and rv != self._router_version:
+                self._router_transitions += 1
+            self._router_version = rv
         fanout = (len(snap.segments) + len(snap.deltas)) if snap else 1
         if snap is not None:
             from repro.kernels.stacked_sweep import tile_density
@@ -310,6 +323,9 @@ class P2HEngine:
         }
         if self.cache is not None:
             out["lambda_cache"] = self.cache.stats()
+        if self._router_version is not None:
+            out["router_version"] = self._router_version
+            out["router_transitions"] = self._router_transitions
         admission = getattr(self.mutable, "admission_stats", None)
         if callable(admission):
             # write-admission counters (seals/stalls/pending) from the

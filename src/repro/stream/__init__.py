@@ -40,6 +40,16 @@ primitive:
     two-round lambda exchange
     (``repro.core.distributed.two_round_exchange``).
 
+``ShardWal`` / ``WalConfig`` (wal.py)
+    Per-shard write-ahead log with group-commit fsync: an acknowledged
+    write (``on_ack`` fires post-fsync) survives SIGKILL; recovery =
+    newest checkpoint + idempotent tail replay.
+
+``VersionedRouter`` (resharding.py)
+    Versioned gid->shard map behind ``split_shard``/``merge_shards``:
+    journaled batch migration under traffic, double-read during the
+    transition so answers stay bit-exact vs the unsplit oracle.
+
 Serving integration: ``P2HEngine(mutable_index)`` pins one snapshot per
 micro-batch and epoch-tags its lambda cache -- warm caps recorded before
 a delete are invalidated instead of silently unsound (a delete can grow
@@ -50,9 +60,12 @@ invalidates caps stale in that component.
 from repro.stream.compaction import CompactionPlan, CompactionPolicy
 from repro.stream.delta import DeltaBuffer
 from repro.stream.mutable import MutableP2HIndex
+from repro.stream.resharding import VersionedRouter
 from repro.stream.sharded import HashRouter, ShardedMutableP2HIndex
 from repro.stream.snapshot import DeltaView, Segment, ShardedSnapshot, Snapshot
+from repro.stream.wal import ShardWal, WalConfig
 
 __all__ = ["MutableP2HIndex", "ShardedMutableP2HIndex", "HashRouter",
            "Snapshot", "ShardedSnapshot", "Segment", "DeltaView",
-           "DeltaBuffer", "CompactionPolicy", "CompactionPlan"]
+           "DeltaBuffer", "CompactionPolicy", "CompactionPlan",
+           "ShardWal", "WalConfig", "VersionedRouter"]

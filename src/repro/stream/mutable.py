@@ -26,8 +26,12 @@ recorded and re-applied to the new segment before it becomes visible.
 
 Durability: ``save``/``load`` persist every segment/delta through
 :class:`repro.checkpoint.CheckpointManager` (atomic rename, per-leaf
-checksums), so a serving process can recover the mutable index without
-replaying a write log.
+checksums).  With a :class:`repro.stream.wal.ShardWal` attached
+(:meth:`MutableP2HIndex.attach_wal`), every insert/delete is also
+appended to the log before it is acknowledged, the checkpoint records
+the ``(wal_offset, wal_seq)`` frontier it covers, and
+``load(..., wal=...)`` replays the WAL tail idempotently -- recovery to
+the last *acknowledged* write, not just the last checkpoint.
 """
 from __future__ import annotations
 
@@ -100,6 +104,13 @@ class MutableP2HIndex:
         self.compaction_log: list[dict] = []  # wall/rows/reason per run
         self._tl = threading.local()  # delete-path compaction tripwire
         self._admission = {"seals": 0, "stalls": 0}  # write admission
+        #: optional repro.stream.wal.ShardWal -- when attached, every
+        #: insert/delete appends a record (under the writer lock, which
+        #: also serializes the single-writer log) and the public write
+        #: calls run the group commit before returning
+        self._wal = None
+        self.last_saved_wal = None  # (wal_offset, wal_seq) of last save
+        self._wal_replayed_seq = 0  # highest seq wal_replay applied
         #: optional callable(prebuilt StackedLeaves) the compactor runs
         #: during pre-publish warmup -- the sharded front-end hooks this
         #: to also pre-compile the cross-shard round-2 program
@@ -180,7 +191,9 @@ class MutableP2HIndex:
         with self._lock:
             gid = self._insert_one_locked(x, gid=gid)
             self._publish()
+            self._wal_log_insert(x, gid)
             self._maybe_compact_locked()
+        self._wal_commit()
         return gid
 
     def insert_batch(self, points: np.ndarray,
@@ -198,8 +211,10 @@ class MutableP2HIndex:
             for i, x in enumerate(pts):
                 out[i] = self._insert_one_locked(
                     x, gid=None if gids is None else int(gids[i]))
+                self._wal_log_insert(pts[i], int(out[i]))
             self._publish()
             self._maybe_compact_locked()
+        self._wal_commit()
         return out
 
     def _insert_one_locked(self, x: np.ndarray, *,
@@ -254,33 +269,169 @@ class MutableP2HIndex:
         self._tl.in_delete = True
         try:
             with self._lock:
-                loc = self._locator.pop(gid, None)
+                ok = self._delete_locked(gid)
+                if ok:
+                    self._wal_log(2, gid)  # OP_DELETE
+        finally:
+            self._tl.in_delete = False
+        if ok:
+            self._wal_commit()
+        return ok
+
+    def _delete_locked(self, gid: int) -> bool:
+        loc = self._locator.pop(gid, None)
+        if loc is None:
+            return False
+        if loc[0] == "delta":
+            _, buf_id, row = loc
+            for buf in [self._delta, *self._sealed]:
+                if id(buf) == buf_id:
+                    buf.tombstone(row)
+                    break
+        else:
+            _, uid, local = loc
+            self._segments[uid] = \
+                self._segments[uid].with_tombstone(local)
+        if self._compacting:
+            # the in-flight compaction copied its input rows before this
+            # delete; re-apply it to the output at publish time
+            self._pending_tombstones.add(gid)
+        self._live_count -= 1
+        self._last_delete_epoch = self._epoch + 1  # post-publish
+        self._publish()
+        if (self._background and not self._compacting
+                and self._plan_locked()):
+            self._compact_event.set()
+        return True
+
+    # ------------------------------------------------------------------
+    # write-ahead log (repro.stream.wal)
+    # ------------------------------------------------------------------
+    def attach_wal(self, wal) -> None:
+        """Attach a :class:`repro.stream.wal.ShardWal`: subsequent
+        inserts/deletes are logged (and group-committed) before the
+        write call returns.  Attach *after* any replay -- replayed ops
+        are already in the log and must not be re-appended."""
+        with self._lock:
+            self._wal = wal
+
+    def _wal_log_insert(self, x_raw: np.ndarray, gid: int) -> None:
+        """Log one insert (raw ``(dim,)`` row; caller holds the lock)."""
+        if self._wal is not None:
+            self._wal.append(1, gid, self._epoch,  # OP_INSERT
+                             np.asarray(x_raw, np.float32).tobytes(),
+                             token=("ins", int(gid)))
+
+    def _wal_log(self, op: int, gid: int, blob: bytes = b"") -> None:
+        if self._wal is not None:
+            self._wal.append(op, gid, self._epoch, blob,
+                             token=("del", int(gid)) if op == 2 else None)
+
+    def _wal_commit(self) -> None:
+        """Group commit (off the writer lock): the public write call's
+        acknowledgment point.  Per :class:`repro.stream.wal.WalConfig`,
+        either this call's fsync covers the op now, or a later group
+        commit does and the ``on_ack`` callback reports it then."""
+        if self._wal is not None:
+            self._wal.commit()
+
+    def wal_replay(self, wal, *, from_offset: int = 0,
+                   min_seq: int = 0) -> dict:
+        """Replay a WAL tail into this (just-restored) index.
+
+        Idempotent: records at ``seq <= min_seq`` (already covered by
+        the checkpoint) are skipped, an insert whose gid is already live
+        is skipped, a delete of a non-live gid is skipped -- so replaying
+        the same tail twice (double restore) applies each op at most
+        once.  After replay the epoch is bumped past the largest epoch
+        any replayed record carried, keeping the published epoch
+        monotone across a crash (an acked op's epoch never goes
+        backwards).  Returns ``{"applied", "skipped", "ops"}``."""
+        applied = skipped = seen = 0
+        with self._lock:
+            # replaying the same log twice into one instance must be a
+            # no-op: the gid-liveness guards alone would re-apply an
+            # insert+delete *pair* (dead gid -> reinsert -> redelete),
+            # converging to the same live set but churning epochs
+            min_seq = max(min_seq, self._wal_replayed_seq)
+            max_epoch = self._epoch
+            for rec in wal.records(from_offset):
+                if rec.op == 3:  # OP_ROUTER: placement, not data
+                    continue
+                seen += 1
+                self._wal_replayed_seq = max(self._wal_replayed_seq,
+                                             rec.seq)
+                if rec.seq <= min_seq:
+                    skipped += 1
+                    continue
+                max_epoch = max(max_epoch, rec.epoch)
+                if rec.op == 1:  # OP_INSERT
+                    if rec.gid in self._locator:
+                        skipped += 1
+                        continue
+                    self._insert_one_locked(rec.point(), gid=rec.gid)
+                    self._publish()
+                    applied += 1
+                elif rec.op == 2:  # OP_DELETE
+                    if self._delete_locked(rec.gid):
+                        applied += 1
+                    else:
+                        skipped += 1
+            if max_epoch > self._epoch:
+                # jump past the pre-crash epoch: _publish increments, so
+                # the republished epoch is strictly greater than any
+                # epoch an acked op ever observed
+                self._epoch = max_epoch
+                self._publish()
+            self._maybe_compact_locked()
+        return {"applied": applied, "skipped": skipped, "ops": seen}
+
+    # ------------------------------------------------------------------
+    # migration support (repro.stream.resharding)
+    # ------------------------------------------------------------------
+    def has_gid(self, gid: int) -> bool:
+        with self._lock:
+            return int(gid) in self._locator
+
+    def live_gids(self) -> np.ndarray:
+        """Snapshot of the live global ids (sorted, for determinism)."""
+        with self._lock:
+            out = np.fromiter(self._locator.keys(), np.int64,
+                              len(self._locator))
+        out.sort()
+        return out
+
+    def points_for(self, gids) -> tuple[np.ndarray, np.ndarray]:
+        """Rows for the requested gids as ``(points (n, dim), found
+        gids)`` -- raw rows without the appended 1-coordinate, ready for
+        re-insertion into another shard.  Unknown (raced-away) gids are
+        dropped, not errors: the migration copy loop re-checks liveness
+        under its own lock."""
+        pts, found = [], []
+        with self._lock:
+            for g in np.asarray(gids, np.int64):
+                loc = self._locator.get(int(g))
                 if loc is None:
-                    return False
+                    continue
                 if loc[0] == "delta":
                     _, buf_id, row = loc
                     for buf in [self._delta, *self._sealed]:
                         if id(buf) == buf_id:
-                            buf.tombstone(row)
+                            pts.append(np.array(buf.points[row]))
+                            found.append(int(g))
                             break
                 else:
                     _, uid, local = loc
-                    self._segments[uid] = \
-                        self._segments[uid].with_tombstone(local)
-                if self._compacting:
-                    # the in-flight compaction copied its input rows
-                    # before this delete; re-apply it to the output at
-                    # publish time
-                    self._pending_tombstones.add(gid)
-                self._live_count -= 1
-                self._last_delete_epoch = self._epoch + 1  # post-publish
-                self._publish()
-                if (self._background and not self._compacting
-                        and self._plan_locked()):
-                    self._compact_event.set()
-        finally:
-            self._tl.in_delete = False
-        return True
+                    seg = self._segments[uid]
+                    row = int(seg.row_of_local[local])
+                    pts.append(np.asarray(seg.tree.points)[row])
+                    found.append(int(g))
+        if not pts:
+            return (np.zeros((0, self.dim), np.float32),
+                    np.zeros((0,), np.int64))
+        # stored rows carry the appended 1-coordinate; strip it
+        return (np.stack(pts)[:, :-1].astype(np.float32),
+                np.asarray(found, np.int64))
 
     # ------------------------------------------------------------------
     # read path
@@ -380,12 +531,16 @@ class MutableP2HIndex:
             raise self._compact_errors.pop(0)
 
     def close(self) -> None:
-        """Stop the background compactor (if any); safe to call twice."""
+        """Stop the background compactor (if any) and close the attached
+        WAL (final group commit included); safe to call twice."""
         self._stop = True
         self._compact_event.set()
         if self._compactor is not None:
             self._compactor.join(timeout=5.0)
             self._compactor = None
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
 
     def _plan_locked(self) -> CompactionPlan:
         plan = self.policy.plan(delta_full=self._delta.full,
@@ -698,9 +853,22 @@ class MutableP2HIndex:
             if self._sealed:  # leftovers of a failed background run
                 self._compact_locked(self._plan_locked())
             state, meta = self._state_pytree_locked()
+            if self._wal is not None:
+                # the WAL frontier this checkpoint covers: everything at
+                # seq <= wal_seq is folded into the serialized state, so
+                # restore replays strictly past it and the covered prefix
+                # can be truncated away
+                meta["wal_offset"] = self._wal.tail_offset()
+                meta["wal_seq"] = self._wal.last_seq
             step = self._epoch
             mgr = CheckpointManager(directory, keep=2)
             mgr.save(step, state, blocking=True, extra_meta=meta)
+            if self._wal is not None:
+                self._wal.truncate_prefix(meta["wal_offset"])
+                # the frontier this checkpoint covers, for the sharded
+                # front-end's top-level manifest
+                self.last_saved_wal = (meta["wal_offset"],
+                                       meta["wal_seq"])
         return step
 
     def _state_pytree_locked(self):
@@ -748,8 +916,13 @@ class MutableP2HIndex:
 
     @classmethod
     def load(cls, directory: str, *, step: int | None = None,
-             background: bool = False) -> "MutableP2HIndex":
-        """Recover a mutable index saved by :meth:`save`."""
+             background: bool = False, wal=None) -> "MutableP2HIndex":
+        """Recover a mutable index saved by :meth:`save`.
+
+        ``wal`` (optional :class:`repro.stream.wal.ShardWal`): replay the
+        log tail past the checkpoint's recorded ``(wal_offset, wal_seq)``
+        frontier, then attach the log for subsequent writes -- recovery
+        to the last acknowledged write instead of the last checkpoint."""
         from repro.checkpoint import CheckpointManager
         from repro.core.balltree import FlatTree
 
@@ -813,4 +986,8 @@ class MutableP2HIndex:
             self._live_count = meta["live_count"]
             self._max_norm = meta["max_norm"]
             self._snapshot = self._make_snapshot()
+        if wal is not None:
+            self.wal_replay(wal, from_offset=meta.get("wal_offset", 0),
+                            min_seq=meta.get("wal_seq", 0))
+            self.attach_wal(wal)
         return self

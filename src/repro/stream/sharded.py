@@ -39,12 +39,30 @@ Composition:
   * **Durability** -- ``save``/``load`` persist each shard through its
     own :class:`repro.checkpoint.CheckpointManager` directory plus one
     fsync'd top-level manifest (shard count, router spec, id-space
-    high-water mark, per-shard steps).
+    high-water mark, per-shard steps and WAL frontiers).  With
+    ``wal_dir=`` set, every shard also appends routed ops to its own
+    :class:`repro.stream.wal.ShardWal` before acknowledging them --
+    restore = load checkpoint + replay each shard's log tail, so
+    recovery reaches the last *acknowledged* write with no cross-shard
+    barrier (routed ops commute across shards; each shard replays
+    independently).  ``open`` is the create-or-recover entry point the
+    kill-and-recover chaos harness drives.
+  * **Resharding** -- ``split_shard`` / ``merge_shards`` migrate data
+    between shards under live traffic through the versioned slot router
+    (:class:`repro.stream.resharding.VersionedRouter`): writes route by
+    the new map version immediately, queries keep fanning over every
+    shard (``merge_topk`` de-duplicates by gid, so a point momentarily
+    present in both owners is harmless), and the migration is journaled
+    (atomic JSON + ``OP_ROUTER`` WAL records) so a crash mid-migration
+    recovers to a consistent map with every gid owned exactly once.
 
 Thread model: per-shard writer locks only -- there is no global write
 lock.  Gid allocation is the single cross-shard synchronization point
-(one counter behind a mutex); everything else is shard-local, which is
-what lets per-shard write throughput scale with the shard count.
+(one counter behind a mutex); deletes additionally hold the migration
+lock so a concurrent slot-copy can never resurrect a just-deleted point
+(see :meth:`ShardedMutableP2HIndex.delete`); everything else is
+shard-local, which is what lets per-shard write throughput scale with
+the shard count.
 """
 from __future__ import annotations
 
@@ -60,13 +78,22 @@ from repro.core import search
 from repro.core.balltree import normalize_query
 from repro.stream.compaction import CompactionPolicy
 from repro.stream.mutable import MutableP2HIndex, query_via_engine
+from repro.stream.resharding import (DEFAULT_SLOTS, MigrationJournal,
+                                     VersionedRouter, plan_merge,
+                                     plan_split)
 from repro.stream.snapshot import ShardedSnapshot
+from repro.stream.wal import ShardWal, WalConfig
 
 __all__ = ["ShardedMutableP2HIndex", "HashRouter"]
 
 _MANIFEST = "MANIFEST.json"
 _FORMAT = "p2h-stream-sharded"
-_VERSION = 1
+_VERSION = 2  # v2: versioned-router specs + per-shard WAL frontiers
+
+#: batch size of the migration copy loop: each batch is one migration-
+#: lock hold (insert-into-dst then delete-from-src), bounding how long a
+#: concurrent delete can be blocked behind the copier
+_MIGRATE_BATCH = 256
 
 # Knuth's multiplicative constant: decorrelates sequential gids so shard
 # assignment is balanced but not trivially periodic in allocation order
@@ -107,13 +134,31 @@ class HashRouter:
         return cls(spec["num_shards"])
 
 
+#: router kinds load() can reconstruct from a manifest spec
+_ROUTER_KINDS = {HashRouter.kind: HashRouter,
+                 VersionedRouter.kind: VersionedRouter}
+
+
+def _count_wal_shards(wal_dir: str) -> int:
+    """Number of shards a WAL directory's logs imply (0 if none)."""
+    if not os.path.isdir(wal_dir):
+        return 0
+    n = 0
+    for name in os.listdir(wal_dir):
+        if name.startswith("shard_") and name.endswith(".wal"):
+            n = max(n, int(name[len("shard_"):-len(".wal")]) + 1)
+    return n
+
+
 class ShardedMutableP2HIndex:
     """Read-write P2HNNS index sharded into independent mutable shards."""
 
     def __init__(self, dim: int, num_shards: int = 2, *, n0: int = 128,
                  variant: str = "bc", policy: CompactionPolicy | None = None,
                  seed: int = 0, background: bool = False, router: Any = None,
-                 shards: tuple | None = None):
+                 shards: tuple | None = None, wal_dir: str | None = None,
+                 wal_config: WalConfig | None = None,
+                 on_ack: Any = None, ckpt_root: str | None = None):
         self.dim = int(dim)
         self.d = self.dim + 1
         self.num_shards = int(num_shards)
@@ -122,6 +167,26 @@ class ShardedMutableP2HIndex:
         self.policy = policy or CompactionPolicy()
         self.seed = int(seed)
         self.background = bool(background)
+        #: per-shard WAL root (``shard_{s:03d}.wal`` + MIGRATION.json
+        #: live here); None = no write-ahead logging
+        self._wal_dir = wal_dir
+        self._wal_config = wal_config
+        self._on_ack = on_ack
+        #: serializes migration copy batches against deletes (the
+        #: read-then-resurrect race) and router transitions
+        self._mig_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._misroutes = 0  # deletes that found their gid in no owner
+        if shards is None and wal_dir is not None:
+            # leftover logs (or a journaled mid-flight migration) from a
+            # crashed incarnation imply its shard count; never recover
+            # fewer shards than either records
+            self.num_shards = max(self.num_shards,
+                                  _count_wal_shards(wal_dir))
+            journal = MigrationJournal.read(wal_dir)
+            if journal is not None:
+                self.num_shards = max(self.num_shards,
+                                      max(journal.assignment) + 1)
         self.router = router or HashRouter(self.num_shards)
         if shards is not None:  # load() supplies restored shards
             assert len(shards) == self.num_shards
@@ -142,10 +207,54 @@ class ShardedMutableP2HIndex:
         # publish gate serializes warm-then-flip across shards, so the
         # composition each warmup compiles is the one it publishes into
         # (shard compactions overlap heavily under churn)
-        gate = threading.Lock()
+        self._publish_gate = threading.Lock()
         for s, sh in enumerate(self.shards):
-            sh._warmup_hook = functools.partial(self._prepublish_warm, s)
-            sh._publish_gate = gate
+            self._wire_shard(s, sh)
+        if shards is None and wal_dir is not None:
+            # fresh construction over a WAL dir: replay whatever a
+            # previous incarnation logged (no-checkpoint recovery), then
+            # attach the logs and finish any journaled migration.  A
+            # crash during the *first* save can leave shard checkpoints
+            # without a top-level manifest -- and those shards' logs
+            # already truncated against them -- so when ``ckpt_root``
+            # names the checkpoint directory, a shard that has one is
+            # restored from it (latest step + tail replay) instead of
+            # from its log alone.
+            rebuilt = []
+            for s, sh in enumerate(self.shards):
+                wal = self._make_wal(s)
+                loaded = None
+                if ckpt_root is not None:
+                    try:
+                        loaded = MutableP2HIndex.load(
+                            os.path.join(ckpt_root, f"shard_{s:03d}"),
+                            background=background, wal=wal)
+                    except FileNotFoundError:
+                        loaded = None
+                if loaded is not None:
+                    self._wire_shard(s, loaded)
+                    sh = loaded
+                else:
+                    sh.wal_replay(wal)
+                    sh.attach_wal(wal)
+                rebuilt.append(sh)
+            self.shards = tuple(rebuilt)
+            with self._gid_lock:
+                self._next_gid = max(self._next_gid,
+                                     max(sh._next_gid
+                                         for sh in self.shards))
+            self._recover_migration()
+
+    def _wire_shard(self, s: int, sh: MutableP2HIndex) -> None:
+        sh._warmup_hook = functools.partial(self._prepublish_warm, s)
+        sh._publish_gate = self._publish_gate
+
+    def _wal_path(self, s: int) -> str:
+        return os.path.join(self._wal_dir, f"shard_{s:03d}.wal")
+
+    def _make_wal(self, s: int) -> ShardWal:
+        return ShardWal(self._wal_path(s), config=self._wal_config,
+                        on_ack=self._on_ack)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -186,7 +295,9 @@ class ShardedMutableP2HIndex:
         """Insert one raw (dim,) point; allocates a global id, routes it
         to its owning shard, returns it."""
         gid = int(self._alloc_gids(1)[0])
-        self.shards[self.router.shard_of(gid)].insert(point, gid=gid)
+        owner = self.router.shard_of(gid)
+        self.shards[owner].insert(point, gid=gid)
+        self._fix_stragglers([gid], owner)
         return gid
 
     def insert_batch(self, points: np.ndarray) -> np.ndarray:
@@ -195,16 +306,62 @@ class ShardedMutableP2HIndex:
         pts = np.atleast_2d(np.asarray(points, np.float32))
         gids = self._alloc_gids(len(pts))
         owner = self._owners(gids)
-        for s, shard in enumerate(self.shards):
+        for s in range(len(self.shards)):
             mask = owner == s
             if mask.any():
-                shard.insert_batch(pts[mask], gids=gids[mask])
+                self.shards[s].insert_batch(pts[mask], gids=gids[mask])
+                self._fix_stragglers(gids[mask], s)
         return gids.astype(np.int32)
+
+    def _fix_stragglers(self, gids, owner: int) -> None:
+        """Re-home writes that raced a router transition.
+
+        The write path routes without the migration lock; if the
+        assignment changed between routing and the shard write landing,
+        the rows may sit in a shard the (possibly finished) migration
+        copy loop no longer scans.  Re-reading the router *after* the
+        write closes the race: either the re-read still sees the old
+        map (then ``apply`` -- and hence the copy loop's gid scan --
+        happens after our write and migrates it), or it sees the new
+        map and this fixup moves the rows itself, idempotently racing
+        the copier under the migration lock."""
+        stale = [int(g) for g in gids
+                 if self.router.shard_of(int(g)) != owner]
+        if not stale:
+            return
+        with self._mig_lock:
+            src = self.shards[owner]
+            for g in stale:
+                dst = self.shards[self.router.shard_of(g)]
+                if dst is src:
+                    continue
+                pts, found = src.points_for([g])
+                if len(found):
+                    dst.insert_batch(pts, gids=found)
+                    src.delete(g)
 
     def delete(self, gid: int) -> bool:
         """Delete by global id, forwarded to the owning shard; returns
-        False if the id is not live."""
-        return self.shards[self.router.shard_of(gid)].delete(gid)
+        False if the id is not live.
+
+        Holds the migration lock: while a slot migration is copying,
+        the gid may still live in the slot's *previous* owner
+        (double-resolve via ``router.prev_shard_of``), and the lock
+        keeps the copier from re-inserting a row this delete just
+        removed (read-then-resurrect).  A delete that finds its gid in
+        no owner is counted as a ``misroute`` (:meth:`stats`) -- the
+        signal that the versioned router and the data ever disagree."""
+        gid = int(gid)
+        with self._mig_lock:
+            if self.shards[self.router.shard_of(gid)].delete(gid):
+                return True
+            prev = getattr(self.router, "prev_shard_of",
+                           lambda g: None)(gid)
+            if prev is not None and self.shards[prev].delete(gid):
+                return True
+        with self._stats_lock:
+            self._misroutes += 1
+        return False
 
     def _prepublish_warm(self, shard_idx: int, prebuilt_stk) -> None:
         """Compactor warmup hook (runs on shard ``shard_idx``'s
@@ -241,6 +398,174 @@ class ShardedMutableP2HIndex:
         return out
 
     # ------------------------------------------------------------------
+    # live resharding (repro.stream.resharding)
+    # ------------------------------------------------------------------
+    def _ensure_versioned(self) -> VersionedRouter:
+        """Upgrade the default hash router to the versioned slot router
+        in place (bit-compatible: every gid keeps its owner), first
+        resharding op only."""
+        if isinstance(self.router, VersionedRouter):
+            return self.router
+        if not isinstance(self.router, HashRouter):
+            raise TypeError(
+                f"cannot reshard under router {type(self.router).__name__}"
+                "; pass a VersionedRouter")
+        slots = DEFAULT_SLOTS
+        if slots % self.num_shards:
+            slots = DEFAULT_SLOTS * self.num_shards
+        self.router = VersionedRouter(self.num_shards, num_slots=slots)
+        return self.router
+
+    def split_shard(self, shard: int) -> int:
+        """Split ``shard`` under live traffic: a fresh shard takes over
+        half of its slots, and the affected rows migrate in bounded
+        batches (insert-into-dst before delete-from-src, per batch,
+        under the migration lock -- a crash leaves a duplicate, never a
+        loss; queries de-duplicate by gid throughout).  Writes route by
+        the new map the moment it is adopted.  Returns the new shard's
+        index."""
+        with self._mig_lock:
+            router = self._ensure_versioned()
+            new = len(self.shards)
+            assignment, moving = plan_split(router, int(shard), new)
+            sh = MutableP2HIndex(self.dim, n0=self.n0,
+                                 variant=self.variant, policy=self.policy,
+                                 seed=self.seed + 1000 * new,
+                                 background=self.background)
+            self._wire_shard(new, sh)
+            if self._wal_dir is not None:
+                sh.attach_wal(self._make_wal(new))
+            self.shards = (*self.shards, sh)
+            self.num_shards = len(self.shards)
+            router.apply(assignment, moving)
+            journal = MigrationJournal(
+                src=int(shard), dst=new, moved_slots=tuple(moving),
+                assignment=router.assignment, version=router.version,
+                op="split")
+            self._journal(journal)
+        self._run_migration(journal)
+        return new
+
+    def merge_shards(self, src: int, dst: int) -> None:
+        """Merge shard ``src`` into ``dst`` under live traffic (same
+        journaled copy loop as :meth:`split_shard`).  ``src`` stays in
+        the shard list as an empty husk -- shard indices, and hence the
+        epoch-vector layout, stay stable; its deletes bumped its
+        delete-epoch, so caps recorded against the pre-merge state
+        invalidate naturally."""
+        with self._mig_lock:
+            router = self._ensure_versioned()
+            assignment, moving = plan_merge(router, int(src), int(dst))
+            router.apply(assignment, moving)
+            journal = MigrationJournal(
+                src=int(src), dst=int(dst), moved_slots=tuple(moving),
+                assignment=router.assignment, version=router.version,
+                op="merge")
+            self._journal(journal)
+        self._run_migration(journal)
+
+    def _journal(self, journal: MigrationJournal) -> None:
+        """Persist a migration phase transition: atomic JSON in the WAL
+        dir + an ``OP_ROUTER`` record in both participants' logs (under
+        each shard's writer lock -- the WAL is single-writer)."""
+        if self._wal_dir is None:
+            return
+        journal.write(self._wal_dir)
+        blob = journal.wal_blob()
+        for s in (journal.src, journal.dst):
+            sh = self.shards[s]
+            with sh._lock:
+                if sh._wal is not None:
+                    sh._wal.append(3, -1, 0, blob)  # OP_ROUTER
+                    sh._wal.commit(force=True)
+
+    def _run_migration(self, journal: MigrationJournal) -> None:
+        """The copy phase: stream the moved slots' rows src -> dst in
+        ``_MIGRATE_BATCH``-row batches, each one migration-lock hold,
+        then mark the journal done and clear the double-resolve map."""
+        router = self.router
+        src_sh = self.shards[journal.src]
+        dst_sh = self.shards[journal.dst]
+        moved = np.asarray(sorted(int(s) for s in journal.moved_slots),
+                           np.int32)
+        while True:
+            gids = src_sh.live_gids()
+            if len(gids):
+                gids = gids[np.isin(router.slot_of_many(gids), moved)]
+            if len(gids) == 0:
+                break
+            for i in range(0, len(gids), _MIGRATE_BATCH):
+                with self._mig_lock:
+                    # re-resolve under the lock: a delete may have raced
+                    pts, found = src_sh.points_for(
+                        gids[i:i + _MIGRATE_BATCH])
+                    if len(found):
+                        dst_sh.insert_batch(pts, gids=found)
+                        for g in found:
+                            src_sh.delete(int(g))
+        with self._mig_lock:
+            router.moving = {}
+            done = dataclasses.replace(journal, phase="done")
+            self._journal(done)
+            if self._wal_dir is not None:
+                MigrationJournal.clear(self._wal_dir)
+
+    def _adopt_wal_router(self) -> None:
+        """Adopt the newest ``OP_ROUTER`` assignment found in any
+        shard's log tail.  Covers the crash window where a migration
+        finished (journal cleared) but no checkpoint ran afterwards:
+        the manifest's router predates the move, and without the new
+        assignment the migrated gids would be unreachable for deletes
+        (permanent misroutes)."""
+        import json
+
+        best = None
+        for sh in self.shards:
+            if sh._wal is None:
+                continue
+            for rec in sh._wal.records(0):
+                if rec.op != 3:
+                    continue
+                spec = json.loads(rec.blob)
+                if best is None or spec["version"] > best["version"]:
+                    best = spec
+        if best is not None and \
+                best["version"] > getattr(self.router, "version", -1):
+            self.router = VersionedRouter(
+                num_slots=len(best["assignment"]),
+                assignment=best["assignment"],
+                version=best["version"])
+
+    def _recover_migration(self) -> None:
+        """Finish a migration a crash interrupted (journal present, not
+        done): adopt the journaled assignment, delete the src copy of
+        any gid present in both owners (the crash window between a
+        batch's insert and its deletes), then re-run the copy loop."""
+        if self._wal_dir is None:
+            return
+        self._adopt_wal_router()
+        journal = MigrationJournal.read(self._wal_dir)
+        if journal is None:
+            return
+        if journal.phase == "done":
+            MigrationJournal.clear(self._wal_dir)
+            return
+        # the journaled assignment is authoritative (written atomically
+        # before any data moved); the manifest router may predate it --
+        # and may even still be the hash router, whose slot count need
+        # not match, so rebuild rather than upgrade in place
+        self.router = VersionedRouter(
+            num_slots=len(journal.assignment),
+            assignment=journal.assignment,
+            version=max(journal.version,
+                        getattr(self.router, "version", 0)))
+        src_sh = self.shards[journal.src]
+        dst_sh = self.shards[journal.dst]
+        for g in np.intersect1d(src_sh.live_gids(), dst_sh.live_gids()):
+            src_sh.delete(int(g))  # dst, the new owner, wins
+        self._run_migration(journal)
+
+    # ------------------------------------------------------------------
     # read path (epoch-vector pinned)
     # ------------------------------------------------------------------
     def snapshot(self) -> ShardedSnapshot:
@@ -253,6 +578,7 @@ class ShardedMutableP2HIndex:
             last_delete_epoch=tuple(p.last_delete_epoch for p in pins),
             variant=self.variant,
             d=self.d,
+            router_version=getattr(self.router, "version", 0),
         )
 
     @property
@@ -349,12 +675,18 @@ class ShardedMutableP2HIndex:
     def save(self, directory: str) -> list:
         """Persist every shard (each through its own CheckpointManager
         directory) plus a top-level fsync'd manifest; returns the
-        per-shard steps saved."""
+        per-shard steps saved.  Each shard's save records the WAL
+        frontier ``(wal_offset, wal_seq)`` it covers and truncates the
+        covered log prefix; the manifest mirrors the per-shard
+        ``(checkpoint_epoch, wal_offset, wal_seq)`` triples."""
         from repro.checkpoint.manager import write_json_atomic
 
         os.makedirs(directory, exist_ok=True)
-        steps = [sh.save(os.path.join(directory, f"shard_{s:03d}"))
-                 for s, sh in enumerate(self.shards)]
+        steps, frontiers = [], []
+        for s, sh in enumerate(self.shards):
+            steps.append(sh.save(os.path.join(directory,
+                                              f"shard_{s:03d}")))
+            frontiers.append(sh.last_saved_wal)
         with self._gid_lock:
             next_gid = self._next_gid
         manifest = {
@@ -369,17 +701,28 @@ class ShardedMutableP2HIndex:
             "next_gid": int(next_gid),
             "policy": dataclasses.asdict(self.policy),
             "shard_steps": steps,
+            "shards": [
+                {"checkpoint_epoch": step,
+                 "wal_offset": None if fr is None else fr[0],
+                 "wal_seq": None if fr is None else fr[1]}
+                for step, fr in zip(steps, frontiers)
+            ],
         }
         write_json_atomic(os.path.join(directory, _MANIFEST), manifest)
         return steps
 
     @classmethod
     def load(cls, directory: str, *, background: bool = False,
-             router: Any = None) -> "ShardedMutableP2HIndex":
+             router: Any = None, wal_dir: str | None = None,
+             wal_config: WalConfig | None = None,
+             on_ack: Any = None) -> "ShardedMutableP2HIndex":
         """Recover a sharded index saved by :meth:`save`.  ``router``
         overrides the manifest's router spec (custom router classes are
         the caller's to reconstruct; the spec must describe the same
-        gid -> shard mapping the save used)."""
+        gid -> shard mapping the save used).  ``wal_dir`` replays each
+        shard's log tail past its checkpoint frontier (recovery to the
+        last acknowledged write), re-attaches the logs, and completes
+        any journaled mid-flight migration."""
         from repro.checkpoint.manager import read_json
 
         manifest = read_json(os.path.join(directory, _MANIFEST))
@@ -391,33 +734,101 @@ class ShardedMutableP2HIndex:
                              "reader")
         if router is None:
             spec = manifest["router"]
-            if spec.get("kind") != HashRouter.kind:
+            kind = _ROUTER_KINDS.get(spec.get("kind"))
+            if kind is None:
                 raise ValueError(
                     f"unknown router kind {spec.get('kind')!r}: pass "
                     "router= to load")
-            router = HashRouter.from_spec(spec)
-        shards = tuple(
-            MutableP2HIndex.load(
-                os.path.join(directory, f"shard_{s:03d}"),
-                step=manifest["shard_steps"][s], background=background)
-            for s in range(manifest["num_shards"]))
-        self = cls(manifest["dim"], manifest["num_shards"],
+            router = kind.from_spec(spec)
+        # shards a post-checkpoint split created exist only as WALs (and
+        # the migration journal); recover them too
+        num_shards = manifest["num_shards"]
+        if wal_dir is not None:
+            num_shards = max(num_shards, _count_wal_shards(wal_dir))
+            journal = MigrationJournal.read(wal_dir)
+            if journal is not None:
+                num_shards = max(num_shards,
+                                 max(journal.assignment) + 1)
+        shards = []
+        for s in range(num_shards):
+            wal = None
+            if wal_dir is not None:
+                wal = ShardWal(os.path.join(wal_dir,
+                                            f"shard_{s:03d}.wal"),
+                               config=wal_config, on_ack=on_ack)
+            shard_dir = os.path.join(directory, f"shard_{s:03d}")
+            try:
+                # restore the shard's *latest* checkpoint, not the step
+                # the top-level manifest recorded: each shard save
+                # truncates its WAL against the checkpoint it just
+                # wrote, so a crash between a shard save and the
+                # manifest write leaves the manifest's older step
+                # inconsistent with the (already truncated) log --
+                # restoring it would lose acknowledged ops.  The newest
+                # shard checkpoint is always the one the log frontier
+                # matches; the manifest's per-shard steps are
+                # diagnostics only.
+                shards.append(MutableP2HIndex.load(
+                    shard_dir, background=background, wal=wal))
+            except FileNotFoundError:
+                # never checkpointed (e.g. born in a post-checkpoint
+                # split): the WAL is its entire history
+                sh = MutableP2HIndex(
+                    manifest["dim"], n0=manifest["n0"],
+                    variant=manifest["variant"],
+                    policy=CompactionPolicy(**manifest["policy"]),
+                    seed=manifest["seed"] + 1000 * s,
+                    background=background)
+                if wal is not None:
+                    sh.wal_replay(wal)
+                    sh.attach_wal(wal)
+                shards.append(sh)
+        self = cls(manifest["dim"], num_shards,
                    n0=manifest["n0"], variant=manifest["variant"],
                    policy=CompactionPolicy(**manifest["policy"]),
                    seed=manifest["seed"], background=background,
-                   router=router, shards=shards)
+                   router=router, shards=tuple(shards), wal_dir=wal_dir,
+                   wal_config=wal_config, on_ack=on_ack)
         with self._gid_lock:
-            self._next_gid = max(self._next_gid, manifest["next_gid"])
+            self._next_gid = max(self._next_gid, manifest["next_gid"],
+                                 max(sh._next_gid for sh in self.shards))
+        self._recover_migration()
         return self
+
+    @classmethod
+    def open(cls, directory: str, *, dim: int | None = None,
+             num_shards: int = 2,
+             wal_config: WalConfig | None = None, on_ack: Any = None,
+             **kw: Any) -> "ShardedMutableP2HIndex":
+        """Create-or-recover a durable sharded index rooted at
+        ``directory`` (checkpoints at the top, WALs under ``wal/``).
+
+        If a manifest exists: :meth:`load` + WAL-tail replay.  Otherwise
+        a fresh index is built -- replaying any logs a crashed
+        never-checkpointed incarnation left behind -- with write-ahead
+        logging attached.  This is the entry point the kill-and-recover
+        chaos harness drives; pair with :meth:`save` to bound log
+        growth."""
+        wal_dir = os.path.join(directory, "wal")
+        if os.path.exists(os.path.join(directory, _MANIFEST)):
+            return cls.load(directory, wal_dir=wal_dir,
+                            wal_config=wal_config, on_ack=on_ack, **kw)
+        assert dim is not None, "dim is required to create a new index"
+        return cls(dim, num_shards, wal_dir=wal_dir, ckpt_root=directory,
+                   wal_config=wal_config, on_ack=on_ack, **kw)
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         """Per-shard serving/maintenance stats (bench + ops surface)."""
         pins = [sh.snapshot() for sh in self.shards]
+        with self._stats_lock:
+            misroutes = self._misroutes
         return {
             "num_shards": self.num_shards,
             "live_count": sum(p.live_count for p in pins),
             "epoch": tuple(p.epoch for p in pins),
+            "router_version": getattr(self.router, "version", 0),
+            "misroutes": misroutes,
             "admission": self.admission_stats(),
             "per_shard": [
                 {"live": p.live_count, "epoch": p.epoch,

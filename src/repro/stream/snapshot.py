@@ -433,6 +433,12 @@ class ShardedSnapshot:
     last_delete_epoch: tuple  # per-shard delete-epoch vector
     variant: str
     d: int
+    #: router version this view was pinned under (0 = un-versioned hash
+    #: router).  A split/merge changes the shard count, so the epoch
+    #: *vector length* changes with it and the lambda cache's staleness
+    #: check already invalidates caps across a resharding; this field
+    #: makes the placement generation observable to the serving layer.
+    router_version: int = 0
 
     # ------------------------------------------------------------------
     @property

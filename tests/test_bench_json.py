@@ -1,8 +1,9 @@
 """Fence for the bench-trajectory tooling: ``tools/check_bench_json.py``
 must accept a schema-complete ``BENCH_*.json`` and reject missing files,
-malformed JSON, documents that lost required keys, and tail-latency
-blowups (p99/p50 past ``--max-p99-p50-ratio``) -- the CI bench-smoke
-lane leans on these exit codes."""
+malformed JSON, documents that lost required keys, tail-latency blowups
+(p99/p50 past ``--max-p99-p50-ratio``), and non-zero durability
+invariants (a lost acked op is a bug at any config size) -- the CI
+bench-smoke lane leans on these exit codes."""
 import json
 import os
 import sys
@@ -50,6 +51,18 @@ def _minimal_stream_sharded():
         "skip_profile": {"seq": prof,
                          "stacked": {**prof,
                                      "probe": {"tiles": 4}}},
+    }
+
+
+def _minimal_durability():
+    """Smallest document satisfying the BENCH_durability.json schema,
+    with the invariant counters at their only legal value (zero)."""
+    return {
+        "rounds": 2, "shards": 2, "acked_ops": 100,
+        "replay_ops_per_s": 1000.0,
+        "recovery_p50_s": 0.05, "recovery_max_s": 0.1,
+        "restarts": 0,
+        "acked_loss": 0, "dup_gids": 0, "epoch_regressions": 0,
     }
 
 
@@ -106,6 +119,26 @@ def test_check_bench_json_rejects_tail_blowup(tmp_path, p50_key, p99_key):
     # 0 disables the fence entirely
     assert check_bench_json.main(
         ["--max-p99-p50-ratio", "0", str(path)]) == 0
+
+
+def test_check_bench_json_accepts_clean_durability(tmp_path):
+    path = tmp_path / "BENCH_durability.json"
+    path.write_text(json.dumps(_minimal_durability()))
+    assert check_bench_json.main([str(path)]) == 0
+
+
+@pytest.mark.parametrize("key", ["acked_loss", "dup_gids",
+                                 "epoch_regressions"])
+def test_check_bench_json_rejects_nonzero_invariant(tmp_path, key):
+    doc = _minimal_durability()
+    doc[key] = 1
+    path = tmp_path / "BENCH_durability.json"
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1
+    # unlike the latency ratio there is no flag to relax the fence:
+    # disabling the ratio check must leave the invariant enforced
+    assert check_bench_json.main(
+        ["--max-p99-p50-ratio", "0", str(path)]) == 1
 
 
 def test_check_bench_json_ratio_guards_degenerate_p50(tmp_path):

@@ -1,0 +1,486 @@
+"""Durability subsystem suite: WAL edge cases, checkpoint atomicity,
+crash-window recovery, live resharding under concurrent queries, and
+the kill-and-recover chaos harness (marked ``chaos``; its own CI lane).
+
+Covers the PR's acceptance surface:
+
+  * WAL framing -- empty logs, torn tails (short and corrupt final
+    records are truncated, never replayed), prefix truncation keeping
+    logical offsets valid;
+  * ack ordering -- group-commit acks come back exactly once, in seq
+    order, and only for records an fsync covered (property test over
+    random append/commit interleavings);
+  * idempotent replay -- a double restore applies each op at most once
+    and is bit-identical to a single restore;
+  * the save/manifest crash window -- a sharded save that dies after a
+    shard checkpoint (WAL already truncated against it) but before the
+    top-level manifest write must still recover every acked op (the
+    stale-manifest-step regression the chaos harness caught);
+  * ``write_json_atomic`` parent-directory fsync (the torn-manifest
+    rename-durability hole);
+  * misroute accounting -- an unknown-gid delete is counted, not
+    raised;
+  * resharding -- ``split_shard`` under a concurrent query storm stays
+    bit-exact vs the unsplit oracle throughout the migration, and the
+    full split/merge cycle preserves the live set;
+  * chaos -- SIGKILL mid-write-storm, recover, assert no acked op lost
+    / no gid duplicated / epochs monotone (real subprocess kill).
+"""
+import json
+import os
+import shutil
+import stat
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from _hyp import given_int_seed
+from repro.checkpoint.manager import write_json_atomic
+from repro.stream import CompactionPolicy, MutableP2HIndex, \
+    ShardedMutableP2HIndex
+from repro.stream.wal import OP_DELETE, OP_INSERT, ShardWal, WalConfig
+from test_stream import DIM, _assert_matches_oracle, _mkdata
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _wal(tmp_path, name="s.wal", **kw):
+    return ShardWal(str(tmp_path / name), **kw)
+
+
+def _records(path):
+    wal = ShardWal(str(path))
+    try:
+        return list(wal.records(0))
+    finally:
+        wal.close()
+
+
+# ------------------------------------------------------------------ wal
+def test_wal_empty_log_roundtrip(tmp_path):
+    wal = _wal(tmp_path)
+    assert wal.tail_offset() == 0
+    assert list(wal.records(0)) == []
+    wal.close()
+    wal = _wal(tmp_path)  # reopen: header only, still empty
+    assert wal.last_seq == 0 and list(wal.records(0)) == []
+    wal.close()
+
+
+def test_wal_append_commit_reopen(tmp_path):
+    wal = _wal(tmp_path)
+    wal.append(OP_INSERT, 7, 3, b"\x01\x02")
+    off = wal.append(OP_DELETE, 7, 4)
+    assert wal.commit(force=True)
+    wal.close()
+    recs = _records(tmp_path / "s.wal")
+    assert [(r.op, r.gid, r.epoch) for r in recs] == [
+        (OP_INSERT, 7, 3), (OP_DELETE, 7, 4)]
+    assert recs[0].blob == b"\x01\x02" and recs[1].end_offset == off
+    assert [r.seq for r in recs] == [1, 2]
+
+
+@pytest.mark.parametrize("damage", ["short", "corrupt"])
+def test_wal_torn_tail_truncated(tmp_path, damage):
+    wal = _wal(tmp_path)
+    for g in range(4):
+        wal.append(OP_INSERT, g, g, b"x" * 8)
+    wal.commit(force=True)
+    good_tail = wal.tail_offset()
+    wal.close()
+    path = tmp_path / "s.wal"
+    if damage == "short":  # a crash mid-append: half a record
+        with open(path, "ab") as fh:
+            fh.write(b"\x40\x00\x00\x00\xde\xad")
+    else:  # full-length final record, flipped payload byte
+        with open(path, "r+b") as fh:
+            fh.seek(-3, os.SEEK_END)
+            fh.write(b"\xff")
+    wal = _wal(tmp_path)  # reopen-for-append truncates the torn tail
+    kept = list(wal.records(0))
+    assert wal.tail_offset() == (good_tail if damage == "short"
+                                 else kept[-1].end_offset)
+    assert [r.gid for r in kept] == ([0, 1, 2, 3] if damage == "short"
+                                     else [0, 1, 2])
+    wal.append(OP_INSERT, 99, 9, b"y")  # and appends continue cleanly
+    wal.commit(force=True)
+    wal.close()
+    assert [r.gid for r in _records(path)][-1] == 99
+
+
+def test_wal_truncate_prefix_keeps_logical_offsets(tmp_path):
+    wal = _wal(tmp_path)
+    offs = [wal.append(OP_INSERT, g, g) for g in range(6)]
+    wal.commit(force=True)
+    wal.truncate_prefix(offs[2])  # drop the first three records
+    assert wal.base_offset == offs[2]
+    tail = list(wal.records(0))
+    assert [r.gid for r in tail] == [3, 4, 5]
+    assert tail[0].offset == offs[2]  # logical offsets survive
+    wal.append(OP_INSERT, 6, 6)
+    wal.commit(force=True)
+    wal.close()
+    assert [r.gid for r in _records(tmp_path / "s.wal")] == [3, 4, 5, 6]
+
+
+def test_wal_seq_survives_truncation_and_reopen(tmp_path):
+    """The chaos-harness regression: a checkpoint that empties the log
+    must not let the next incarnation restart at seq 1, or its acked
+    ops would fall under the checkpoint's wal_seq and be skipped at
+    replay."""
+    wal = _wal(tmp_path)
+    for g in range(5):
+        wal.append(OP_INSERT, g, g)
+    wal.commit(force=True)
+    wal.truncate_prefix(wal.tail_offset())  # checkpoint covered it all
+    wal.close()
+    wal = _wal(tmp_path)  # a new process reopens the empty log
+    assert wal.last_seq == 5
+    wal.append(OP_INSERT, 9, 9)
+    wal.commit(force=True)
+    recs = list(wal.records(0))
+    assert [r.seq for r in recs] == [6]  # strictly past the checkpoint
+    wal.close()
+
+
+@given_int_seed(max_examples=25, hi=2**31)
+def test_wal_ack_order_and_durability(seed):
+    """Acks fire exactly once, in seq order, only after a covering
+    fsync -- under random append/commit interleavings and group sizes."""
+    import tempfile
+
+    rng = np.random.default_rng(seed)
+    acked = []
+    with tempfile.TemporaryDirectory() as d:
+        wal = ShardWal(
+            os.path.join(d, "a.wal"),
+            config=WalConfig(fsync_every_n=int(rng.integers(1, 6)),
+                             fsync_interval_ms=1e9),  # size-only trigger
+            on_ack=acked.extend)
+        appended = []
+        for g in range(int(rng.integers(5, 40))):
+            wal.append(OP_INSERT, g, 0, token=g)
+            appended.append(g)
+            if rng.random() < 0.3:
+                wal.commit(force=bool(rng.random() < 0.5))
+            # every acked token's record is covered by a sync already
+            assert all(t < wal.synced_seq for t in acked)
+        wal.commit(force=True)
+        assert acked == appended  # exactly once, in order
+        # durability: everything acked is re-readable after reopen
+        wal.close()
+        assert [r.gid for r in _records(os.path.join(d, "a.wal"))] \
+            == appended
+
+
+# ------------------------------------------------------ replay / restore
+def _storm(idx, n_ops, seed, dim=DIM):
+    """Deterministic mixed workload; returns the surviving gid set."""
+    rng = np.random.default_rng(seed)
+    live = []
+    for _ in range(n_ops):
+        gids = idx.insert_batch(
+            rng.normal(size=(2, dim)).astype(np.float32))
+        live += [int(g) for g in gids]
+        if live and rng.random() < 0.4:
+            gid = live.pop(int(rng.integers(len(live))))
+            assert idx.delete(gid)
+    return set(live)
+
+
+def test_mutable_wal_replay_double_restore_idempotent(tmp_path):
+    wal = _wal(tmp_path, "m.wal", config=WalConfig(fsync_every_n=1))
+    m = MutableP2HIndex(DIM, n0=32,
+                        policy=CompactionPolicy(delta_capacity=16))
+    m.attach_wal(wal)
+    rng = np.random.default_rng(0)
+    for g in range(30):
+        m.insert(rng.normal(size=DIM).astype(np.float32))
+    for g in range(0, 30, 3):
+        m.delete(g)
+    live = set(g for g in range(30)) - set(range(0, 30, 3))
+    m.close()
+
+    r1 = MutableP2HIndex(DIM, n0=32,
+                         policy=CompactionPolicy(delta_capacity=16))
+    stats = r1.wal_replay(_wal(tmp_path, "m.wal"))
+    assert stats["applied"] == 40 and stats["skipped"] == 0
+    assert set(int(g) for g in r1.live_gids()) == live
+    # replaying the same log again applies nothing
+    stats2 = r1.wal_replay(_wal(tmp_path, "m.wal"))
+    assert stats2["applied"] == 0 and stats2["ops"] == stats["ops"]
+    assert set(int(g) for g in r1.live_gids()) == live
+    ep = r1.epoch
+    r2 = MutableP2HIndex(DIM, n0=32,
+                         policy=CompactionPolicy(delta_capacity=16))
+    r2.wal_replay(_wal(tmp_path, "m.wal"))
+    pts1, g1 = r1.points_for(sorted(live))
+    pts2, g2 = r2.points_for(sorted(live))
+    np.testing.assert_array_equal(g1, g2)
+    np.testing.assert_array_equal(pts1, pts2)
+    assert r1.epoch == ep  # second replay did not move the epoch
+
+
+def test_sharded_open_recovers_to_last_acked_write(tmp_path):
+    """checkpoint + tail replay == the pre-crash live set, including
+    ops acked after the last save."""
+    root = str(tmp_path / "idx")
+    idx = ShardedMutableP2HIndex.open(
+        root, dim=DIM, num_shards=2,
+        wal_config=WalConfig(fsync_every_n=1))
+    live = _storm(idx, 20, seed=1)
+    idx.save(root)
+    live |= _storm(idx, 15, seed=2)
+    for g in list(sorted(live))[:5]:
+        idx.delete(g)
+        live.discard(g)
+    epochs = idx.epoch
+    q = np.zeros((2, DIM + 1), np.float32)
+    q[:, 0] = 1.0
+    want_d, want_i = idx.query(q, k=4)
+    idx.close()  # simulated clean-ish crash: no second save
+
+    rec = ShardedMutableP2HIndex.open(root)
+    assert set(int(g) for sh in rec.shards
+               for g in sh.live_gids()) == live
+    assert all(b >= a for a, b in zip(epochs, rec.epoch))
+    got_d, got_i = rec.query(q, k=4)
+    np.testing.assert_array_equal(np.asarray(want_i), np.asarray(got_i))
+    np.testing.assert_allclose(np.asarray(want_d), np.asarray(got_d),
+                               rtol=1e-6)
+    rec.close()
+
+
+def test_recovery_survives_save_manifest_crash_window(tmp_path):
+    """A kill between a shard checkpoint (log already truncated) and
+    the top-level manifest write must not lose acked ops: recovery uses
+    each shard's newest checkpoint, not the manifest's recorded step."""
+    root = str(tmp_path / "idx")
+    idx = ShardedMutableP2HIndex.open(
+        root, dim=DIM, num_shards=2,
+        wal_config=WalConfig(fsync_every_n=1))
+    live = _storm(idx, 15, seed=3)
+    idx.save(root)
+    stale = open(os.path.join(root, "MANIFEST.json"), "rb").read()
+    next_gid_before = idx._next_gid
+    live |= _storm(idx, 15, seed=4)
+    idx.save(root)  # truncates the WALs against the new checkpoints
+    idx.close()
+    # crash reordering: the manifest write never landed
+    with open(os.path.join(root, "MANIFEST.json"), "wb") as fh:
+        fh.write(stale)
+
+    rec = ShardedMutableP2HIndex.open(root)
+    assert set(int(g) for sh in rec.shards
+               for g in sh.live_gids()) == live
+    # the id high-water mark must not regress either (gid reuse)
+    assert rec._next_gid > next_gid_before
+    rec.close()
+
+
+def test_recovery_survives_first_save_without_manifest(tmp_path):
+    """Same window on the *first* save: shard checkpoints exist, logs
+    are truncated, but no manifest was ever written."""
+    root = str(tmp_path / "idx")
+    idx = ShardedMutableP2HIndex.open(
+        root, dim=DIM, num_shards=2,
+        wal_config=WalConfig(fsync_every_n=1))
+    live = _storm(idx, 15, seed=5)
+    idx.save(root)
+    live |= _storm(idx, 10, seed=6)  # tail past the checkpoint
+    idx.close()
+    os.remove(os.path.join(root, "MANIFEST.json"))
+
+    rec = ShardedMutableP2HIndex.open(root, dim=DIM, num_shards=2)
+    assert set(int(g) for sh in rec.shards
+               for g in sh.live_gids()) == live
+    rec.close()
+
+
+# ------------------------------------------------- checkpoint atomicity
+def test_write_json_atomic_fsyncs_parent_dir(tmp_path, monkeypatch):
+    """Rename durability: the parent directory must be fsync'd after
+    the replace, else a crash can roll the rename back (torn manifest)."""
+    fsynced_dir = []
+    real_fsync = os.fsync
+
+    def spy(fd):
+        if stat.S_ISDIR(os.fstat(fd).st_mode):
+            fsynced_dir.append(fd)
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy)
+    path = tmp_path / "sub" / "MANIFEST.json"
+    os.makedirs(path.parent)
+    write_json_atomic(str(path), {"ok": 1})
+    assert fsynced_dir, "parent directory was never fsync'd"
+    assert json.loads(path.read_text()) == {"ok": 1}
+    assert not os.path.exists(str(path) + ".tmp")
+
+
+def test_write_json_atomic_never_torn(tmp_path):
+    """A reader racing the writer sees the old or the new document,
+    never a partial one (tmp + rename)."""
+    path = tmp_path / "m.json"
+    write_json_atomic(str(path), {"v": 0})
+    stop, bad = threading.Event(), []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                doc = json.loads(path.read_text())
+            except json.JSONDecodeError as e:  # a torn read
+                bad.append(e)
+                return
+            assert set(doc) == {"v"}
+
+    t = threading.Thread(target=reader)
+    t.start()
+    for v in range(1, 200):
+        write_json_atomic(str(path), {"v": v})
+    stop.set()
+    t.join()
+    assert not bad
+
+
+# ------------------------------------------------------------ misroutes
+def test_unknown_gid_delete_counts_misroute():
+    idx = ShardedMutableP2HIndex.from_data(_mkdata(64), 2, n0=32)
+    assert idx.stats()["misroutes"] == 0
+    assert not idx.delete(10_000)  # never allocated
+    assert idx.stats()["misroutes"] == 1
+    assert idx.delete(3)           # live: not a misroute
+    assert not idx.delete(3)       # double delete: counted
+    assert idx.stats()["misroutes"] == 2
+    assert idx.live_count == 63
+    idx.close()
+
+
+# ----------------------------------------------------------- resharding
+def test_split_shard_bit_exact_under_concurrent_queries(monkeypatch):
+    """The acceptance criterion: a shard split under a live query storm
+    returns bit-exact top-k vs the unsplit oracle throughout the
+    migration."""
+    from repro.stream import sharded as sharded_mod
+
+    # tiny copy batches: many migration-lock holds, so queries really
+    # do interleave with a half-moved shard
+    monkeypatch.setattr(sharded_mod, "_MIGRATE_BATCH", 16)
+    data = _mkdata(600, seed=11)
+    idx = ShardedMutableP2HIndex.from_data(
+        data, 2, n0=32, policy=CompactionPolicy(delta_capacity=32))
+    rng = np.random.default_rng(2)
+    q = rng.normal(size=(4, DIM + 1)).astype(np.float32)
+    want_d, want_i = idx.query(q, k=8)
+    want_d, want_i = np.asarray(want_d), np.asarray(want_i)
+
+    errors, done = [], threading.Event()
+
+    def storm():
+        try:
+            while not done.is_set():
+                got_d, got_i = idx.query(q, k=8)
+                np.testing.assert_array_equal(np.asarray(got_i), want_i)
+                np.testing.assert_array_equal(np.asarray(got_d), want_d)
+        except BaseException as e:  # surfaced after join
+            errors.append(e)
+
+    t = threading.Thread(target=storm)
+    t.start()
+    try:
+        new = idx.split_shard(0)
+    finally:
+        done.set()
+        t.join()
+    assert not errors, errors[0]
+    assert new == 2 and idx.num_shards == 3
+    assert idx.stats()["router_version"] >= 1
+    # post-split: same answers, all rows owned exactly once
+    got_d, got_i = idx.query(q, k=8)
+    np.testing.assert_array_equal(np.asarray(got_i), want_i)
+    per_shard = [set(int(g) for g in sh.live_gids())
+                 for sh in idx.shards]
+    assert sum(len(s) for s in per_shard) == len(data)
+    assert set().union(*per_shard) == set(range(len(data)))
+    assert all(len(s) for s in per_shard[:3])  # data actually moved
+
+    # and the merge back is the same machinery in reverse
+    idx.merge_shards(2, 0)
+    got_d, got_i = idx.query(q, k=8)
+    np.testing.assert_array_equal(np.asarray(got_i), want_i)
+    assert len(idx.shards[2].live_gids()) == 0  # husk
+    assert idx.live_count == len(data)
+    _assert_matches_oracle(idx, q, 8, "sweep", tag="post-merge")
+    idx.close()
+
+
+def test_split_with_writes_and_crash_recovery(tmp_path):
+    """Split + concurrent-era writes, then recovery mid-journal: a
+    crash right after the journal write (no rows moved yet) finishes
+    the migration on open."""
+    root = str(tmp_path / "idx")
+    idx = ShardedMutableP2HIndex.open(
+        root, dim=DIM, num_shards=2,
+        wal_config=WalConfig(fsync_every_n=1))
+    live = _storm(idx, 30, seed=9)
+    idx.split_shard(0)
+    live |= _storm(idx, 10, seed=10)  # routed by the new map
+    assert set(int(g) for sh in idx.shards
+               for g in sh.live_gids()) == live
+    # simulate a crash mid-migration on the *next* split: re-journal a
+    # copy phase by hand (the copy loop has not run)
+    from repro.stream.resharding import MigrationJournal, plan_split
+
+    with idx._mig_lock:
+        router = idx.router
+        assignment, moving = plan_split(router, 1, 3)
+        idx.shards = (*idx.shards,
+                      type(idx.shards[0])(DIM, n0=idx.n0,
+                                          variant=idx.variant,
+                                          policy=idx.policy,
+                                          seed=idx.seed + 3000))
+        idx.num_shards = 4
+        router.apply(assignment, moving)
+        journal = MigrationJournal(src=1, dst=3,
+                                   moved_slots=tuple(moving),
+                                   assignment=router.assignment,
+                                   version=router.version, op="split")
+        idx._journal(journal)
+    idx.close()  # "crash": journal says copy, no rows moved
+
+    rec = ShardedMutableP2HIndex.open(root, dim=DIM, num_shards=2)
+    assert rec.num_shards == 4
+    assert set(int(g) for sh in rec.shards
+               for g in sh.live_gids()) == live
+    # the journaled migration completed: moved slots' gids live in dst
+    owners = {int(g): s for s, sh in enumerate(rec.shards)
+              for g in sh.live_gids()}
+    for g, s in owners.items():
+        assert rec.router.shard_of(g) == s, (g, s)
+    assert rec.stats()["misroutes"] == 0
+    for g in sorted(live)[:10]:  # deletes route correctly post-recovery
+        assert rec.delete(g)
+    rec.close()
+
+
+# ---------------------------------------------------------------- chaos
+@pytest.mark.chaos
+def test_kill_and_recover_chaos(tmp_path):
+    """SIGKILL a write-storm subprocess mid-flight, recover, verify the
+    durability contract (real process kill; both recovery flavors)."""
+    from benchmarks.bench_durability import _kill_round
+
+    root = str(tmp_path / "chaos")
+    os.makedirs(root)
+    for r, save_every in enumerate((6, 0)):
+        res = _kill_round(root, dim=DIM, shards=2, seed=100 + r,
+                          min_acks=40, kill_after_s=0.25,
+                          save_every=save_every, fsync_every_n=4)
+        assert res["acked_loss"] == 0, res
+        assert res["dup_gids"] == 0, res
+        assert res["resurrected"] == 0, res
+        assert res["epoch_regressions"] == 0, res
+        assert res["acked_ops"] > 0 and res["live_count"] > 0
+    shutil.rmtree(root)

@@ -14,13 +14,19 @@ query p99 at ~53x p50 hide entirely in medians, so the ratio is the
 regression signal CI watches (values stay config-dependent, the ratio
 does not).
 
+Beyond ratio fences, *invariant* counters (see :data:`ZERO_KEYS`) are
+pinned to exactly zero: ``BENCH_durability.json``'s acked-op loss /
+duplicate-gid / epoch-regression counts are correctness claims, not
+tunables, so any non-zero value fails the lane at any config size.
+
 Usage (CI bench-smoke lane; see .github/workflows/ci.yml):
 
-    python -m benchmarks.run --only serve,stream_sharded --smoke \
-        --out-dir bench-json
+    python -m benchmarks.run --only serve,stream_sharded,durability \
+        --smoke --out-dir bench-json
     python tools/check_bench_json.py --max-p99-p50-ratio 10 \
         bench-json/BENCH_serve.json \
-        bench-json/BENCH_stream_sharded.json
+        bench-json/BENCH_stream_sharded.json \
+        bench-json/BENCH_durability.json
 """
 from __future__ import annotations
 
@@ -58,6 +64,18 @@ SCHEMAS = {
         "stacked.skip_profile.stacked.probe.scanned": _NUM,
         "stacked.skip_profile.stacked.probe.skipped": _NUM,
     },
+    "BENCH_durability.json": {
+        "rounds": _NUM,
+        "shards": _NUM,
+        "acked_ops": _NUM,
+        "replay_ops_per_s": _NUM,
+        "recovery_p50_s": _NUM,
+        "recovery_max_s": _NUM,
+        "restarts": _NUM,
+        "acked_loss": _NUM,
+        "dup_gids": _NUM,
+        "epoch_regressions": _NUM,
+    },
     "BENCH_stream_sharded.json": {
         "shards": _NUM,
         "write_ops_per_s": _NUM,
@@ -86,6 +104,16 @@ RATIO_KEYS = {
         ("query_p50_ms", "query_p99_ms"),
         ("delete_p50_us", "delete_p99_us"),
     ),
+}
+
+#: invariant counters that must be exactly zero, keyed by file basename.
+#: Unlike the latency ratio (a tunable fence), these are correctness
+#: claims -- a smoke config's *numbers* are meaningless but a lost
+#: acknowledged write is a bug at any scale, so they are always
+#: enforced.
+ZERO_KEYS = {
+    "BENCH_durability.json": ("acked_loss", "dup_gids",
+                              "epoch_regressions"),
 }
 
 
@@ -138,6 +166,11 @@ def check_file(path: str, max_ratio: float = 0.0) -> list:
                     f"{path}: {p99_key}/{p50_key} = {p99:.3f}/{p50:.3f} "
                     f"= {ratio:.1f}x exceeds --max-p99-p50-ratio "
                     f"{max_ratio:g} (tail-latency regression)")
+    for key in ZERO_KEYS.get(name, ()):
+        val = doc.get(key)
+        if isinstance(val, _NUM) and not isinstance(val, bool) and val != 0:
+            errors.append(f"{path}: invariant {key!r} = {val} (must be 0 "
+                          "-- durability contract violated)")
     return errors
 
 
