@@ -255,7 +255,7 @@ class MutableP2HIndex:
         self._max_norm = max(self._max_norm, float(np.linalg.norm(x1)))
         return gid
 
-    def delete(self, gid: int) -> bool:
+    def delete(self, gid: int, *, commit: bool = True) -> bool:
         """Delete by global id; returns False if the id is not live.
 
         O(tombstone flip) + one snapshot publish.  Compaction is *never*
@@ -264,7 +264,13 @@ class MutableP2HIndex:
         under the writer lock): background mode signals the compactor
         thread, inline mode defers to the next insert / ``compact()``
         call.  A tripwire in ``_pin_inputs_locked`` asserts the
-        invariant."""
+        invariant.
+
+        ``commit=False`` logs the op but defers the WAL group commit to
+        the caller (the sharded front-end runs it outside its migration
+        lock, so deletes on other shards never queue behind one shard's
+        fsync); the op is not acknowledged until that commit covers
+        it."""
         gid = int(gid)
         self._tl.in_delete = True
         try:
@@ -274,7 +280,7 @@ class MutableP2HIndex:
                     self._wal_log(2, gid)  # OP_DELETE
         finally:
             self._tl.in_delete = False
-        if ok:
+        if ok and commit:
             self._wal_commit()
         return ok
 

@@ -16,12 +16,15 @@ mismatch) invalidates warm caps across a split/merge automatically.
 
 Migration state machine (journaled; see ``MigrationJournal``)::
 
-    prepare:  new assignment computed, version bumped, journal written
-              (atomic JSON + an OP_ROUTER record in both shards' WALs).
-              From this instant new writes for moved slots route to the
-              destination; deletes double-resolve (new owner, then the
-              journaled previous owner); queries already fan over every
-              shard and ``merge_topk`` de-duplicates by gid, so a point
+    prepare:  new assignment computed and journaled (atomic JSON + an
+              OP_ROUTER record in both shards' WALs) *before* it is
+              adopted -- the journal is what recovery trusts, so it
+              must be durable before the new map can route (and ack) a
+              single write.  Then the version bumps and new writes for
+              moved slots route to the destination; deletes
+              double-resolve (new owner, then the journaled previous
+              owner); queries already fan over every shard and
+              ``merge_topk`` de-duplicates by gid, so a point
               momentarily visible in both owners is harmless.
     copy:     moved live rows stream src -> dst in bounded batches under
               the migration lock (insert into dst *before* delete from

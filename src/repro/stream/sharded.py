@@ -69,6 +69,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import re
 import threading
 from typing import Any
 
@@ -139,14 +140,21 @@ _ROUTER_KINDS = {HashRouter.kind: HashRouter,
                  VersionedRouter.kind: VersionedRouter}
 
 
+#: the shard-log naming scheme _wal_path writes; anything else in the
+#: WAL dir (backups, editor droppings, "shard_old.wal") is not ours and
+#: must not crash recovery
+_WAL_NAME = re.compile(r"shard_(\d+)\.wal")
+
+
 def _count_wal_shards(wal_dir: str) -> int:
     """Number of shards a WAL directory's logs imply (0 if none)."""
     if not os.path.isdir(wal_dir):
         return 0
     n = 0
     for name in os.listdir(wal_dir):
-        if name.startswith("shard_") and name.endswith(".wal"):
-            n = max(n, int(name[len("shard_"):-len(".wal")]) + 1)
+        m = _WAL_NAME.fullmatch(name)
+        if m is not None:
+            n = max(n, int(m.group(1)) + 1)
     return n
 
 
@@ -344,21 +352,32 @@ class ShardedMutableP2HIndex:
         """Delete by global id, forwarded to the owning shard; returns
         False if the id is not live.
 
-        Holds the migration lock: while a slot migration is copying,
-        the gid may still live in the slot's *previous* owner
-        (double-resolve via ``router.prev_shard_of``), and the lock
-        keeps the copier from re-inserting a row this delete just
-        removed (read-then-resurrect).  A delete that finds its gid in
-        no owner is counted as a ``misroute`` (:meth:`stats`) -- the
-        signal that the versioned router and the data ever disagree."""
+        Holds the migration lock across the in-memory delete only
+        (O(dict ops)): while a slot migration is copying, the gid may
+        still live in the slot's *previous* owner (double-resolve via
+        ``router.prev_shard_of``), and the lock keeps the copier from
+        re-inserting a row this delete just removed
+        (read-then-resurrect).  The WAL group commit -- a possible
+        fsync -- runs *after* the lock is released, so deletes on other
+        shards never serialize behind one shard's disk.  A delete that
+        finds its gid in no owner is counted as a ``misroute``
+        (:meth:`stats`) -- the signal that the versioned router and the
+        data ever disagree."""
         gid = int(gid)
+        owner = None
         with self._mig_lock:
-            if self.shards[self.router.shard_of(gid)].delete(gid):
-                return True
-            prev = getattr(self.router, "prev_shard_of",
-                           lambda g: None)(gid)
-            if prev is not None and self.shards[prev].delete(gid):
-                return True
+            sh = self.shards[self.router.shard_of(gid)]
+            if sh.delete(gid, commit=False):
+                owner = sh
+            else:
+                prev = getattr(self.router, "prev_shard_of",
+                               lambda g: None)(gid)
+                if prev is not None and self.shards[prev].delete(
+                        gid, commit=False):
+                    owner = self.shards[prev]
+        if owner is not None:
+            owner._wal_commit()
+            return True
         with self._stats_lock:
             self._misroutes += 1
         return False
@@ -437,12 +456,19 @@ class ShardedMutableP2HIndex:
                 sh.attach_wal(self._make_wal(new))
             self.shards = (*self.shards, sh)
             self.num_shards = len(self.shards)
-            router.apply(assignment, moving)
+            # journal the planned assignment BEFORE apply() routes any
+            # write by it: the moment the new map is live, an insert can
+            # land in the destination's WAL and be acked -- if the
+            # journal (what recovery adopts) were not already durable, a
+            # crash in that window would recover the old map and strand
+            # the acked gid as a permanent misroute.  apply() bumps the
+            # version by one, so the journal records version + 1.
             journal = MigrationJournal(
                 src=int(shard), dst=new, moved_slots=tuple(moving),
-                assignment=router.assignment, version=router.version,
-                op="split")
+                assignment=tuple(assignment),
+                version=router.version + 1, op="split")
             self._journal(journal)
+            router.apply(assignment, moving)
         self._run_migration(journal)
         return new
 
@@ -456,12 +482,14 @@ class ShardedMutableP2HIndex:
         with self._mig_lock:
             router = self._ensure_versioned()
             assignment, moving = plan_merge(router, int(src), int(dst))
-            router.apply(assignment, moving)
+            # journal durably before the new map routes a single write
+            # (see split_shard)
             journal = MigrationJournal(
                 src=int(src), dst=int(dst), moved_slots=tuple(moving),
-                assignment=router.assignment, version=router.version,
-                op="merge")
+                assignment=tuple(assignment),
+                version=router.version + 1, op="merge")
             self._journal(journal)
+            router.apply(assignment, moving)
         self._run_migration(journal)
 
     def _journal(self, journal: MigrationJournal) -> None:

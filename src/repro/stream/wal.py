@@ -54,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import struct
+import threading
 import time
 import zlib
 from typing import Any, Callable, Iterator
@@ -108,8 +109,19 @@ def _encode(op: int, seq: int, gid: int, epoch: int, blob: bytes) -> bytes:
 
 
 class ShardWal:
-    """One shard's append-only log (single writer; the shard's writer
-    lock serializes appends, so this class does no locking of its own)."""
+    """One shard's append-only log.
+
+    Appends are serialized by the shard's writer lock, but **group
+    commits run off that lock** (an acknowledged write must not stall
+    concurrent appenders behind its fsync), so the class guards its own
+    state: ``_mu`` makes each append atomic with respect to the commit
+    path's prefix snapshot, and ``_commit_mu`` serializes committers
+    (and truncation, which swaps the file handle) with each other.  A
+    commit fsyncs, then marks synced and acks **only the prefix that
+    was pending when it started**: a record appended while the fsync is
+    in flight stays pending, with its ack token, for a later commit
+    (its own write call always issues one) -- an ack can never fire for
+    a record that is not yet on disk."""
 
     def __init__(self, path: str, *, config: WalConfig | None = None,
                  on_ack: Callable[[list], None] | None = None):
@@ -123,6 +135,8 @@ class ShardWal:
         self._pending = 0        # records appended since the last fsync
         self._pending_acks: list[tuple[int, Any]] = []  # (seq, token)
         self._last_sync_t = time.monotonic()
+        self._mu = threading.Lock()        # append/commit state
+        self._commit_mu = threading.RLock()  # one committer at a time
         self._fh = self._open_scan()
 
     # ------------------------------------------------------------------
@@ -172,43 +186,58 @@ class ShardWal:
         """Append one record (no fsync); returns the logical offset past
         it.  ``token`` (optional) is handed to ``on_ack`` once the
         covering group commit completes."""
-        self.last_seq += 1
-        self._fh.write(_encode(op, self.last_seq, int(gid), int(epoch),
-                               blob))
-        self._pending += 1
-        if token is not None:
-            self._pending_acks.append((self.last_seq, token))
-        return self.tail_offset()
+        with self._mu:
+            self.last_seq += 1
+            self._fh.write(_encode(op, self.last_seq, int(gid),
+                                   int(epoch), blob))
+            self._pending += 1
+            if token is not None:
+                self._pending_acks.append((self.last_seq, token))
+            return self.tail_offset()
 
     def commit(self, *, force: bool = False) -> bool:
         """Group commit: fsync if ``force``, ``fsync_every_n`` records
         are pending, or ``fsync_interval_ms`` has elapsed.  Returns
-        whether a sync happened (acks fire for everything covered)."""
-        if self._pending == 0:
-            return False
-        due = (force or self._pending >= self.config.fsync_every_n
-               or (time.monotonic() - self._last_sync_t) * 1e3
-               >= self.config.fsync_interval_ms)
-        if not due:
-            return False
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
-        self._pending = 0
-        self._last_sync_t = time.monotonic()
-        self.synced_seq = self.last_seq
-        self.synced_offset = self.tail_offset()
-        if self._pending_acks:
-            acked = [tok for _, tok in self._pending_acks]
-            self._pending_acks = []
-            if self.on_ack is not None:
-                self.on_ack(acked)
-        return True
+        whether a sync happened.
+
+        Only the records pending at entry are marked synced and acked:
+        an append racing the fsync is *not* covered by it (the flush
+        already happened), so it stays pending -- with its ack token --
+        until its own covering commit.  Acks fire in seq order, under
+        the commit lock, off the append mutex."""
+        with self._commit_mu:
+            with self._mu:
+                if self._pending == 0:
+                    return False
+                due = (force
+                       or self._pending >= self.config.fsync_every_n
+                       or (time.monotonic() - self._last_sync_t) * 1e3
+                       >= self.config.fsync_interval_ms)
+                if not due:
+                    return False
+                covered_n = self._pending
+                covered_seq = self.last_seq
+                covered_off = self.tail_offset()
+                n_acks = len(self._pending_acks)
+                self._fh.flush()
+            os.fsync(self._fh.fileno())
+            with self._mu:
+                self._pending -= covered_n
+                self._last_sync_t = time.monotonic()
+                self.synced_seq = max(self.synced_seq, covered_seq)
+                self.synced_offset = max(self.synced_offset, covered_off)
+                acked = self._pending_acks[:n_acks]
+                del self._pending_acks[:n_acks]
+            if acked and self.on_ack is not None:
+                self.on_ack([tok for _, tok in acked])
+            return True
 
     def close(self) -> None:
-        if self._fh is not None:
-            self.commit(force=True)
-            self._fh.close()
-            self._fh = None
+        with self._commit_mu:
+            if self._fh is not None:
+                self.commit(force=True)
+                self._fh.close()
+                self._fh = None
 
     # ------------------------------------------------------------------
     # replay / truncation
@@ -220,8 +249,9 @@ class ShardWal:
         Reads through a separate handle so an open writer is unaffected;
         offsets older than ``base_offset`` (already truncated away) clamp
         to the start -- the seq dedup makes over-replay harmless."""
-        if self._fh is not None:
-            self._fh.flush()
+        with self._mu:
+            if self._fh is not None:
+                self._fh.flush()
         with open(self.path, "rb") as fh:
             magic, base, _ = _HEADER.unpack(fh.read(_HEADER.size))
             if magic != _MAGIC:
@@ -235,33 +265,40 @@ class ShardWal:
         """Drop records wholly below logical ``upto_offset`` (they are
         covered by a checkpoint): the surviving tail is rewritten to a
         tmp file with ``base_offset = upto_offset`` and atomically
-        renamed over the log, so recorded logical offsets stay valid."""
-        if upto_offset <= self.base_offset:
-            return
-        self.commit(force=True)
-        tail = []
-        for rec in self.records(self.base_offset):
-            if rec.offset >= upto_offset:
-                tail.append(_encode(rec.op, rec.seq, rec.gid, rec.epoch,
-                                    rec.blob))
-        new_base = upto_offset if not tail else min(
-            upto_offset, self.tail_offset())
-        tmp = self.path + ".tmp"
-        with open(tmp, "wb") as fh:
-            # last_seq as the seq floor: every truncated record's seq is
-            # covered, and surviving tail seqs re-derive on scan
-            fh.write(_HEADER.pack(_MAGIC, new_base, self.last_seq))
-            for chunk in tail:
-                fh.write(chunk)
-            fh.flush()
-            os.fsync(fh.fileno())
-        self._fh.close()
-        os.replace(tmp, self.path)
-        _fsync_dir(os.path.dirname(self.path) or ".")
-        self.base_offset = new_base
-        self._fh = open(self.path, "r+b")
-        self._fh.seek(0, os.SEEK_END)
-        self.synced_offset = max(self.synced_offset, new_base)
+        renamed over the log, so recorded logical offsets stay valid.
+
+        Callers must serialize truncation with appends (the shard's
+        writer lock does); the commit lock held here keeps a delayed
+        group commit from racing the file-handle swap."""
+        with self._commit_mu:
+            if upto_offset <= self.base_offset:
+                return
+            self.commit(force=True)
+            tail = []
+            for rec in self.records(self.base_offset):
+                if rec.offset >= upto_offset:
+                    tail.append(_encode(rec.op, rec.seq, rec.gid,
+                                        rec.epoch, rec.blob))
+            new_base = upto_offset if not tail else min(
+                upto_offset, self.tail_offset())
+            tmp = self.path + ".tmp"
+            with open(tmp, "wb") as fh:
+                # last_seq as the seq floor: every truncated record's
+                # seq is covered, and surviving tail seqs re-derive on
+                # scan
+                fh.write(_HEADER.pack(_MAGIC, new_base, self.last_seq))
+                for chunk in tail:
+                    fh.write(chunk)
+                fh.flush()
+                os.fsync(fh.fileno())
+            with self._mu:
+                self._fh.close()
+                os.replace(tmp, self.path)
+                self.base_offset = new_base
+                self._fh = open(self.path, "r+b")
+                self._fh.seek(0, os.SEEK_END)
+                self.synced_offset = max(self.synced_offset, new_base)
+            _fsync_dir(os.path.dirname(self.path) or ".")
 
 
 def _iter_records(fh, base: int) -> Iterator[WalRecord]:

@@ -175,6 +175,65 @@ def test_wal_ack_order_and_durability(seed):
             == appended
 
 
+def test_wal_commit_covers_only_the_pending_prefix(tmp_path,
+                                                   monkeypatch):
+    """A record appended while a commit's fsync is in flight must NOT
+    be acked (or marked synced) by that commit -- it is not on disk
+    yet.  Regression for the acked-but-lost race: commit used to mark
+    ``synced_seq = last_seq`` and drain every ack token after the
+    fsync, covering appends that raced it."""
+    acked = []
+    wal = _wal(tmp_path, "race.wal", config=WalConfig(fsync_every_n=1),
+               on_ack=acked.extend)
+    wal.append(OP_INSERT, 1, 0, b"\x00" * 4, token="a")
+    real_fsync = os.fsync
+
+    def racing_fsync(fd):
+        # simulate thread B appending while A's fsync is on disk
+        monkeypatch.setattr(os, "fsync", real_fsync)
+        wal.append(OP_INSERT, 2, 0, b"\x00" * 4, token="b")
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", racing_fsync)
+    assert wal.commit(force=True)
+    assert acked == ["a"]            # b's record was never fsync'd
+    assert wal.synced_seq == 1 and wal._pending == 1
+    # b's own covering commit still sees it pending and syncs it
+    assert wal.commit(force=True)
+    assert acked == ["a", "b"]
+    assert wal.synced_seq == 2 and wal._pending == 0
+    wal.close()
+    assert [r.gid for r in _records(tmp_path / "race.wal")] == [1, 2]
+
+
+def test_wal_concurrent_writers_ack_exactly_once(tmp_path):
+    """Threaded append+commit storm: every token acks exactly once and
+    every record survives reopen (the ShardWal-internal locking, not
+    caller discipline, is what's under test)."""
+    acked, n_threads, per = [], 4, 50
+    wal = _wal(tmp_path, "mt.wal",
+               config=WalConfig(fsync_every_n=4, fsync_interval_ms=1e9),
+               on_ack=acked.extend)
+
+    def writer(base):
+        for i in range(per):
+            wal.append(OP_DELETE, base + i, 0, token=base + i)
+            wal.commit()
+
+    threads = [threading.Thread(target=writer, args=(1000 * t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wal.close()  # final force commit drains the stragglers
+    want = {1000 * t + i for t in range(n_threads) for i in range(per)}
+    assert len(acked) == len(want) and set(acked) == want
+    recs = _records(tmp_path / "mt.wal")
+    assert {r.gid for r in recs} == want
+    assert sorted(r.seq for r in recs) == list(range(1, len(want) + 1))
+
+
 # ------------------------------------------------------ replay / restore
 def _storm(idx, n_ops, seed, dim=DIM):
     """Deterministic mixed workload; returns the surviving gid set."""
@@ -358,7 +417,78 @@ def test_unknown_gid_delete_counts_misroute():
     idx.close()
 
 
+def test_delete_group_commit_runs_outside_migration_lock(
+        tmp_path, monkeypatch):
+    """The delete path's WAL fsync must not run while the global
+    migration lock is held -- otherwise every delete on every shard
+    serializes behind one shard's disk, even with no migration in
+    flight."""
+    idx = ShardedMutableP2HIndex.open(
+        str(tmp_path / "idx"), dim=DIM, num_shards=2,
+        wal_config=WalConfig(fsync_every_n=1))
+    gids = idx.insert_batch(
+        np.random.default_rng(0).normal(size=(8, DIM)).astype(np.float32))
+    real_fsync = os.fsync
+    held = []
+
+    def spy(fd):
+        held.append(idx._mig_lock.locked())
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy)
+    assert idx.delete(int(gids[0]))
+    assert held, "fsync_every_n=1 delete must group-commit"
+    assert not any(held), "WAL fsync ran under the migration lock"
+    idx.close()
+
+
+def test_open_ignores_stray_wal_filenames(tmp_path):
+    """Non-conforming files in the WAL dir (backups, shard_old.wal)
+    must not crash shard-count recovery."""
+    wal_dir = tmp_path / "idx" / "wal"
+    wal_dir.mkdir(parents=True)
+    (wal_dir / "shard_old.wal").write_bytes(b"junk")
+    (wal_dir / "shard_003.wal.bak").write_bytes(b"junk")
+    idx = ShardedMutableP2HIndex.open(str(tmp_path / "idx"), dim=DIM,
+                                      num_shards=2)
+    assert idx.num_shards == 2  # strays imply nothing
+    idx.close()
+
+
 # ----------------------------------------------------------- resharding
+def test_split_journal_durable_before_new_map_routes(tmp_path,
+                                                     monkeypatch):
+    """The migration journal must hit disk BEFORE router.apply() makes
+    the new assignment live: an insert routed by the new map can be
+    acked immediately, and recovery (which trusts the journal) must
+    already know where that gid lives."""
+    from repro.stream.resharding import MigrationJournal
+
+    idx = ShardedMutableP2HIndex.open(
+        str(tmp_path / "idx"), dim=DIM, num_shards=2,
+        wal_config=WalConfig(fsync_every_n=1))
+    _storm(idx, 10, seed=7)
+    at_write = []
+    real_write = MigrationJournal.write
+
+    def spy(self, directory):
+        if self.phase != "done":
+            # at journal-write time the new assignment is not live yet
+            at_write.append(
+                (getattr(idx.router, "version", None),
+                 tuple(getattr(idx.router, "assignment", ()))))
+        return real_write(self, directory)
+
+    monkeypatch.setattr(MigrationJournal, "write", spy)
+    idx.split_shard(0)
+    journal_v = idx.router.version
+    assert at_write, "split never journaled"
+    version, assignment = at_write[0]
+    assert version == journal_v - 1, "journal written after apply()"
+    assert assignment != idx.router.assignment
+    idx.close()
+
+
 def test_split_shard_bit_exact_under_concurrent_queries(monkeypatch):
     """The acceptance criterion: a shard split under a live query storm
     returns bit-exact top-k vs the unsplit oracle throughout the
