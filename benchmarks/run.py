@@ -7,9 +7,10 @@ serialized to ``BENCH_<lane>.json`` next to the CSV output (``--out-dir``,
 default CWD) -- the machine-readable perf trajectory successive PRs
 compare against (today: ``BENCH_serve.json`` with qps / p50 / p99 /
 tile-skip / probe-overhead numbers, ``BENCH_stream_sharded.json`` with
-the sharded equivalents, and ``BENCH_durability.json`` with WAL replay
-throughput / recovery latency / the zero-invariant loss counters).
-``--only serve,stream_sharded,durability --smoke`` is the CI
+the sharded equivalents, ``BENCH_durability.json`` with WAL replay
+throughput / recovery latency / the zero-invariant loss counters, and
+``BENCH_mesh.json`` with the 1/2/4-device qps/p50/p99 scaling curve).
+``--only serve,stream_sharded,durability,mesh --smoke`` is the CI
 bench-smoke entry point: tiny registered configs, same JSON schema,
 validated by ``tools/check_bench_json.py``.
 """
@@ -57,8 +58,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_ablations, bench_distributed,
                             bench_durability, bench_indexing, bench_kernel,
-                            bench_query, bench_serve, bench_stream,
-                            bench_stream_sharded)
+                            bench_mesh, bench_query, bench_serve,
+                            bench_stream, bench_stream_sharded)
 
     t0 = time.time()
     emitted = []
@@ -80,6 +81,8 @@ def main(argv=None) -> None:
          "stream_sharded", bench_stream_sharded),
         ("Durability (WAL kill-and-recover chaos)", "durability",
          bench_durability),
+        ("Multi-device serving mesh (sharded stacked sweep)", "mesh",
+         bench_mesh),
     ]
     only = (None if args.only is None
             else {s.strip() for s in args.only.split(",") if s.strip()})

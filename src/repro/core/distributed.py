@@ -43,6 +43,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import search
 from repro.core.balltree import FlatTree, build_tree
+from repro.parallel.sharding import mesh_signature, shard_map_compat
 
 __all__ = ["ShardedP2HIndex", "two_round_exchange", "warm_round1"]
 
@@ -59,6 +60,15 @@ __all__ = ["ShardedP2HIndex", "two_round_exchange", "warm_round1"]
 # templates it actually serves; the background compactor replays them
 # against the freshly built tree via :func:`warm_round1` *before* the
 # publish flips the epoch.
+#
+# Templates are keyed by the recording process's device-topology
+# signature (:func:`repro.parallel.sharding.mesh_signature`): a template
+# recorded while serving on one topology describes an executable shaped
+# for that topology, and replaying it after the visible device set
+# changed (restored checkpoint on different hardware, forked worker)
+# would warm -- or worse, poison -- the wrong jit cache entries.
+# ``warm_round1`` only replays templates whose signature matches the
+# current topology.
 _ROUND1_LOCK = threading.Lock()
 _ROUND1_TEMPLATES: "collections.OrderedDict[tuple, None]" = (
     collections.OrderedDict())
@@ -66,7 +76,7 @@ _ROUND1_MAX_TEMPLATES = 8
 
 
 def _record_round1(B: int, k: int, frac1: float) -> None:
-    key = (int(B), int(k), float(frac1))
+    key = (int(B), int(k), float(frac1), mesh_signature())
     with _ROUND1_LOCK:
         _ROUND1_TEMPLATES[key] = None
         _ROUND1_TEMPLATES.move_to_end(key)
@@ -86,11 +96,19 @@ def warm_round1(tree, *, is_bc: bool = True, templates=None) -> int:
         ``lambda_cap`` operand) -- the one a below-stacked-fan-out
         round 2 (or a per-shard sequential fallback) runs on path.
 
+    Templates recorded against a *different* device topology are
+    skipped (see the registry note above).  Explicitly-passed
+    ``templates`` are trusted as bare ``(B, k, frac1)`` tuples.
+
     Returns the number of programs replayed (0 when none recorded).
     """
-    with _ROUND1_LOCK:
-        tpls = list(templates if templates is not None
-                    else _ROUND1_TEMPLATES)
+    if templates is not None:
+        tpls = [tuple(t)[:3] for t in templates]
+    else:
+        sig = mesh_signature()
+        with _ROUND1_LOCK:
+            tpls = [key[:3] for key in _ROUND1_TEMPLATES
+                    if key[3] == sig]
     warmed = 0
     for B, k, frac1 in tpls:
         q = jnp.ones((B, tree.d), jnp.float32)
@@ -107,14 +125,10 @@ def warm_round1(tree, *, is_bc: bool = True, templates=None) -> int:
     return warmed
 
 # shard_map moved to the jax top level (and check_rep was renamed to
-# check_vma) in newer releases; support both.  The check is disabled either
-# way: scan carries are per-shard varying by design.
-if hasattr(jax, "shard_map"):
-    _shard_map = functools.partial(jax.shard_map, check_vma=False)
-else:  # jax <= 0.4.x
-    from jax.experimental.shard_map import shard_map as _xsm
-
-    _shard_map = functools.partial(_xsm, check_rep=False)
+# check_vma) in newer releases; the version shim lives in
+# repro.parallel.sharding so the serving-mesh stacked program and this
+# module resolve it identically.
+_shard_map = shard_map_compat
 
 _ARRAY_FIELDS = [
     f.name for f in dataclasses.fields(FlatTree) if not f.metadata.get("static", False)
@@ -176,7 +190,8 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
                        method: str = "sweep", frac: float = 1.0,
                        lambda_cap=None, return_info: bool = False,
                        stacked: bool | None = None,
-                       probe_tiles: int | None = None):
+                       probe_tiles: int | None = None,
+                       mesh=None, mesh_axis: str = "shard"):
     """Host-orchestrated two-round lambda exchange over *callable shard
     backends* -- the frozen forest's exchange generalized to heterogeneous
     per-shard states.
@@ -242,6 +257,18 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     every segment is swept under valid caps; only tile-skip counts (and
     the heavily-pruned far-shard diagnostics beyond the true top-k)
     differ.
+
+    ``mesh`` (optional ``jax.sharding.Mesh`` with axis ``mesh_axis``)
+    runs the stacked round 2 *device-parallel*: the combined grid's
+    segment axis is sharded across the mesh's devices and the
+    sequential in-launch fold of the global top-k / per-shard k-th
+    reductions is replaced by ``all_gather``/``psum`` collectives
+    (:func:`repro.kernels.stacked_sweep.stacked_sweep_query` with
+    ``mesh=``).  Round 1 stays a host loop -- shard backends are
+    heterogeneous Python callables -- but its sequential *result* fold
+    (the running ``min`` into ``lambda0``) is order-insensitive, so the
+    collective replacement lives where the compute is: round 2.  Exact
+    regardless of mesh: same candidates, same merge.
     """
     shards = tuple(shards)  # iterated once per round: reject generators
     q = jnp.asarray(np.atleast_2d(np.asarray(queries)), jnp.float32)
@@ -270,7 +297,7 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     base = "sweep" if method == "stacked" else method
     stk_merged, stk_kth, cnt_stk = _stacked_round2(
         shards, q, k, method=method, stacked=stacked, lam0=lam0,
-        probe_tiles=probe_tiles)
+        probe_tiles=probe_tiles, mesh=mesh, mesh_axis=mesh_axis)
     if cnt_stk is not None:
         counters += cnt_stk
     if stk_merged is not None:
@@ -320,7 +347,8 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     return bd, bi, counters
 
 
-def _stacked_round2(shards, q, k, *, method, stacked, lam0, probe_tiles):
+def _stacked_round2(shards, q, k, *, method, stacked, lam0, probe_tiles,
+                    mesh=None, mesh_axis="shard"):
     """Resolve + run the segment-parallel round 2: every stackable
     shard's segment tile-sets concatenated and swept by ONE two-pass
     device program under ``lambda0`` (probe + main + in-launch merge +
@@ -365,7 +393,8 @@ def _stacked_round2(shards, q, k, *, method, stacked, lam0, probe_tiles):
         probe_route="round2",
         shard_bounds=tuple(stk.num_segments for stk in stks),
         use_ball=is_bc, use_cone=is_bc,
-        use_kernel=True if method == "pallas" else None)
+        use_kernel=True if method == "pallas" else None,
+        mesh=mesh, mesh_axis=mesh_axis)
     shard_kth = np.asarray(info["shard_kth"])  # (S_stackable, B)
     kths = {si: shard_kth[row] for row, (si, _) in enumerate(stackable)}
     return (fd, fi), kths, np.asarray(cnt, np.int64)

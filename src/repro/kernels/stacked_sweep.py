@@ -48,15 +48,19 @@ import collections
 import dataclasses
 import functools
 import threading
+import weakref
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as _P
 
 from repro.core import bounds
 from repro.kernels.p2h_scan import _cone_cases
+from repro.parallel.sharding import mesh_signature, shard_map_compat
 
 __all__ = ["StackedLeaves", "stacked_sweep", "stacked_sweep_search",
            "stacked_sweep_query", "prepare_stacked_operands",
@@ -378,30 +382,52 @@ class StackedLeaves:
 #: identity-keyed LRU over cross-shard concatenations: repeat queries
 #: against the same epoch-vector pin present the same per-shard stack
 #: objects, so the combined grid is reused instead of re-copied per
-#: query.  Entries hold strong refs, which is also what keeps their
-#: id()-tuple keys unambiguous while cached.  Mutations take the lock:
-#: concurrent serving threads (and background compactors republishing
-#: underneath them) hit this on every stacked round 2.
-_CONCAT_CACHE: "dict[tuple, tuple]" = {}
+#: query.  Entries hold the source stacks by **weakref** with an
+#: eviction callback: the moment any source stack leaves the live
+#: snapshot set (compaction republish retires it), its entry -- and the
+#: combined grid's device arrays, which on a serving mesh are placed
+#: per-device -- is dropped instead of pinning dead segment geometry
+#: until 8 newer compositions push it out.  The dead weakrefs also make
+#: the id()-tuple keys unambiguous: a recycled id can only collide after
+#: the old referent died, and its death already removed the entry.
+#: Mutations take the lock (an RLock: the GC may run an eviction
+#: callback *inside* a cache operation on the same thread): concurrent
+#: serving threads (and background compactors republishing underneath
+#: them) hit this on every stacked round 2.
+_CONCAT_CACHE: "collections.OrderedDict[tuple, tuple]" = (
+    collections.OrderedDict())
 _CONCAT_CACHE_SIZE = 8
-_CONCAT_LOCK = threading.Lock()
+_CONCAT_LOCK = threading.RLock()
 
 
 def concat_cached(stacks) -> StackedLeaves:
     """:meth:`StackedLeaves.concat` behind a small identity-keyed LRU
-    (the per-query entry point of the exchange's stacked round 2)."""
+    (the per-query entry point of the exchange's stacked round 2).
+    Entries self-evict when a source stack is garbage-collected."""
     stacks = tuple(stacks)
+    if len(stacks) == 1:
+        # concat would return the source itself; caching that would hold
+        # a strong ref to it under its own weakref key -- a self-pin
+        return stacks[0]
     key = tuple(id(s) for s in stacks)
     with _CONCAT_LOCK:
         hit = _CONCAT_CACHE.pop(key, None)
-        if hit is not None and all(a is b for a, b in zip(hit[0], stacks)):
-            _CONCAT_CACHE[key] = hit  # re-insert: most recently used
-            return hit[1]
+        if hit is not None:
+            live = tuple(r() for r in hit[0])
+            if all(a is b for a, b in zip(live, stacks)):
+                _CONCAT_CACHE[key] = hit  # re-insert: most recently used
+                return hit[1]
     combined = StackedLeaves.concat(stacks)  # build outside the lock
+
+    def _evict(_ref, _key=key):
+        with _CONCAT_LOCK:
+            _CONCAT_CACHE.pop(_key, None)
+
+    refs = tuple(weakref.ref(s, _evict) for s in stacks)
     with _CONCAT_LOCK:
-        _CONCAT_CACHE[key] = (stacks, combined)
+        _CONCAT_CACHE[key] = (refs, combined)
         while len(_CONCAT_CACHE) > _CONCAT_CACHE_SIZE:
-            _CONCAT_CACHE.pop(next(iter(_CONCAT_CACHE)))
+            _CONCAT_CACHE.popitem(last=False)
     return combined
 
 
@@ -859,8 +885,24 @@ def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, seg_shard,
         probe_skips = (jnp.sum(jnp.where(true_row[:, None, None],
                                          skips, 0))
                        if p else jnp.int32(0))
-    # in-launch global merge: per-segment planes (+ the caller's extra
-    # candidates, e.g. the delta scan) -> one (B, k) answer, no host merge
+    return _finish_stacked(bd, bi, skips, probe_skips, extra_d, extra_i,
+                           seg_shard, n_true, stk.n_leaves, k=k, B0=B0,
+                           num_shards=num_shards, sort_planes=sort_planes,
+                           nqb=nqb, n_visit=n_visit)
+
+
+def _finish_stacked(bd, bi, skips, probe_skips, extra_d, extra_i,
+                    seg_shard, n_true, n_leaves, *, k, B0, num_shards,
+                    sort_planes, nqb, n_visit):
+    """Cross-source finish shared by the single-launch
+    (:func:`_run_stacked`) and mesh (:func:`_run_stacked_mesh`)
+    programs, on full bucket-padded planes: the in-launch global merge
+    of the per-segment planes (+ the caller's extra candidates, e.g. the
+    delta scan) into one (B, k) answer, the per-shard k-th reductions,
+    the optional plane sort, and the counter conventions."""
+    from repro.core import search
+
+    true_row = jnp.arange(bd.shape[0]) < n_true
     fd, fi = search.merge_topk_planes(bd, bi, k, extra_d=extra_d,
                                       extra_i=extra_i)
     fd, fi = fd[:B0], fi[:B0]
@@ -891,12 +933,119 @@ def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, seg_shard,
     seg_skips = jnp.sum(skips, axis=(1, 2)).astype(jnp.int32)  # (N,)
     total_skip = jnp.sum(jnp.where(true_row, seg_skips, 0))
     counters = (jnp.zeros((8,), jnp.int32)
-                .at[3].set(jnp.int32(queries.shape[0])
-                           * jnp.sum(stk.n_leaves).astype(jnp.int32))
+                .at[3].set(jnp.int32(B0)
+                           * jnp.sum(n_leaves).astype(jnp.int32))
                 .at[2].set(n_true.astype(jnp.int32)
                            * jnp.int32(nqb * n_visit) - total_skip)
                 .at[7].set(total_skip))
     return bd, bi, fd, fi, counters, seg_skips, shard_kth, probe_skips
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "mesh_axis", "n0", "d", "k", "frac", "bq",
+                     "use_ball", "use_cone", "use_kernel", "interpret",
+                     "probe_tiles", "num_shards", "has_extra",
+                     "sort_planes"),
+)
+def _run_stacked_mesh(arrays, queries, lambda_cap, extra_d, extra_i,
+                      seg_shard, n_true, *, mesh, mesh_axis, n0, d, k,
+                      frac, bq, use_ball, use_cone, use_kernel, interpret,
+                      probe_tiles, num_shards, has_extra, sort_planes):
+    """The stacked program mapped onto a device mesh: the (bucket- and
+    device-count-padded) segment axis of ``arrays`` is sharded across
+    ``mesh_axis`` via ``shard_map``, every device sweeps its own
+    contiguous block of segments over the full (replicated) query block,
+    and the cross-device reductions the single-launch program did with a
+    sequential in-launch fold become collectives:
+
+      * the two-pass probe handoff gathers every device's pass-A planes
+        (``all_gather``, tiled -- contiguous blocks restore stack order)
+        and merges them replicated, so ``lambda_probe`` carries every
+        *device's* probe bound, not just the local one;
+      * the per-segment result planes are gathered the same way, and the
+        shared :func:`_finish_stacked` (global merge, per-shard k-ths,
+        counters) runs replicated on the full planes.
+
+    Within a device the local segment scan still threads its running
+    global top-k sequentially (that is the pruning the single launch
+    gets from its sequential grid); across devices the tightening
+    travels through the probe merge instead.  Exactness is unchanged --
+    thresholds only *prune*, and every threshold is still a valid upper
+    bound on the global k-th -- only tile-skip diagnostics may differ
+    from the single-device launch.  Single-pass dispatches (``p == 0``,
+    e.g. the exchange's round 2 under ``lambda0``) skip the probe
+    collective entirely: one gather at the end is the whole exchange.
+    """
+    from repro.core import search
+    from repro.kernels import ref
+
+    B0 = queries.shape[0]
+    Bp = _ceil_to(B0, bq)
+    nqb = Bp // bq
+    L = arrays["pts"].shape[1]
+    n_visit = max(1, min(L, int(round(frac * L))))
+    p = max(0, min(probe_tiles, n_visit))
+    cap0 = (jnp.full((B0,), jnp.inf, jnp.float32) if lambda_cap is None
+            else jnp.asarray(lambda_cap, jnp.float32).reshape(-1))
+    if has_extra:
+        extra_d = jnp.pad(jnp.asarray(extra_d, jnp.float32),
+                          ((0, Bp - B0), (0, 0)),
+                          constant_values=jnp.inf)
+        extra_i = jnp.pad(jnp.asarray(extra_i, jnp.int32),
+                          ((0, Bp - B0), (0, 0)), constant_values=-1)
+        gseed = (extra_d if extra_d.shape[1] == k
+                 else -jax.lax.top_k(-extra_d, k)[0])
+    else:
+        extra_d = extra_i = None
+        gseed = jnp.full((Bp, k), _NEG_FILL, jnp.float32)
+
+    def local(arrs, q, cap, gs):
+        stk_l = StackedLeaves(**arrs, uids=(), n0=n0, d=d)
+        ops, _ = prepare_stacked_operands(
+            stk_l, q, frac=frac, bq=bq, lambda_cap=cap,
+            lane_pad=use_kernel)
+        fn = (functools.partial(stacked_sweep, interpret=interpret)
+              if use_kernel else ref.stacked_sweep_ref)
+        run = functools.partial(fn, k=k, bq=bq, use_ball=use_ball,
+                                use_cone=use_cone)
+        visit = ops["visit"]
+        gather = functools.partial(jax.lax.all_gather,
+                                   axis_name=mesh_axis, axis=0,
+                                   tiled=True)
+        if 0 < p < n_visit:
+            da, ia, sk_a = run(**dict(ops, visit=visit[:, :, :p]),
+                               global_seed=gs)
+            # the lambda exchange as a collective: every device's probe
+            # planes meet here; the merged k-th is the same valid bound
+            # the single launch threads sequentially
+            pd, _ = search.merge_topk_planes(gather(da), gather(ia), k)
+            cap_b = jnp.minimum(ops["cap"], pd[:, k - 1:k])
+            bd_l, bi_l, sk_b = run(**dict(ops, visit=visit[:, :, p:],
+                                          cap=cap_b),
+                                   seed_d=da, seed_i=ia, global_seed=gs)
+            sk_l = sk_a + sk_b
+            psk_l = sk_a
+        else:  # p == 0 (single pass) or p == n_visit (probe IS the sweep)
+            bd_l, bi_l, sk_l = run(**ops, global_seed=gs)
+            psk_l = sk_l if p else jnp.zeros_like(sk_l)
+        return gather(bd_l), gather(bi_l), gather(sk_l), gather(psk_l)
+
+    in_spec = jax.tree.map(lambda _: _P(mesh_axis), arrays)
+    bd, bi, skips, probe_sk = shard_map_compat(
+        local, mesh=mesh,
+        in_specs=(in_spec, _P(), _P(), _P()),
+        out_specs=(_P(), _P(), _P(), _P()),
+    )(arrays, queries, cap0, gseed)
+    true_row = jnp.arange(bd.shape[0]) < n_true
+    probe_skips = (jnp.sum(jnp.where(true_row[:, None, None],
+                                     probe_sk, 0))
+                   if p else jnp.int32(0))
+    return _finish_stacked(bd, bi, skips, probe_skips, extra_d, extra_i,
+                           seg_shard, n_true, arrays["n_leaves"], k=k,
+                           B0=B0, num_shards=num_shards,
+                           sort_planes=sort_planes, nqb=nqb,
+                           n_visit=n_visit)
 
 
 def _n_visit(stk: StackedLeaves, frac: float) -> int:
@@ -927,16 +1076,22 @@ def _pad_rows(a, pad: int, fill):
     return jnp.pad(a, w, constant_values=fill)
 
 
-def _bucketed_arrays(stk: StackedLeaves, *, use_kernel: bool):
+def _bucketed_arrays(stk: StackedLeaves, *, use_kernel: bool,
+                     multiple: int = 1):
     """The launch's arrays dict with the segment axis padded to the
     :func:`_bucket_segments` bucket.  Pad rows are dead (``valid=False``,
     ``n_leaves=0``, ids -1) so the sweep force-skips them; the padded
     geometry planes are memoized in ``_derived`` under ``geom:``-prefixed
     keys (shared through tombstone republishes -- geometry never moves),
     the ids-derived pads under plain keys (rebuilt when the planes do
-    move).  Returns ``(arrays, padded segment count)``."""
+    move).  ``multiple`` further rounds the bucket up (the mesh path
+    needs the segment axis divisible by the device count; pad rows are
+    free dead weight, and the memo keys already carry ``Np`` so bucket
+    variants coexist).  Returns ``(arrays, padded segment count)``."""
     N = stk.num_segments
     Np = _bucket_segments(N)
+    if multiple > 1:
+        Np = _ceil_to(Np, multiple)
     pad = Np - N
     pts = stk.padded_pts() if use_kernel else stk.pts
     if pad == 0:
@@ -963,6 +1118,48 @@ def _bucketed_arrays(stk: StackedLeaves, *, use_kernel: bool):
                     n_leaves=_pad_rows(stk.n_leaves, pad, 0))
         stk._derived[lkey] = live
     return {**geom, **live}, Np
+
+
+#: arrays-dict fields whose pad/placement rides tombstone republishes
+#: (pure tile geometry; ``geom:``-keyed in ``_derived``) vs the ids
+#: planes that are rebuilt when deletes move them (plain keys).
+_GEOM_FIELDS = ("pts", "rx", "xc", "xs", "leaf_centers", "leaf_radii",
+                "leaf_cnorm")
+_IDS_FIELDS = ("ids", "valid", "n_leaves")
+
+
+def _placed_arrays(stk: StackedLeaves, arrays: dict, Np: int, mesh,
+                   axis: str, use_kernel: bool) -> dict:
+    """``arrays`` with every plane committed to ``mesh`` sharded along
+    ``axis`` on the leading segment dimension (contiguous blocks of
+    ``Np // mesh.shape[axis]`` segments per device, in stack order).
+
+    Memoized in ``stk._derived`` keyed by the mesh's topology signature:
+    the one-time host->device scatter is paid on the *first* launch
+    against a given stack (or, on the serving path, by the compactor's
+    pre-publish :func:`warm_stacked` replay -- off the query path), and
+    every subsequent query's ``shard_map`` finds its operands already
+    resident on their owning devices.  Geometry entries survive
+    tombstone republishes (``geom:`` prefix); ids-plane entries are
+    rebuilt when deletes move the planes."""
+    sig = mesh_signature(mesh)
+    tag = "lane" if use_kernel else "raw"
+
+    def put(a):
+        return jax.device_put(a, NamedSharding(
+            mesh, _P(axis, *(None,) * (a.ndim - 1))))
+
+    gkey = f"geom:mesh:{sig}:{axis}:{Np}:{tag}"
+    geom = stk._derived.get(gkey)
+    if geom is None:
+        geom = {f: put(arrays[f]) for f in _GEOM_FIELDS}
+        stk._derived[gkey] = geom
+    lkey = f"mesh:{sig}:{axis}:{Np}:ids"
+    live = stk._derived.get(lkey)
+    if live is None:
+        live = {f: put(arrays[f]) for f in _IDS_FIELDS}
+        stk._derived[lkey] = live
+    return {**geom, **live}
 
 
 # ----------------------------------------------------------------------
@@ -1034,19 +1231,36 @@ def reset_stacked_compile_stats(full: bool = False) -> None:
             _RECENT_TEMPLATES.clear()
 
 
+def _mesh_axis_size(mesh, mesh_axis: str) -> int:
+    """Devices along ``mesh_axis`` (0 when the axis is absent)."""
+    if mesh is None:
+        return 0
+    return int(dict(mesh.shape).get(mesh_axis, 0))
+
+
 def _call_run_stacked(stk: StackedLeaves, queries, k, *, frac, bq,
                       use_ball, use_cone, lambda_cap, probe_tiles,
                       probe_route="snapshot", extra_d=None, extra_i=None,
                       shard_bounds=None, use_kernel=None, interpret=None,
-                      sort_planes=True, _warm=False):
+                      sort_planes=True, mesh=None, mesh_axis="shard",
+                      _warm=False):
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    D = _mesh_axis_size(mesh, mesh_axis)
+    if D <= 1:
+        mesh = None  # a 1-device (or axis-less) mesh IS the single
+        #              launch -- run the plain program, share its traces
+        D = 0
     p = resolve_probe_tiles(probe_tiles, _n_visit(stk, frac),
                             route=probe_route)
     N = stk.num_segments
-    arrays, Np = _bucketed_arrays(stk, use_kernel=bool(use_kernel))
+    arrays, Np = _bucketed_arrays(stk, use_kernel=bool(use_kernel),
+                                  multiple=(D if mesh is not None else 1))
+    if mesh is not None:
+        arrays = _placed_arrays(stk, arrays, Np, mesh, mesh_axis,
+                                bool(use_kernel))
     bounds = tuple(int(x) for x in shard_bounds) if shard_bounds else ()
     num_shards = len(bounds)
     seg_shard = np.full((Np,), -1, np.int32)
@@ -1062,27 +1276,34 @@ def _call_run_stacked(stk: StackedLeaves, queries, k, *, frac, bq,
     # the template omits the stack's grid dims (what warm_stacked fills
     # in from the stack it warms) and keeps the *requested* probe knob
     # (re-resolved per stack); the signature mirrors the jit cache key:
-    # statics + every dynamic shape.
+    # statics + every dynamic shape + the device-topology signature
+    # (cross-mesh fence: a program compiled against one topology must
+    # never be accounted -- or warmed -- against another).  The template
+    # carries the Mesh object itself (hashable), so a warm replay always
+    # targets exactly the topology the template was recorded against.
     template = (B, k, float(frac), int(bq), bool(use_ball),
                 bool(use_cone), bool(use_kernel), bool(interpret),
                 None if probe_tiles is None else int(probe_tiles),
                 probe_route, num_shards, has_extra, extra_k, has_cap,
-                bool(sort_planes))
+                bool(sort_planes), mesh, mesh_axis)
     sig = (Np, stk.num_tiles, stk.n0, stk.d, B, k, float(frac), int(bq),
            bool(use_ball), bool(use_cone), bool(use_kernel),
            bool(interpret), p, num_shards, has_extra, extra_k, has_cap,
-           bool(sort_planes))
+           bool(sort_planes), mesh_signature(mesh), mesh_axis)
     _record_sig(sig, template, _warm)
-    out = _run_stacked(arrays, q2, lambda_cap,
-                       extra_d if has_extra else None,
-                       extra_i if has_extra else None,
-                       jnp.asarray(seg_shard), np.int32(N),
-                       n0=stk.n0, d=stk.d, k=k, frac=frac, bq=bq,
-                       use_ball=use_ball, use_cone=use_cone,
-                       use_kernel=bool(use_kernel),
-                       interpret=bool(interpret), probe_tiles=p,
-                       num_shards=num_shards,
-                       has_extra=has_extra, sort_planes=sort_planes)
+    runner = (_run_stacked if mesh is None
+              else functools.partial(_run_stacked_mesh, mesh=mesh,
+                                     mesh_axis=mesh_axis))
+    out = runner(arrays, q2, lambda_cap,
+                 extra_d if has_extra else None,
+                 extra_i if has_extra else None,
+                 jnp.asarray(seg_shard), np.int32(N),
+                 n0=stk.n0, d=stk.d, k=k, frac=frac, bq=bq,
+                 use_ball=use_ball, use_cone=use_cone,
+                 use_kernel=bool(use_kernel),
+                 interpret=bool(interpret), probe_tiles=p,
+                 num_shards=num_shards,
+                 has_extra=has_extra, sort_planes=sort_planes)
     if Np != N:  # per-segment outputs slice back to the true rows
         bd, bi, fd, fi, counters, seg_skips, shard_kth, probe_skips = out
         out = (bd[:N], bi[:N], fd, fi, counters, seg_skips[:N],
@@ -1098,7 +1319,10 @@ def warm_stacked(stk: StackedLeaves, templates=None) -> int:
     ``+inf`` arrays and dummy extras empty (+inf/-1) lists -- same
     shapes/tree-structure as serving, so the same trace; shard layout is
     fabricated (membership is dynamic, only the shard *count* shapes the
-    program).  Returns the number of templates replayed."""
+    program).  A template records the Mesh it served on (or ``None``),
+    so each replay compiles against exactly the topology that recorded
+    it -- a template from one mesh can never warm (or mis-place) a
+    program on another.  Returns the number of templates replayed."""
     if templates is None:
         with _COMPILE_LOCK:
             templates = list(_RECENT_TEMPLATES)
@@ -1106,7 +1330,7 @@ def warm_stacked(stk: StackedLeaves, templates=None) -> int:
     for t in templates:
         (B, k, frac, bq, use_ball, use_cone, use_kernel, interpret,
          probe_tiles, probe_route, num_shards, has_extra, extra_k,
-         has_cap, sort_planes) = t
+         has_cap, sort_planes, mesh, mesh_axis) = t
         q = np.ones((B, stk.d), np.float32)
         cap = np.full((B,), np.inf, np.float32) if has_cap else None
         ed = (np.full((B, extra_k), np.inf, np.float32)
@@ -1121,7 +1345,8 @@ def warm_stacked(stk: StackedLeaves, templates=None) -> int:
                 probe_tiles=probe_tiles, probe_route=probe_route,
                 extra_d=ed, extra_i=ei, shard_bounds=sb,
                 use_kernel=use_kernel, interpret=interpret,
-                sort_planes=sort_planes, _warm=True)
+                sort_planes=sort_planes, mesh=mesh, mesh_axis=mesh_axis,
+                _warm=True)
             n += 1
         except Exception:  # warmup must never break a publish
             continue
@@ -1133,7 +1358,8 @@ def stacked_sweep_search(stk: StackedLeaves, queries, k: int = 1, *,
                          use_ball: bool = True, use_cone: bool = True,
                          lambda_cap=None, probe_tiles: int = 0,
                          use_kernel: bool | None = None,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         mesh=None, mesh_axis: str = "shard"):
     """Sweep all of ``stk``'s segments in one launch; per-segment planes.
 
     Returns ``(dists (N, B, k) ascending, global ids (N, B, k),
@@ -1151,7 +1377,8 @@ def stacked_sweep_search(stk: StackedLeaves, queries, k: int = 1, *,
                                use_ball=use_ball, use_cone=use_cone,
                                lambda_cap=lambda_cap,
                                probe_tiles=probe_tiles,
-                               use_kernel=use_kernel, interpret=interpret)
+                               use_kernel=use_kernel, interpret=interpret,
+                               mesh=mesh, mesh_axis=mesh_axis)
     bd, bi, _, _, counters, seg_skips, _, _ = out
     return bd, bi, counters, seg_skips
 
@@ -1163,7 +1390,8 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
                         probe_route: str = "snapshot",
                         extra_d=None, extra_i=None, shard_bounds=None,
                         use_kernel: bool | None = None,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        mesh=None, mesh_axis: str = "shard"):
     """Serving entry point: probe + main + merge in ONE device program.
 
     Returns ``(dists (B, k), global ids (B, k), counters (8,), info)``
@@ -1185,7 +1413,9 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
     ``seg_skips - forced_skips`` is the *live*-tile skip count --
     ``shard_kth`` ((S, B) or None) and ``probe`` (resolved tile count /
     scanned / skipped: the probe-pass overhead surfaced in
-    ``BENCH_serve.json``).
+    ``BENCH_serve.json``), plus ``mesh_devices`` -- the device count the
+    launch actually spanned (1 = the single-device program; see
+    :func:`_run_stacked_mesh` for the ``mesh=`` form).
     """
     out, p = _call_run_stacked(stk, queries, k, frac=frac, bq=bq,
                                use_ball=use_ball, use_cone=use_cone,
@@ -1195,7 +1425,8 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
                                extra_d=extra_d, extra_i=extra_i,
                                shard_bounds=shard_bounds,
                                use_kernel=use_kernel, interpret=interpret,
-                               sort_planes=False)
+                               sort_planes=False,
+                               mesh=mesh, mesh_axis=mesh_axis)
     _, _, fd, fi, counters, seg_skips, shard_kth, probe_skips = out
     B = int(np.atleast_2d(np.asarray(queries)).shape[0])
     nqb = -(-B // bq)
@@ -1212,5 +1443,6 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
         "shard_kth": shard_kth,
         "probe": {"tiles": p, "scanned": probe_scanned,
                   "skipped": int(probe_skips)},
+        "mesh_devices": max(1, _mesh_axis_size(mesh, mesh_axis)),
     }
     return fd, fi, counters, info

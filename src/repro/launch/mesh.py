@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_mesh", "mesh_context", "make_production_mesh",
-           "make_test_mesh"]
+           "make_test_mesh", "make_serving_mesh"]
 
 
 def mesh_context(mesh):
@@ -64,3 +64,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for subprocess tests (8 forced host devices)."""
     return make_mesh(shape, axes)
+
+
+def make_serving_mesh(devices: int | None = None, *, axis: str = "shard"):
+    """1-D mesh for the serving read path: ``devices`` chips (default:
+    all visible) along one ``axis`` the stacked sweep shards its
+    segment dimension over (``ShardedMutableP2HIndex.set_mesh`` /
+    ``stacked_sweep_query(mesh=...)``).  CPU hosts simulate the chips
+    via ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set
+    before the first jax import)."""
+    n = jax.device_count() if devices is None else int(devices)
+    return make_mesh((n,), (axis,))

@@ -15,7 +15,10 @@ single device, so the same model code runs in CPU smoke tests and in the
 """
 from __future__ import annotations
 
+import functools
 import logging
+import threading
+from collections import deque
 from typing import Any, Mapping, Sequence
 
 import jax
@@ -26,7 +29,7 @@ logger = logging.getLogger(__name__)
 
 __all__ = [
     "RULES", "shard", "logical_to_spec", "resolve_param_specs", "pad_vocab",
-    "fallback_log",
+    "fallback_log", "mesh_signature", "shard_map_compat",
 ]
 
 # logical axis -> mesh axis (or tuple of mesh axes). ``None`` = replicated.
@@ -52,9 +55,86 @@ RULES: dict[str, Any] = {
     "cache_seq": None,
 }
 
+class _FallbackLog:
+    """Bounded, lock-guarded record of ``(tensor_name, logical_axis, dim,
+    mesh_axes)`` sharding fallbacks.
+
+    ``logical_to_spec`` appends from whatever thread resolves a spec --
+    on the serving path that means concurrent engine threads -- so the
+    old bare module-level list both grew without bound and interleaved
+    racily.  This keeps the last ``maxlen`` entries (the dry-run report
+    deduplicates anyway) behind a lock; iteration snapshots under the
+    lock so consumers never see a mid-append view."""
+
+    def __init__(self, maxlen: int = 256):
+        self._lock = threading.Lock()
+        self._entries: deque = deque(maxlen=maxlen)
+        self.dropped = 0  # appends evicted by the bound since last clear
+
+    def append(self, entry: tuple) -> None:
+        with self._lock:
+            if len(self._entries) == self._entries.maxlen:
+                self.dropped += 1
+            self._entries.append(entry)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.dropped = 0
+
+    def __iter__(self):
+        with self._lock:
+            return iter(tuple(self._entries))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+
 # record of (tensor_name, logical_axis, dim, mesh_axes) fallbacks, for the
 # dry-run report.
-fallback_log: list[tuple[str, str, int, Any]] = []
+fallback_log = _FallbackLog()
+
+
+def mesh_signature(mesh=None) -> tuple:
+    """Hashable topology signature for compile/warm-template registries.
+
+    Templates recorded while serving on one device topology must not
+    replay against another (a warm program compiled for a 4-device mesh
+    is garbage on a 2-device one), so registries key their entries by
+    this.  ``None`` describes the default single-program placement:
+    backend platform + visible device count, which is what determines
+    the compiled executable off-mesh."""
+    if mesh is None:
+        try:
+            return ("default", jax.default_backend(),
+                    jax.device_count())
+        except Exception:  # pragma: no cover - uninitialized backend
+            return ("default", "unknown", 1)
+    devs = tuple(int(d.id) for d in np.asarray(mesh.devices).flat)
+    return ("mesh", tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            devs, getattr(mesh.devices.flat[0], "platform", "?"))
+
+
+def _resolve_shard_map():
+    """``jax.shard_map`` across jax versions (new api vs
+    ``jax.experimental.shard_map``), with replication checking relaxed
+    -- the serving programs produce deterministically-replicated
+    outputs that the static checker cannot always prove."""
+    if hasattr(jax, "shard_map"):
+        return functools.partial(jax.shard_map, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _xsm
+    return functools.partial(_xsm, check_rep=False)
+
+
+def shard_map_compat(fn, **kw):
+    """Version-portable ``shard_map(fn, mesh=..., in_specs=...,
+    out_specs=...)`` (see :func:`_resolve_shard_map`)."""
+    return _resolve_shard_map()(fn, **kw)
 
 
 def _mesh_axis_size(mesh, axes) -> int:

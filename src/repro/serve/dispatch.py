@@ -118,7 +118,8 @@ class DispatchPolicy:
               *, sharded: bool = False, segments: int = 1,
               stackable: int = 0, delta_frac: float = 0.0,
               tombstone_frac: float = 0.0,
-              tile_density: float = 1.0) -> Route:
+              tile_density: float = 1.0,
+              mesh_devices: int = 1) -> Route:
         """Pick a backend for a micro-batch with ``occupancy`` live slots.
 
         ``segments``: fan-out width of the serving view (a mutable
@@ -134,6 +135,15 @@ class DispatchPolicy:
         and shift the stacked crossover as documented above;
         ``tile_density`` is the live-tile fraction of the common stacked
         grid (``repro.kernels.stacked_sweep.tile_density``).
+
+        ``mesh_devices``: device count of the serving mesh the snapshot
+        carries (1 = single program).  Only the stacked launch shards
+        across a mesh, so a multi-device view crosses over at the floor
+        fan-out (2) regardless of composition -- the sequential walk
+        would leave every device but one idle -- and the density bar
+        drops proportionally (pad tiles are split across devices, so
+        the masked-tile overhead per device shrinks by the same
+        factor).
         """
         if recall_target < 1.0:
             return Route("beam", frac=self.frac_for_recall(recall_target),
@@ -141,11 +151,18 @@ class DispatchPolicy:
         if sharded:
             return Route("sharded", reason="index is sharded")
         thr = self.stacked_fanout_threshold(delta_frac, tombstone_frac)
-        if stackable >= thr and tile_density >= self.stacked_min_density:
+        min_density = self.stacked_min_density
+        if mesh_devices > 1:
+            thr = min(thr, 2)
+            min_density = min_density / mesh_devices
+        if stackable >= thr and tile_density >= min_density:
+            mesh_note = (f", mesh={mesh_devices}" if mesh_devices > 1
+                         else "")
             return Route("stacked", probe_tiles=self.probe_tiles,
                          reason=f"fanout={stackable}>={thr} "
                                 f"(delta={delta_frac:.2f}, "
-                                f"dead={tombstone_frac:.2f})")
+                                f"dead={tombstone_frac:.2f}"
+                                f"{mesh_note})")
         dfs_window = max(1, self.small_batch // max(1, segments))
         if occupancy <= dfs_window:
             return Route("dfs", reason=f"occupancy={occupancy}"

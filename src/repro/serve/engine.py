@@ -106,6 +106,10 @@ class P2HEngine:
         # epoch-vector length check, not this counter
         self._router_version = None
         self._router_transitions = 0
+        # largest multi-device mesh any served snapshot carried (1 =
+        # every batch ran single-program); observability only -- the
+        # mesh itself travels snapshot -> exchange -> stacked launch
+        self._mesh_devices = 1
 
     # ------------------------------------------------------------------
     # streaming API
@@ -181,6 +185,11 @@ class P2HEngine:
         else:
             stackable, delta_frac, tombstone_frac = 0, 0.0, 0.0
             density = 1.0
+        mesh = getattr(snap, "mesh", None)
+        mesh_devices = (1 if mesh is None
+                        else int(np.asarray(mesh.devices).size))
+        if mesh_devices > 1:
+            self._mesh_devices = mesh_devices
         route = (Route(method, frac=self.policy.frac_for_recall(
                      mb.recall_target) if method == "beam" else 1.0,
                      reason="forced")
@@ -191,7 +200,8 @@ class P2HEngine:
                                    stackable=stackable,
                                    delta_frac=delta_frac,
                                    tombstone_frac=tombstone_frac,
-                                   tile_density=density))
+                                   tile_density=density,
+                                   mesh_devices=mesh_devices))
         # warm start: valid caps only for exact routes (a cap bounds the
         # *exact* k-th distance; applying it to a budgeted beam could prune
         # candidates the direct beam would have returned)
@@ -326,6 +336,8 @@ class P2HEngine:
         if self._router_version is not None:
             out["router_version"] = self._router_version
             out["router_transitions"] = self._router_transitions
+        if self._mesh_devices > 1:
+            out["mesh_devices"] = self._mesh_devices
         admission = getattr(self.mutable, "admission_stats", None)
         if callable(admission):
             # write-admission counters (seals/stalls/pending) from the

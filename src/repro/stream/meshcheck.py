@@ -1,0 +1,146 @@
+"""Churn-parity driver for the multi-device serving mesh.
+
+One routine, :func:`run_churn_parity`, drives a
+:class:`~repro.stream.sharded.ShardedMutableP2HIndex` through the
+mutation states that exercise every stacked-launch input shape -- fresh
+multi-segment bulk load, live delta, scattered tombstones, a whole
+segment tombstoned to zero, post-compaction -- and after every phase
+fences the mesh-sharded stacked query **bit-exact** (same dists, same
+ids) against the single-device launch over the same pinned snapshot,
+and allclose against the brute-force oracle on the union live set.
+
+It also pins a mid-churn epoch vector and re-checks it after further
+mutations: the pinned view must keep answering from its own state, on
+both placements, while the index moves underneath it.
+
+Shared by ``tests/test_mesh.py`` (the correctness fence, under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) and
+``benchmarks/bench_mesh.py`` (which refuses to time a placement that
+fails the fence), so the bench can never report a speedup the
+exactness contract does not cover.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["run_churn_parity"]
+
+
+def _with_mesh(snap, mesh, axis):
+    """The same pinned epoch vector under a different placement."""
+    return dataclasses.replace(snap, mesh=mesh, mesh_axis=axis)
+
+
+def _oracle(snap, qn, k):
+    from repro.core.exact import exact_search
+
+    X, G = snap.live_points()
+    B = qn.shape[0]
+    if len(X) == 0:
+        return (np.full((B, k), np.inf, np.float32),
+                np.full((B, k), -1, np.int32))
+    ed, ei = exact_search(X, qn, k=k)
+    ed, ei = np.asarray(ed), np.asarray(ei)
+    return ed, np.where(ei >= 0, G[np.clip(ei, 0, len(G) - 1)], -1)
+
+
+def _check_phase(snap, mesh, axis, qn, k, phase, *, oracle=True):
+    """One parity check: mesh vs single-device on the *same* pin."""
+    base = _with_mesh(snap, None, axis)
+    meshed = _with_mesh(snap, mesh, axis)
+    bd0, bi0 = base.query(qn, k, method="stacked")
+    bd1, bi1 = meshed.query(qn, k, method="stacked")
+    assert np.array_equal(np.asarray(bd0), np.asarray(bd1)), \
+        f"{phase}: mesh dists differ from single-device"
+    assert np.array_equal(np.asarray(bi0), np.asarray(bi1)), \
+        f"{phase}: mesh ids differ from single-device"
+    if oracle:
+        ed, _ = _oracle(snap, qn, k)
+        np.testing.assert_allclose(np.asarray(bd1), ed, rtol=1e-4,
+                                   atol=1e-5, err_msg=phase)
+    return {"phase": phase, "live": int(snap.live_count),
+            "segments": len(snap.segments), "exact": True}
+
+
+def run_churn_parity(mesh, *, dim: int = 16, num_shards: int = 2,
+                     n0: int = 32, seed: int = 0, k: int = 5,
+                     nq: int = 8, mesh_axis: str = "shard") -> dict:
+    """Drive churn; assert mesh/single-device parity at every state.
+
+    Raises ``AssertionError`` on the first divergence; returns a report
+    of the phases checked (live counts, segment fan-outs) on success.
+    """
+    from repro.core.balltree import normalize_query
+    from repro.stream.compaction import CompactionPolicy
+    from repro.stream.sharded import ShardedMutableP2HIndex
+
+    rng = np.random.default_rng(seed)
+    qn = normalize_query(
+        rng.normal(size=(nq, dim + 1))).astype(np.float32)
+
+    idx = ShardedMutableP2HIndex.from_data(
+        rng.normal(size=(600, dim)).astype(np.float32), num_shards,
+        n0=n0, seed=seed,
+        policy=CompactionPolicy(delta_capacity=64, max_segments=8))
+    live = list(range(600))
+    phases = []
+
+    # multi-segment bulk state: split each shard's seed segment
+    gids = idx.insert_batch(rng.normal(size=(200, dim)).astype(np.float32))
+    live += [int(g) for g in gids]
+    idx.compact(force=True)
+    phases.append(_check_phase(idx.snapshot(), mesh, mesh_axis, qn, k,
+                               "bulk+compact"))
+
+    # auto-sealed inserts widen the segment fan-out (the axis the mesh
+    # shards), leaving a live delta tail riding over the sealed stack
+    for _ in range(4):
+        gids = idx.insert_batch(
+            rng.normal(size=(100, dim)).astype(np.float32))
+        live += [int(g) for g in gids]
+    phases.append(_check_phase(idx.snapshot(), mesh, mesh_axis, qn, k,
+                               "delta"))
+
+    # pin mid-churn: this epoch vector must stay answerable (and mesh
+    # parity must hold on it) through everything below
+    pinned = idx.snapshot()
+    pinned_d, pinned_i = _with_mesh(pinned, None, mesh_axis).query(
+        qn, k, method="stacked")
+
+    # scattered tombstones across segments and the delta
+    for victim in rng.choice(live, size=60, replace=False):
+        assert idx.delete(int(victim))
+        live.remove(int(victim))
+    phases.append(_check_phase(idx.snapshot(), mesh, mesh_axis, qn, k,
+                               "tombstones"))
+
+    # a whole segment tombstoned to zero live rows (ids planes all -1:
+    # the stacked grid carries its tiles, every row masked)
+    snap = idx.snapshot()
+    seg = max(snap.segments, key=lambda s: s.live)
+    seg_gids = [int(g) for g in seg.live_rows()[1]]
+    for g in seg_gids:
+        assert idx.delete(g)
+        live.remove(g)
+    phases.append(_check_phase(idx.snapshot(), mesh, mesh_axis, qn, k,
+                               "segment-tombstone"))
+
+    # compaction folds the survivors into fresh segments
+    idx.compact(force=True)
+    phases.append(_check_phase(idx.snapshot(), mesh, mesh_axis, qn, k,
+                               "post-compact"))
+
+    # pinned-vector isolation: the mid-churn pin still answers from its
+    # own state, identically on both placements
+    pd, pi = _with_mesh(pinned, mesh, mesh_axis).query(
+        qn, k, method="stacked")
+    assert np.array_equal(np.asarray(pd), np.asarray(pinned_d)), \
+        "pinned snapshot: mesh dists drifted under churn"
+    assert np.array_equal(np.asarray(pi), np.asarray(pinned_i)), \
+        "pinned snapshot: mesh ids drifted under churn"
+
+    assert idx.live_count == len(live)
+    return {"phases": phases, "pinned_isolation": True,
+            "final_live": int(idx.live_count)}

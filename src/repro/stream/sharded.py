@@ -185,6 +185,11 @@ class ShardedMutableP2HIndex:
         self._mig_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         self._misroutes = 0  # deletes that found their gid in no owner
+        #: serving device mesh (see :meth:`set_mesh`); None = single
+        #: program.  Snapshots pin the reference at snapshot() time, so
+        #: in-flight queries are unaffected by a later set_mesh.
+        self._mesh = None
+        self._mesh_axis = "shard"
         if shards is None and wal_dir is not None:
             # leftover logs (or a journaled mid-flight migration) from a
             # crashed incarnation imply its shard count; never recover
@@ -381,6 +386,20 @@ class ShardedMutableP2HIndex:
         with self._stats_lock:
             self._misroutes += 1
         return False
+
+    def set_mesh(self, mesh, *, axis: str = "shard") -> None:
+        """Attach (or detach, ``mesh=None``) the serving device mesh.
+
+        Every snapshot pinned after this carries the mesh, so the
+        stacked round-2 launch shards its segment axis across the
+        mesh's devices (``repro.kernels.stacked_sweep``) and the
+        compactor's pre-publish warmup replays query templates against
+        that topology -- placing the post-compaction stack's planes on
+        their owning devices *before* the publish flips the epoch.
+        Build meshes with :func:`repro.launch.mesh.make_serving_mesh`;
+        answers are bit-identical with or without one."""
+        self._mesh = mesh
+        self._mesh_axis = str(axis)
 
     def _prepublish_warm(self, shard_idx: int, prebuilt_stk) -> None:
         """Compactor warmup hook (runs on shard ``shard_idx``'s
@@ -607,6 +626,8 @@ class ShardedMutableP2HIndex:
             variant=self.variant,
             d=self.d,
             router_version=getattr(self.router, "version", 0),
+            mesh=self._mesh,
+            mesh_axis=self._mesh_axis,
         )
 
     @property
@@ -849,13 +870,20 @@ class ShardedMutableP2HIndex:
     def stats(self) -> dict:
         """Per-shard serving/maintenance stats (bench + ops surface)."""
         pins = [sh.snapshot() for sh in self.shards]
+        from repro.parallel.sharding import mesh_signature
+
         with self._stats_lock:
             misroutes = self._misroutes
+        mesh = self._mesh
+        mesh_devices = (1 if mesh is None else
+                        int(np.asarray(mesh.devices).size))
         return {
             "num_shards": self.num_shards,
             "live_count": sum(p.live_count for p in pins),
             "epoch": tuple(p.epoch for p in pins),
             "router_version": getattr(self.router, "version", 0),
+            "mesh_devices": mesh_devices,
+            "mesh": None if mesh is None else mesh_signature(mesh),
             "misroutes": misroutes,
             "admission": self.admission_stats(),
             "per_shard": [

@@ -274,7 +274,8 @@ class Snapshot:
     def query(self, queries, k: int = 1, *, method: str = "sweep",
               frac: float = 1.0, lambda_cap=None,
               return_counters: bool = False, include_deltas: bool = True,
-              stacked: bool | None = None, probe_tiles: int | None = None):
+              stacked: bool | None = None, probe_tiles: int | None = None,
+              mesh=None, mesh_axis: str = "shard"):
         """Exact (or beam-budgeted) top-k over the snapshot's live set.
 
         ``queries`` must already be normalized (B, d) float32.  Returned
@@ -298,8 +299,11 @@ class Snapshot:
         ``True`` forces it, ``False`` forbids it.  ``method="stacked"``
         is the explicit dispatch-route spelling of ``stacked=True``.
         ``probe_tiles`` is the probe-pass width (None = library default;
-        0 = the single-pass entry-cap-only sweep).  Answers are exact on
-        every path; only tile-skip counters differ.
+        0 = the single-pass entry-cap-only sweep).  ``mesh`` (a 1-D
+        device mesh, see ``repro.launch.mesh.make_serving_mesh``) shards
+        the stacked launch's segment axis over ``mesh_axis`` -- only the
+        stacked route consumes it; the sequential walk ignores it.
+        Answers are exact on every path; only tile-skip counters differ.
         """
         q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
         B = q.shape[0]
@@ -324,7 +328,7 @@ class Snapshot:
                 cap = jnp.minimum(cap, ext)
             bd, bi, cnt = self._stacked_query(
                 q, k, method=method, cap=cap, probe_tiles=probe_tiles,
-                extra_d=bd, extra_i=bi)
+                extra_d=bd, extra_i=bi, mesh=mesh, mesh_axis=mesh_axis)
             counters += np.asarray(cnt, np.int64)
         else:
             for seg in self.segments:
@@ -391,7 +395,8 @@ class Snapshot:
                 and tile_density(self.segments) >= STACKED_DENSITY_DEFAULT)
 
     def _stacked_query(self, q, k: int, *, method: str, cap,
-                       probe_tiles=None, extra_d=None, extra_i=None):
+                       probe_tiles=None, extra_d=None, extra_i=None,
+                       mesh=None, mesh_axis: str = "shard"):
         """One two-pass stacked launch over all segments (probe + main +
         in-launch merge with the ``extra`` delta candidates); returns the
         merged ``(dists (B, k), global ids (B, k), counters)``."""
@@ -404,7 +409,8 @@ class Snapshot:
         fd, fi, cnt, _ = stacked_sweep_query(
             self.stacked_leaves(), q, k, lambda_cap=cap,
             probe_tiles=probe_tiles, extra_d=extra_d, extra_i=extra_i,
-            use_ball=is_bc, use_cone=is_bc, use_kernel=use_kernel)
+            use_ball=is_bc, use_cone=is_bc, use_kernel=use_kernel,
+            mesh=mesh, mesh_axis=mesh_axis)
         return fd, fi, cnt
 
 
@@ -439,6 +445,12 @@ class ShardedSnapshot:
     #: check already invalidates caps across a resharding; this field
     #: makes the placement generation observable to the serving layer.
     router_version: int = 0
+    #: serving device mesh (1-D, ``repro.launch.mesh.make_serving_mesh``)
+    #: the stacked round-2 launch shards its segment axis over; ``None``
+    #: = single-program placement.  Placement, not state -- excluded
+    #: from snapshot identity.
+    mesh: Any = dataclasses.field(default=None, compare=False)
+    mesh_axis: str = dataclasses.field(default="shard", compare=False)
 
     # ------------------------------------------------------------------
     @property
@@ -505,7 +517,8 @@ class ShardedSnapshot:
                                  method=method, frac=frac,
                                  lambda_cap=lambda_cap,
                                  return_info=return_info, stacked=stacked,
-                                 probe_tiles=probe_tiles)
+                                 probe_tiles=probe_tiles,
+                                 mesh=self.mesh, mesh_axis=self.mesh_axis)
         if return_info:
             bd, bi, cnt, info = out
             return (bd, bi, cnt, info) if return_counters else (bd, bi, info)

@@ -1,0 +1,237 @@
+"""Multi-device serving-mesh fence.
+
+The mesh maps the stacked launch's segment axis onto a real device mesh
+(``shard_map`` + in-launch ``all_gather`` collectives) -- the headline
+risk is a placement-dependent answer, so the core of this suite is
+**bit-exactness against the single-device oracle** on >= 4 simulated
+host devices, including every mid-churn snapshot state
+(``repro.stream.meshcheck.run_churn_parity``: live delta, scattered
+tombstones, a whole segment tombstoned, post-compaction, and a pinned
+mid-churn epoch vector).  Device-count-dependent cases run in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+(the ``mesh``/``slow`` lanes); the satellite regressions -- weakref'd
+concat cache, bounded fallback log, mesh-keyed warm registries, the
+dispatch crossover -- run everywhere.
+"""
+import gc
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.balltree import normalize_query
+from repro.kernels import stacked_sweep as ss
+from repro.kernels.stacked_sweep import StackedLeaves, concat_cached
+from repro.parallel.sharding import _FallbackLog, mesh_signature
+from repro.serve.dispatch import DispatchPolicy
+from test_stacked_sweep import _Seg
+from test_stream import DIM, _mkdata
+
+
+def _stack(seed, sizes=(40, 30), gid0=0):
+    segs, gid = [], gid0
+    rng_seed = seed
+    for u, n in enumerate(sizes):
+        raw = _mkdata(n, seed=rng_seed + u)
+        segs.append(_Seg(100 * seed + u, raw, np.arange(gid, gid + n),
+                         n0=16))
+        gid += n
+    return StackedLeaves.from_segments(segs)
+
+
+# ------------------------------------------------- concat cache (weakref)
+def test_concat_cached_releases_retired_stacks():
+    """Retiring every input stack evicts the cache entry: the concat
+    cache must never pin a retired StackedLeaves (its device arrays) via
+    strong keys."""
+    a, b = _stack(1), _stack(2, gid0=1000)
+    combined = concat_cached((a, b))
+    assert concat_cached((a, b)) is combined  # hit while inputs live
+    key = (id(a), id(b))
+    with ss._CONCAT_LOCK:
+        assert key in ss._CONCAT_CACHE
+    del a, b
+    gc.collect()
+    with ss._CONCAT_LOCK:
+        assert key not in ss._CONCAT_CACHE, \
+            "retired stacks still pinned by the concat cache"
+
+
+def test_concat_cached_single_stack_is_identity():
+    """One input concatenates to itself; caching that entry would make
+    the cache key (the stack's id) a strong ref to the value -- a
+    self-pin no weakref callback can ever clear."""
+    a = _stack(3)
+    assert concat_cached((a,)) is a
+    with ss._CONCAT_LOCK:
+        assert (id(a),) not in ss._CONCAT_CACHE
+
+
+def test_concat_cached_id_reuse_miss():
+    """A dead input whose id() was recycled must miss (identity check
+    against the weakrefs, not just the id-tuple key)."""
+    a, b = _stack(4), _stack(5, gid0=1000)
+    combined = concat_cached((a, b))
+    c = _stack(6, gid0=2000)
+    with ss._CONCAT_LOCK:  # simulate id reuse: alias the live entry
+        refs, _ = ss._CONCAT_CACHE[(id(a), id(b))]
+        ss._CONCAT_CACHE[(id(a), id(c))] = (refs, combined)
+    assert concat_cached((a, c)) is not combined
+
+
+# ------------------------------------------------- fallback log (bounded)
+def test_fallback_log_bounded_and_threadsafe():
+    log = _FallbackLog(maxlen=64)
+    errs = []
+
+    def hammer(t):
+        try:
+            for i in range(300):
+                log.append(("w", "ax", t * 1000 + i, "model"))
+                if i % 37 == 0:
+                    list(log)  # concurrent snapshot iteration
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(log) == 64  # bounded
+    assert log.dropped == 4 * 300 - 64  # every eviction accounted
+    assert bool(log)
+    log.clear()
+    assert len(log) == 0 and log.dropped == 0 and not bool(log)
+
+
+# ------------------------------------------------- mesh-keyed registries
+def test_mesh_signature_distinguishes_topologies():
+    from repro.launch.mesh import make_serving_mesh
+
+    default = mesh_signature()
+    assert default[0] == "default"
+    mesh = make_serving_mesh(1)
+    sig = mesh_signature(mesh)
+    assert sig[0] == "mesh" and sig != default
+    assert sig == mesh_signature(make_serving_mesh(1))  # stable
+    assert mesh_signature(make_serving_mesh(1, axis="seg")) != sig
+
+
+def test_round1_templates_keyed_by_mesh_signature():
+    from repro.core import distributed as dist
+
+    dist._ROUND1_TEMPLATES.clear()
+    dist._record_round1(8, 5, 0.25)
+    (key,) = dist._ROUND1_TEMPLATES
+    assert key == (8, 5, 0.25, mesh_signature())
+    # a template recorded under a foreign topology is filtered out
+    foreign = (8, 5, 0.25, ("mesh", ("x",), (64,), tuple(range(64)), "tpu"))
+    dist._ROUND1_TEMPLATES[foreign] = None
+    from repro.core.balltree import build_tree
+
+    tree = build_tree(_mkdata(50, seed=8), n0=16)
+    warmed = dist.warm_round1(tree, is_bc=True)
+    # only the local-topology template replayed (x2 program forms); the
+    # foreign-mesh one contributed nothing
+    assert warmed == 2
+    dist._ROUND1_TEMPLATES.clear()
+
+
+def test_stacked_templates_record_mesh():
+    """The stacked warm template carries its (mesh, mesh_axis) tail so a
+    warm replay targets exactly the recorded topology."""
+    stk = _stack(9)
+    q = normalize_query(_mkdata(4, seed=10, dim=DIM + 1))
+    from repro.kernels.stacked_sweep import stacked_sweep_query
+
+    stacked_sweep_query(stk, q, 3)
+    with ss._COMPILE_LOCK:
+        tpl = next(reversed(ss._RECENT_TEMPLATES))
+    assert tpl[-2:] == (None, "shard")
+    with ss._COMPILE_LOCK:
+        assert all(sig[-2] == mesh_signature() or sig[-2][0] == "mesh"
+                   for sig in ss._COMPILE_SIGS)
+
+
+# ------------------------------------------------- dispatch crossover
+def test_dispatch_mesh_devices_lowers_stacked_crossover():
+    pol = DispatchPolicy()
+    base = pol.route(8, 5, stackable=2, tile_density=0.6)
+    assert base.method != "stacked"  # below single-device crossover
+    meshed = pol.route(8, 5, stackable=2, tile_density=0.6,
+                       mesh_devices=4)
+    assert meshed.method == "stacked"
+    assert "mesh=4" in meshed.reason
+    # density bar scales down with the device count, fan-out floor stays
+    assert pol.route(8, 5, stackable=2, tile_density=0.2,
+                     mesh_devices=4).method == "stacked"
+    assert pol.route(8, 5, stackable=1,
+                     mesh_devices=4).method != "stacked"
+    # non-stacked decisions unaffected
+    assert pol.route(1, 5, mesh_devices=4).method == "dfs"
+
+
+# ------------------------------------------------- device-count parity
+@pytest.mark.mesh
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs >= 4 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=4)")
+def test_stacked_query_mesh_parity_inprocess():
+    """Direct stacked_sweep_query parity on the current >= 4-device
+    topology (the mesh CI lane runs this in-process)."""
+    from repro.kernels.stacked_sweep import stacked_sweep_query
+    from repro.launch.mesh import make_serving_mesh
+
+    stk = _stack(11, sizes=(60, 45, 30, 25))
+    q = normalize_query(_mkdata(6, seed=12, dim=DIM + 1))
+    mesh = make_serving_mesh(4)
+    for probe in (None, 0):
+        d0, i0, c0, _ = stacked_sweep_query(stk, q, 5, probe_tiles=probe)
+        d1, i1, c1, info = stacked_sweep_query(stk, q, 5,
+                                               probe_tiles=probe,
+                                               mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        assert info["mesh_devices"] == 4
+
+
+_CHURN_BODY = textwrap.dedent(
+    """
+    import jax
+    assert jax.device_count() >= 4, jax.device_count()
+    from repro.launch.mesh import make_serving_mesh
+    from repro.stream.meshcheck import run_churn_parity
+
+    report = run_churn_parity(make_serving_mesh(4), seed=0)
+    assert report["pinned_isolation"]
+    fanouts = [p["segments"] for p in report["phases"]]
+    assert max(fanouts) >= 4, fanouts  # the mesh axis really sharded
+    print("MESH_PARITY_OK", report["final_live"])
+    """
+)
+
+
+@pytest.mark.slow
+@pytest.mark.mesh
+def test_mesh_parity_under_churn_4dev():
+    """Acceptance fence: on 4 simulated devices, mesh queries stay
+    bit-exact vs the single-device oracle through insert / delete /
+    whole-segment-tombstone / compaction churn, and a pinned mid-churn
+    epoch vector keeps answering from its own state on both
+    placements."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _CHURN_BODY], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "MESH_PARITY_OK" in res.stdout

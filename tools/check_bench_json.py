@@ -21,12 +21,13 @@ tunables, so any non-zero value fails the lane at any config size.
 
 Usage (CI bench-smoke lane; see .github/workflows/ci.yml):
 
-    python -m benchmarks.run --only serve,stream_sharded,durability \
+    python -m benchmarks.run --only serve,stream_sharded,durability,mesh \
         --smoke --out-dir bench-json
     python tools/check_bench_json.py --max-p99-p50-ratio 10 \
         bench-json/BENCH_serve.json \
         bench-json/BENCH_stream_sharded.json \
-        bench-json/BENCH_durability.json
+        bench-json/BENCH_durability.json \
+        bench-json/BENCH_mesh.json
 """
 from __future__ import annotations
 
@@ -92,6 +93,16 @@ SCHEMAS = {
         "skip_profile.stacked.skip_frac": _NUM,
         "skip_profile.stacked.probe.tiles": _NUM,
     },
+    "BENCH_mesh.json": {
+        "device_counts": list,
+        "devices_1.qps": _NUM, "devices_1.p50_ms": _NUM,
+        "devices_1.p99_ms": _NUM, "devices_1.exact": bool,
+        "devices_2.qps": _NUM, "devices_2.p50_ms": _NUM,
+        "devices_2.p99_ms": _NUM, "devices_2.exact": bool,
+        "devices_4.qps": _NUM, "devices_4.p50_ms": _NUM,
+        "devices_4.p99_ms": _NUM, "devices_4.exact": bool,
+        "qps_monotone": bool,
+    },
 }
 
 #: tail-latency fences: (p50 key, p99 key) pairs whose ratio
@@ -115,6 +126,26 @@ ZERO_KEYS = {
     "BENCH_durability.json": ("acked_loss", "dup_gids",
                               "epoch_regressions"),
 }
+
+#: dotted paths that must be exactly ``true`` -- same always-enforced
+#: contract as :data:`ZERO_KEYS`: the mesh bench's per-device-count
+#: exactness fences are correctness claims (a placement that diverges
+#: from the single-device oracle has no speedup to report), and the
+#: qps-vs-devices curve must stay monotone (with the bench's built-in
+#: 5% noise floor) or the mesh is pure collective overhead.
+TRUE_KEYS = {
+    "BENCH_mesh.json": ("devices_1.exact", "devices_2.exact",
+                        "devices_4.exact", "qps_monotone"),
+}
+
+
+def _dotted(doc, dotted):
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
 
 
 def check_file(path: str, max_ratio: float = 0.0) -> list:
@@ -145,9 +176,14 @@ def check_file(path: str, max_ratio: float = 0.0) -> list:
             node = node[part]
         if node is _missing:
             continue
-        # bool is an int subclass but never a valid metric; a JSON null
-        # (e.g. a NaN metric serialized away) must fail the type check
-        if isinstance(node, bool) or not isinstance(node, typ):
+        # bool is an int subclass but never a valid *metric*; flag paths
+        # must be real JSON booleans.  A JSON null (e.g. a NaN metric
+        # serialized away) must fail the type check either way.
+        if typ is bool:
+            if not isinstance(node, bool):
+                errors.append(f"{path}: {dotted!r} has type "
+                              f"{type(node).__name__}, expected bool")
+        elif isinstance(node, bool) or not isinstance(node, typ):
             errors.append(f"{path}: {dotted!r} has type "
                           f"{type(node).__name__}, expected "
                           f"{getattr(typ, '__name__', typ)}")
@@ -171,6 +207,12 @@ def check_file(path: str, max_ratio: float = 0.0) -> list:
         if isinstance(val, _NUM) and not isinstance(val, bool) and val != 0:
             errors.append(f"{path}: invariant {key!r} = {val} (must be 0 "
                           "-- durability contract violated)")
+    for key in TRUE_KEYS.get(name, ()):
+        val = _dotted(doc, key)
+        if isinstance(val, bool) and val is not True:
+            errors.append(f"{path}: invariant {key!r} = {val} (must be "
+                          "true -- mesh exactness/scaling contract "
+                          "violated)")
     return errors
 
 
