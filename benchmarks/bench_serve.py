@@ -30,10 +30,13 @@ import numpy as np
 
 try:
     from benchmarks.common import (pct, pr4_stacked_query,
+                                   quantized_probe_report,
                                    stacked_skip_profile, stacked_vs_seq)
 except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
-    from common import (pct, pr4_stacked_query, stacked_skip_profile,
-                        stacked_vs_seq)
+    from common import (pct, pr4_stacked_query, quantized_probe_report,
+                        stacked_skip_profile, stacked_vs_seq)
+
+QUANT_DTYPES = ("bf16", "int8")
 
 
 def make_workload(n=30000, d=32, n_clusters=64, scale=2.5, n_queries=32,
@@ -129,6 +132,9 @@ def bench_stacked(data, trace, k, *, n0=64, fanout=6, iters=10,
         stacked_modes.append(f"mode_p{p}")
     modes["mode_stacked"] = {"stacked": True, "probe_tiles": None}
     stacked_modes.append("mode_stacked")
+    for dt in QUANT_DTYPES:  # quantized probe at the default width
+        modes[f"mode_{dt}"] = {"stacked": True, "probe_tiles": None,
+                               "probe_dtype": dt}
 
     def query_fn(pr4=False, **kw):
         if pr4:
@@ -137,7 +143,24 @@ def bench_stacked(data, trace, k, *, n0=64, fanout=6, iters=10,
 
     res.update(stacked_vs_seq(query_fn, modes=modes, iters=iters))
     res["skip_profile"] = stacked_skip_profile(
-        snap, qn, k, probe_grid=tuple(probe_grid) + (None,))
+        snap, qn, k, probe_grid=tuple(probe_grid) + (None,),
+        probe_dtypes=QUANT_DTYPES)
+    # the quantized-probe acceptance entry: bit-exactness vs the f32
+    # launch, the bytes/tile roofline, and the skip/p50 deltas the
+    # precision trade costs (slack loosens the probe cap; pass B's f32
+    # rescan keeps the answers identical)
+    stk = snap.stacked_leaves()
+    quant = quantized_probe_report(
+        lambda dt: snap.query(qn, k, stacked=True, probe_dtype=dt),
+        n0=stk.n0, d=stk.d)
+    quant["p50_delta_ms"] = {
+        dt: res[f"mode_{dt}"]["p50_ms"] - res["mode_stacked"]["p50_ms"]
+        for dt in QUANT_DTYPES}
+    quant["skip_delta"] = {
+        dt: (res["skip_profile"][f"stacked_{dt}"]["live_skips"]
+             - res["skip_profile"]["stacked"]["live_skips"])
+        for dt in QUANT_DTYPES}
+    res["quantized"] = quant
     # the refit: which probe width wins p50 on this registered config
     res["best_probe_mode"] = min(stacked_modes,
                                  key=lambda m_: res[m_]["p50_ms"])
@@ -209,6 +232,15 @@ def main(argv=None):
           + "  ".join(f"{m}={r['skip_frac']:.3f}"
                       for m, r in prof.items())
           + f"; probe overhead {prof['stacked']['probe']}")
+    quant = stacked["quantized"]
+    print("quantized probe: exact=" + str(quant["quantized_exact"])
+          + "  " + "  ".join(
+              f"{dt}: {quant['bytes_tile_reduction'][dt]:.2f}x bytes/tile "
+              f"p50{quant['p50_delta_ms'][dt]:+.2f}ms "
+              f"skips{quant['skip_delta'][dt]:+d}"
+              for dt in quant["bytes_tile_reduction"]))
+    assert quant["quantized_exact"], \
+        "quantized probe must stay bit-exact vs the f32 launch"
     from repro.kernels.stacked_sweep import stacked_compile_stats
     cst = stacked_compile_stats()
     return {"naive": naive, "cold": cold, "warm": warm,
@@ -246,6 +278,14 @@ def run(csv, *, smoke: bool = False) -> dict:
     for mode, r in stacked["skip_profile"].items():
         csv(f"serve_stacked_skips,{mode},{r['live_skips']},"
             f"{r['live_covered']},{r['skip_frac']:.4f}")
+    quant = stacked["quantized"]
+    csv("serve_quantized,dtype,exact,bytes_per_tile,bytes_reduction,"
+        "p50_delta_ms,skip_delta")
+    for dt in quant["exact"]:
+        csv(f"serve_quantized,{dt},{quant['exact'][dt]},"
+            f"{quant['bytes_per_tile'][dt]},"
+            f"{quant['bytes_tile_reduction'][dt]:.3f},"
+            f"{quant['p50_delta_ms'][dt]:.3f},{quant['skip_delta'][dt]}")
     return res
 
 

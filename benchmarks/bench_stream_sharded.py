@@ -36,10 +36,13 @@ import numpy as np
 
 try:
     from benchmarks.common import (live_tiles_covered, pct,
+                                   quantized_probe_report,
                                    stacked_live_skip_entry, stacked_vs_seq)
 except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
-    from common import (live_tiles_covered, pct, stacked_live_skip_entry,
-                        stacked_vs_seq)
+    from common import (live_tiles_covered, pct, quantized_probe_report,
+                        stacked_live_skip_entry, stacked_vs_seq)
+
+QUANT_DTYPES = ("bf16", "int8")
 
 
 def overlap_stats(log):
@@ -76,6 +79,9 @@ def sweep_compare(snap, queries, k, *, iters=20, probe_grid=(0, 4)):
     for p in probe_grid:
         mode_kw[f"stacked_p{p}"] = {"stacked": True, "probe_tiles": p}
     mode_kw["stacked"] = {"stacked": True, "probe_tiles": None}
+    for dt in QUANT_DTYPES:  # quantized round-2 probe, default width
+        mode_kw[f"stacked_{dt}"] = {"stacked": True, "probe_tiles": None,
+                                    "probe_dtype": dt}
     modes = stacked_vs_seq(
         lambda **kw: snap.query(qn, k, return_counters=True, **kw)[2],
         modes=mode_kw, iters=iters)
@@ -123,6 +129,10 @@ def round2_skip_profile(snap, queries, k, *, probe_grid=(0, 4, None)):
         out[name] = stacked_live_skip_entry(
             comb, qn, k, cap=lam0, probe=p, covered=covered,
             is_bc=snap.variant == "bc")
+    for dt in QUANT_DTYPES:
+        out[f"stacked_{dt}"] = stacked_live_skip_entry(
+            comb, qn, k, cap=lam0, probe=None, covered=covered,
+            is_bc=snap.variant == "bc", probe_dtype=dt)
     return out
 
 
@@ -217,6 +227,25 @@ def run_sharded_stream(args):
     sweep = sweep_compare(snap, hot, args.k)
     skip_profile = round2_skip_profile(snap, hot, args.k)
 
+    # quantized round-2 probe: bit-exactness vs the f32 launch, the
+    # bytes/tile roofline, and the skip/p50 deltas of the precision
+    # trade (see benchmarks.common.quantized_probe_report)
+    qn_hot = normalize_query(hot).astype(np.float32)
+    stk0 = next(sh.stacked_leaves() for sh in snap.shards if sh.segments)
+    quantized = quantized_probe_report(
+        lambda dt: snap.query(qn_hot, args.k, stacked=True,
+                              probe_dtype=dt),
+        n0=stk0.n0, d=stk0.d)
+    quantized["p50_delta_ms"] = {
+        dt: (sweep[f"stacked_{dt}_sweep_p50_ms"]
+             - sweep["stacked_sweep_p50_ms"]) for dt in QUANT_DTYPES}
+    quantized["skip_delta"] = {
+        dt: (skip_profile[f"stacked_{dt}"]["live_skips"]
+             - skip_profile["stacked"]["live_skips"])
+        for dt in QUANT_DTYPES}
+    assert quantized["quantized_exact"], \
+        "quantized round-2 probe must stay bit-exact vs the f32 launch"
+
     log = m.compaction_log
     pauses = [c["wall_s"] for c in log]
     compact_total, compact_overlap = overlap_stats(log)
@@ -224,6 +253,7 @@ def run_sharded_stream(args):
     res = {
         **sweep,
         "skip_profile": skip_profile,
+        "quantized": quantized,
         "shards": args.shards,
         "ops": args.ops,
         "wall_s": wall,
@@ -323,6 +353,13 @@ def main(argv=None):
     print("round-2 live-tile skip fractions under lambda0: "
           + "  ".join(f"{m}={r['skip_frac']:.3f}" for m, r in prof.items())
           + f"; probe overhead {prof['stacked']['probe']}")
+    quant = res["quantized"]
+    print("quantized round-2 probe: exact="
+          + str(quant["quantized_exact"]) + "  " + "  ".join(
+              f"{dt}: {quant['bytes_tile_reduction'][dt]:.2f}x bytes/tile "
+              f"p50{quant['p50_delta_ms'][dt]:+.2f}ms "
+              f"skips{quant['skip_delta'][dt]:+d}"
+              for dt in quant["bytes_tile_reduction"]))
     return res
 
 
@@ -355,6 +392,14 @@ def run(csv, *, smoke: bool = False) -> dict:
     for mode, r in res["skip_profile"].items():
         csv(f"stream_sharded_skips,{mode},{r['live_skips']},"
             f"{r['live_covered']},{r['skip_frac']:.4f}")
+    quant = res["quantized"]
+    csv("stream_sharded_quantized,dtype,exact,bytes_per_tile,"
+        "bytes_reduction,p50_delta_ms,skip_delta")
+    for dt in quant["exact"]:
+        csv(f"stream_sharded_quantized,{dt},{quant['exact'][dt]},"
+            f"{quant['bytes_per_tile'][dt]},"
+            f"{quant['bytes_tile_reduction'][dt]:.3f},"
+            f"{quant['p50_delta_ms'][dt]:.3f},{quant['skip_delta'][dt]}")
     return res
 
 

@@ -99,18 +99,22 @@ def live_tiles_covered(segments, n_queries: int) -> int:
 
 
 def stacked_live_skip_entry(stk, qn, k, *, cap, probe, covered, is_bc,
-                            extra_d=None, extra_i=None):
+                            extra_d=None, extra_i=None, probe_dtype=None):
     """One skip-profile row: run the two-pass program at per-query
     granularity (bq=1) and account its live-tile skips (forced pad/dead
     skips excluded).  Shared by the serve-side and sharded-round-2
-    profiles so both acceptance comparisons use one accounting."""
+    profiles so both acceptance comparisons use one accounting.
+    ``probe_dtype`` selects the probe pass's precision (None = f32) --
+    the quantized rows of the profile report how much live-tile pruning
+    the widened (slack-loosened) probe cap gives back."""
     import jax.numpy as jnp
 
     from repro.kernels.stacked_sweep import stacked_sweep_query
 
     _, _, cnt, info = stacked_sweep_query(
         stk, jnp.asarray(qn), k, bq=1, lambda_cap=cap, probe_tiles=probe,
-        extra_d=extra_d, extra_i=extra_i, use_ball=is_bc, use_cone=is_bc)
+        extra_d=extra_d, extra_i=extra_i, use_ball=is_bc, use_cone=is_bc,
+        probe_dtype=probe_dtype)
     live_skips = int(np.asarray(info["seg_skips"]).sum()
                      - np.asarray(info["forced_skips"]).sum())
     return {"live_skips": live_skips, "live_covered": covered,
@@ -145,7 +149,8 @@ def pr4_stacked_query(snap, qn, k):
     return cnt
 
 
-def stacked_skip_profile(snap, qn, k, *, probe_grid=(0, None)):
+def stacked_skip_profile(snap, qn, k, *, probe_grid=(0, None),
+                         probe_dtypes=()):
     """Live-tile skip accounting at per-query granularity (bq=1): the
     sequential cap-threaded walk vs the two-pass stacked sweep at each
     probe setting, on one pinned snapshot.
@@ -155,7 +160,9 @@ def stacked_skip_profile(snap, qn, k, *, probe_grid=(0, None)):
     themselves structurally -- are excluded: this is the apples-to-
     apples pruning-power comparison the probe pass exists to win.
     Returns ``{"seq": {...}, "stacked_p<p>": {...}, "stacked": {...}}``
-    (the unlabeled ``stacked`` entry is the library-default probe)."""
+    (the unlabeled ``stacked`` entry is the library-default probe);
+    each dtype in ``probe_dtypes`` adds a ``stacked_<dtype>`` row at the
+    default probe width -- the quantized-vs-f32 skip comparison."""
     import jax.numpy as jnp
 
     _, _, seq_cnt = snap.query(qn, k, stacked=False, return_counters=True)
@@ -173,4 +180,36 @@ def stacked_skip_profile(snap, qn, k, *, probe_grid=(0, None)):
         out[name] = stacked_live_skip_entry(
             stk, qn, k, cap=bd[:, k - 1], probe=p, covered=covered,
             is_bc=is_bc, extra_d=bd, extra_i=bi)
+    for dt in probe_dtypes:
+        out[f"stacked_{dt}"] = stacked_live_skip_entry(
+            stk, qn, k, cap=bd[:, k - 1], probe=None, covered=covered,
+            is_bc=is_bc, extra_d=bd, extra_i=bi, probe_dtype=dt)
     return out
+
+
+def quantized_probe_report(query_fn, *, n0, d, dtypes=("bf16", "int8")):
+    """Quantized-probe acceptance entry shared by bench_serve and
+    bench_stream_sharded.  ``query_fn(probe_dtype)`` runs one query
+    batch through the serving route and returns ``(dists, ids)``; the
+    report pins the exactness contract (``quantized_exact``: every
+    quantized dtype's final answers BIT-identical to the all-f32
+    launch) and the probe's bytes/tile roofline (``bytes_per_tile`` /
+    ``bytes_tile_reduction`` vs f32 -- the bandwidth the low-precision
+    plane saves, the acceptance floor on bf16 is 1.8x)."""
+    from repro.kernels.stacked_sweep import probe_bytes_per_tile
+
+    fd0, fi0 = (np.asarray(a) for a in query_fn("f32"))
+    f32_bytes = probe_bytes_per_tile("f32", n0, d)
+    rep = {"bytes_per_tile": {"f32": f32_bytes},
+           "bytes_tile_reduction": {}, "exact": {}}
+    ok = True
+    for dt in dtypes:
+        fd, fi = (np.asarray(a) for a in query_fn(dt))
+        exact = bool(np.array_equal(fd, fd0) and np.array_equal(fi, fi0))
+        rep["exact"][dt] = exact
+        ok = ok and exact
+        b = probe_bytes_per_tile(dt, n0, d)
+        rep["bytes_per_tile"][dt] = b
+        rep["bytes_tile_reduction"][dt] = f32_bytes / b
+    rep["quantized_exact"] = ok
+    return rep

@@ -191,6 +191,7 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
                        lambda_cap=None, return_info: bool = False,
                        stacked: bool | None = None,
                        probe_tiles: int | None = None,
+                       probe_dtype: str | None = None,
                        mesh=None, mesh_axis: str = "shard"):
     """Host-orchestrated two-round lambda exchange over *callable shard
     backends* -- the frozen forest's exchange generalized to heterogeneous
@@ -246,7 +247,10 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     pass sweeps the remaining tiles, and the cross-shard global merge
     *and* per-shard k-th reductions run inside the same program -- the
     stacked round 2 returns from a single device program with no
-    host-side per-segment merge; ``probe_tiles`` is the probe width).
+    host-side per-segment merge; ``probe_tiles`` is the probe width and
+    ``probe_dtype`` its precision -- the quantized probe widens its
+    lambda by conservative slack and the f32 main pass rescans, so
+    answers stay bit-exact).
     Backends without stacked leaves keep the sequential loop.  ``None``
     auto-promotes the exact ``sweep``/``pallas`` methods when the
     stackable shards' total live-segment fan-out reaches
@@ -297,7 +301,8 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     base = "sweep" if method == "stacked" else method
     stk_merged, stk_kth, cnt_stk = _stacked_round2(
         shards, q, k, method=method, stacked=stacked, lam0=lam0,
-        probe_tiles=probe_tiles, mesh=mesh, mesh_axis=mesh_axis)
+        probe_tiles=probe_tiles, probe_dtype=probe_dtype,
+        mesh=mesh, mesh_axis=mesh_axis)
     if cnt_stk is not None:
         counters += cnt_stk
     if stk_merged is not None:
@@ -312,7 +317,7 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
         if si in stk_kth:
             round2_kth.append(np.asarray(stk_kth[si]))
             continue
-        kw = ({"stacked": stacked}
+        kw = ({"stacked": stacked, "probe_dtype": probe_dtype}
               if hasattr(s, "stacked_leaves") else {})
         bd, bi, cnt = s.query(q, k, method=base, frac=frac,
                               lambda_cap=lam0, return_counters=True,
@@ -348,7 +353,7 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
 
 
 def _stacked_round2(shards, q, k, *, method, stacked, lam0, probe_tiles,
-                    mesh=None, mesh_axis="shard"):
+                    probe_dtype=None, mesh=None, mesh_axis="shard"):
     """Resolve + run the segment-parallel round 2: every stackable
     shard's segment tile-sets concatenated and swept by ONE two-pass
     device program under ``lambda0`` (probe + main + in-launch merge +
@@ -390,7 +395,7 @@ def _stacked_round2(shards, q, k, *, method, stacked, lam0, probe_tiles,
     # yields ~0 extra live skips here and a 0.94x p50 regression)
     fd, fi, cnt, info = stacked_sweep_query(
         combined, q, k, lambda_cap=lam0, probe_tiles=probe_tiles,
-        probe_route="round2",
+        probe_dtype=probe_dtype, probe_route="round2",
         shard_bounds=tuple(stk.num_segments for stk in stks),
         use_ball=is_bc, use_cone=is_bc,
         use_kernel=True if method == "pallas" else None,

@@ -65,11 +65,13 @@ from repro.parallel.sharding import mesh_signature, shard_map_compat
 __all__ = ["StackedLeaves", "stacked_sweep", "stacked_sweep_search",
            "stacked_sweep_query", "prepare_stacked_operands",
            "concat_cached", "tile_density", "resolve_probe_tiles",
+           "resolve_probe_dtype", "resolve_stacked_backend",
+           "quantization_slack", "probe_bytes_per_tile",
            "warm_stacked", "stacked_compile_stats",
            "reset_stacked_compile_stats",
            "STACKED_FANOUT_DEFAULT", "STACKED_DENSITY_DEFAULT",
            "STACKED_PROBE_TILES_DEFAULT",
-           "STACKED_PROBE_TILES_ROUND2_DEFAULT"]
+           "STACKED_PROBE_TILES_ROUND2_DEFAULT", "PROBE_DTYPES"]
 
 _LANE = 128
 _NEG_FILL = jnp.inf
@@ -108,6 +110,27 @@ STACKED_PROBE_TILES_DEFAULT = 4
 #: :data:`STACKED_PROBE_TILES_DEFAULT`: its entry cap is only the delta
 #: scan's k-th (or nothing), so the probe still earns its launch.
 STACKED_PROBE_TILES_ROUND2_DEFAULT = 0
+
+#: probe-pass precisions the two-pass program accepts.  ``"f32"`` is the
+#: historical all-f32 launch; ``"bf16"``/``"int8"`` score the *probe*
+#: tiles from a lane-packed low-precision plane and widen the resulting
+#: ``lambda_probe`` by a conservative per-tile quantization-slack term
+#: (:func:`quantization_slack`), while the main pass rescans survivors
+#: in f32 -- final answers are bit-exact vs the all-f32 launch because
+#: quantization only moves *thresholds* (kept conservative), never the
+#: verified distances the answer is built from.
+PROBE_DTYPES = ("f32", "bf16", "int8")
+
+#: unit roundoff of a bf16 significand (8 bits incl. the implicit one).
+#: The bf16 probe's per-candidate error is bounded by
+#: ``||q|| * ||x|| * u * (2 + O(u))`` (point + query each rounded once,
+#: f32 accumulation); the slack uses ``4u`` -- a ~2x safety margin that
+#: still costs < 2% of the bound's magnitude.
+_BF16_EPS = 2.0 ** -8
+
+#: multiplicative safety margin on the int8 slack term (covers the f32
+#: dequantization arithmetic on top of the exact int32 accumulation).
+_INT8_SAFETY = 1.05
 
 
 def _segment_live_tiles(seg) -> int:
@@ -272,6 +295,40 @@ class StackedLeaves:
                 self.pts,
                 ((0, 0), (0, 0), (0, 0), (0, dp - self.pts.shape[-1])))
             self._derived["pts_lane"] = hit
+        return hit
+
+    def quantized_pts(self, dtype: str, lane_pad: bool = True):
+        """The probe pass's lane-packed low-precision points plane,
+        built once per geometry and cached in :attr:`_derived` under a
+        ``geom:``-prefixed key -- like :meth:`padded_pts`, tombstone
+        republishes share it through :meth:`with_updated_ids` (deletes
+        never touch tile geometry), so quantization is paid once per
+        compaction, not per query.
+
+        Returns ``(qpts, scale)``: ``qpts`` is ``(N, L, n0, dp)`` in
+        ``bfloat16`` or ``int8``; ``scale`` is the int8 mode's per-tile
+        dequantization factor ``(N, L, 1)`` f32 (``None`` for bf16).
+        int8 scales are ``max |x| / 127`` over the tile with zero-scale
+        tiles (all-pad grid rows: ``pts == 0``) forced to 1.0 -- the
+        quantized values there are exact zeros either way, and a 0/0 at
+        build time (or a 1/0 at dequantization) would leak NaN/inf into
+        tile scores that only *pruning* keeps out of the answer."""
+        assert dtype in ("bf16", "int8"), dtype
+        key = f"geom:quant:{dtype}:{'lane' if lane_pad else 'raw'}"
+        hit = self._derived.get(key)
+        if hit is None:
+            base = self.padded_pts() if lane_pad else self.pts
+            if dtype == "bf16":
+                hit = (base.astype(jnp.bfloat16), None)
+            else:
+                # max |x| over the tile's true columns (lane pads are
+                # zero, so using `base` would give the same scale)
+                maxabs = jnp.max(jnp.abs(self.pts), axis=(2, 3))  # (N, L)
+                scale = jnp.where(maxabs > 0.0, maxabs / 127.0, 1.0)
+                q = jnp.clip(jnp.round(base / scale[:, :, None, None]),
+                             -127.0, 127.0).astype(jnp.int8)
+                hit = (q, scale[:, :, None])
+            self._derived[key] = hit
         return hit
 
     # ------------------------------------------------------------------
@@ -442,6 +499,59 @@ def _global_ids(tree, gids) -> np.ndarray:
                     -1).astype(np.int32)
 
 
+def quantization_slack(probe_dtype: str, *, d: int, leaf_cnorm,
+                       leaf_radii, tile_scale=None):
+    """Per-tile slack coefficients ``(sa, sb)`` (each ``(N, L, 1)`` f32)
+    such that for every point ``x`` of tile ``t`` and query ``q``::
+
+        |score_quant(q, x) - |<q, x>||  <=  ||q|| * sa[t] + sq * sb[t]
+
+    where ``sq`` is the query's int8 quantization scale (0 for bf16).
+    Adding this to the quantized probe scores keeps every widened value
+    >= the true distance, so the probe's merged k-th stays a valid upper
+    bound on the global k-th -- the same conservative-slack argument the
+    lambda cache makes for f32 noise, with the error sourced from
+    quantization instead.
+
+    Derivation sketch (``||x|| <= ||c_t|| + r_t`` for leaf-ball tiles):
+
+    * bf16: point and query each round once (unit roundoff ``u=2^-8``),
+      accumulation is f32, so the error is ``<= ||q||*||x||*u*(2+O(u))``;
+      ``sa = (||c_t|| + r_t) * 4u`` keeps a 2x margin, ``sb = 0``.
+    * int8: per-component dequantization error is ``s/2``; with
+      ``s_t`` the tile scale and ``sq`` the query scale the dot error is
+      ``<= (sqrt(d)/2) * (s_t*||q|| + sq*||x||) + (d/4)*sq*s_t`` (int32
+      accumulation is exact), so ``sa = safety*(sqrt(d)/2)*s_t`` and
+      ``sb = safety*((sqrt(d)/2)*(||c_t||+r_t) + (d/4)*s_t)``.
+
+    ``d`` must be the **true** point dimensionality -- lane-pad columns
+    are exact zeros on both sides and contribute no error."""
+    cr = (jnp.asarray(leaf_cnorm)[..., 0]
+          + jnp.asarray(leaf_radii))[..., None]  # (N, L, 1)
+    if probe_dtype == "bf16":
+        sa = cr * (4.0 * _BF16_EPS)
+        return sa, jnp.zeros_like(sa)
+    assert probe_dtype == "int8", probe_dtype
+    s_t = jnp.asarray(tile_scale)  # (N, L, 1)
+    half_rd = 0.5 * float(np.sqrt(d))
+    sa = _INT8_SAFETY * half_rd * s_t
+    sb = _INT8_SAFETY * (half_rd * cr + 0.25 * float(d) * s_t)
+    return sa, sb
+
+
+def probe_bytes_per_tile(probe_dtype: str, n0: int, d: int) -> int:
+    """Bytes the probe pass streams per (n0, d) tile of points: the
+    roofline the quantized probe attacks.  Low-precision modes add the
+    per-tile scalar operands they read (int8: dequant scale + both slack
+    coefficients; bf16: the slack coefficient)."""
+    if probe_dtype == "f32":
+        return n0 * d * 4
+    if probe_dtype == "bf16":
+        return n0 * d * 2 + 4
+    assert probe_dtype == "int8", probe_dtype
+    return n0 * d + 12
+
+
 # ======================================================================
 # phase 1: stacked bounds + per-(segment, query-block) visit order
 # ======================================================================
@@ -513,8 +623,11 @@ def stacked_sweep_kernel(
     # scalar prefetch
     visit_ref,  # (N, nqb, n_visit) i32 -- per-(segment, block) visit order
     # inputs (blocked)
-    q_ref,      # (bq, dp) f32 -- query block (resident across the sweep)
+    q_ref,      # (bq, dp) -- query block (f32; bf16/int8 when the probe
+    #              pass scores quantized tiles -- probe_dtype static)
     qn_ref,     # (bq, 1)  f32 -- ||q||
+    sq_ref,     # (bq, 1)  f32 -- per-query int8 quantization scale
+    #              (dequant + slack operand; zeros for f32/bf16)
     cap_ref,    # (bq, 1)  f32 -- the single entry cap (delta k-th /
     #                             cache cap / exchange lambda0)
     gs_ref,     # (bq, k)  f32 -- global top-k *value* seed (pass B gets
@@ -524,11 +637,15 @@ def stacked_sweep_kernel(
     ip_ref,     # (1, bq, 1) f32 -- <q, leaf.c> for this tile
     lb_ref,     # (1, bq, 1) f32 -- node-level ball bound (+inf = pad tile)
     cn_ref,     # (1, 1, 1)  f32 -- ||leaf.c||
-    pts_ref,    # (1, 1, n0, dp) f32 -- the tile's points
+    pts_ref,    # (1, 1, n0, dp) -- the tile's points (f32, or the
+    #              lane-packed bf16/int8 plane on the quantized probe)
     ids_ref,    # (1, 1, n0) i32 -- global ids (-1 = pad/tombstone)
     rx_ref,     # (1, 1, n0) f32
     xc_ref,     # (1, 1, n0) f32
     xs_ref,     # (1, 1, n0) f32
+    qs_ref,     # (1, 1, 1)  f32 -- per-tile int8 dequant scale (1.0 pad)
+    sa_ref,     # (1, 1, 1)  f32 -- quantization-slack coefficient (* ||q||)
+    sb_ref,     # (1, 1, 1)  f32 -- quantization-slack coefficient (* sq)
     # outputs
     out_d_ref,  # (1, bq, k) f32 -- this segment's top-k (unsorted)
     out_i_ref,  # (1, bq, k) i32
@@ -543,6 +660,7 @@ def stacked_sweep_kernel(
     k: int,
     use_ball: bool,
     use_cone: bool,
+    probe_dtype: str = "f32",
 ):
     """One grid step = one leaf tile of one segment for one query block.
 
@@ -606,15 +724,42 @@ def stacked_sweep_kernel(
             cb = _cone_cases(qcos[:, None], qsin[:, None],
                              xc_ref[0, 0][None, :], xs_ref[0, 0][None, :])
             keep &= cb < lam[:, None]
-        # verification matmul on the MXU: (bq, dp) x (dp, n0)
-        absip = jnp.abs(
-            jax.lax.dot_general(
-                q_ref[...], pts_ref[0, 0],
-                dimension_numbers=(((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
+        # scoring matmul on the MXU: (bq, dp) x (dp, n0).  Quantized
+        # probe modes dequantize + widen here, *inside* the pl.when
+        # gate, so pad / all-tombstone tiles (lb = +inf -> never active)
+        # are force-skipped before any dequantization arithmetic runs --
+        # a degenerate scale can never leak NaN/inf into live scores.
+        if probe_dtype == "f32":
+            absip = jnp.abs(
+                jax.lax.dot_general(
+                    q_ref[...], pts_ref[0, 0],
+                    dimension_numbers=(((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
             )
-        )
-        cand = jnp.where(keep, absip, _NEG_FILL)  # (bq, n0)
+            cand = jnp.where(keep, absip, _NEG_FILL)  # (bq, n0)
+        else:
+            if probe_dtype == "bf16":
+                raw = jax.lax.dot_general(
+                    q_ref[...], pts_ref[0, 0],
+                    dimension_numbers=(((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+            else:  # int8 x int8 -> exact int32 accumulation, then
+                #    dequantize by (query scale * tile scale)
+                acc = jax.lax.dot_general(
+                    q_ref[...], pts_ref[0, 0],
+                    dimension_numbers=(((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                raw = (acc.astype(jnp.float32)
+                       * (sq_ref[..., 0][:, None] * qs_ref[0, 0, 0]))
+            # widen by the conservative quantization slack: every
+            # candidate value stays >= its true distance, so the merged
+            # probe k-th stays a valid global cap (quantization_slack)
+            err = (qn_ref[..., 0] * sa_ref[0, 0, 0]
+                   + sq_ref[..., 0] * sb_ref[0, 0, 0])  # (bq,)
+            cand = jnp.where(keep, jnp.abs(raw) + err[:, None], _NEG_FILL)
 
         iota_k = jax.lax.broadcasted_iota(jnp.int32, (cand.shape[0], k), 1)
         iota_n = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
@@ -667,14 +812,34 @@ def stacked_sweep_kernel(
         glob[pl.ds(i, 1)] = g[None]
 
 
+def resolve_stacked_backend(use_kernel: bool | None,
+                            interpret: bool | None):
+    """The stacked launch's backend-dispatch rule, shared by
+    :func:`stacked_sweep` and the jit front-end: the Mosaic kernel on
+    TPU; on GPU the vmapped jnp twin jitted by XLA:GPU (the GPU lowering
+    -- ``pltpu`` grid specs have no Triton lowering, so an explicit
+    ``use_kernel=True`` falls back to the interpreter, a parity tool);
+    the interpret-mode twin on CPU.  ``repro.launch.platform`` is the
+    process-level platform selector this rule reads through
+    ``jax.default_backend()``."""
+    backend = jax.default_backend()
+    if use_kernel is None:
+        use_kernel = backend == "tpu"
+    if interpret is None:
+        interpret = backend != "tpu"
+    if use_kernel and backend == "gpu":
+        interpret = True  # TPU-shaped Pallas grid: no Triton lowering
+    return bool(use_kernel), bool(interpret)
+
+
 def stacked_sweep(
-    pts_tiles,   # (N, L, n0, dp) f32
+    pts_tiles,   # (N, L, n0, dp) -- f32, or bf16/int8 quantized probe
     ids_tiles,   # (N, L, n0) i32
     rx_tiles,    # (N, L, n0) f32
     xc_tiles,    # (N, L, n0) f32
     xs_tiles,    # (N, L, n0) f32
     leaf_cnorm,  # (N, L, 1) f32
-    queries,     # (B, dp) f32, B % bq == 0
+    queries,     # (B, dp), B % bq == 0 -- dtype matches pts_tiles
     qnorm,       # (B, 1) f32
     cap,         # (B, 1) f32 -- the single entry cap
     leaf_ip,     # (N, B, L) f32
@@ -689,6 +854,11 @@ def stacked_sweep(
     seed_d=None,  # (N, B, k) f32 -- pass A's per-segment state (None=cold)
     seed_i=None,  # (N, B, k) i32
     global_seed=None,  # (B, k) f32 -- in-launch global top-k value seed
+    probe_dtype: str = "f32",
+    sq=None,          # (B, 1) f32 -- per-query int8 scale (zeros f32/bf16)
+    tile_scale=None,  # (N, L, 1) f32 -- per-tile int8 dequant scale
+    slack_a=None,     # (N, L, 1) f32 -- quantization slack (* ||q||)
+    slack_b=None,     # (N, L, 1) f32 -- quantization slack (* sq)
 ):
     """pallas_call wrapper: grid ``(N segments, query blocks, tiles)``.
 
@@ -700,9 +870,15 @@ def stacked_sweep(
     handoff of the two-pass sweep); ``global_seed`` seeds the in-launch
     global top-k values every segment's threshold folds in (pass B gets
     pass A's merged planes); ``None`` starts cold.
+
+    ``probe_dtype != "f32"`` runs the **quantized probe** form:
+    ``pts_tiles``/``queries`` carry the low-precision planes, tile
+    scores are dequantized and widened by the conservative
+    :func:`quantization_slack` term in-kernel, and the returned ``dists``
+    are *widened upper bounds* (valid pruning state, not exact answers
+    -- the caller's f32 main pass rescans).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    _, interpret = resolve_stacked_backend(True, interpret)
     B, dp = queries.shape
     N, L, n0, _ = pts_tiles.shape
     _, nqb, n_visit = visit.shape
@@ -713,6 +889,14 @@ def stacked_sweep(
         seed_i = jnp.full((N, B, k), -1, jnp.int32)
     if global_seed is None:
         global_seed = jnp.full((B, k), _NEG_FILL, jnp.float32)
+    if sq is None:
+        sq = jnp.zeros((B, 1), jnp.float32)
+    if tile_scale is None:
+        tile_scale = jnp.ones((N, L, 1), jnp.float32)
+    if slack_a is None:
+        slack_a = jnp.zeros((N, L, 1), jnp.float32)
+    if slack_b is None:
+        slack_b = jnp.zeros((N, L, 1), jnp.float32)
 
     grid = (N, nqb, n_visit)
 
@@ -734,7 +918,8 @@ def stacked_sweep(
         return (s, i, 0)
 
     kernel = functools.partial(
-        stacked_sweep_kernel, k=k, use_ball=use_ball, use_cone=use_cone)
+        stacked_sweep_kernel, k=k, use_ball=use_ball, use_cone=use_cone,
+        probe_dtype=probe_dtype)
 
     out_d, out_i, out_s = pl.pallas_call(
         kernel,
@@ -744,6 +929,7 @@ def stacked_sweep(
             in_specs=[
                 pl.BlockSpec((bq, dp), qmap),       # queries
                 pl.BlockSpec((bq, 1), qmap),        # qnorm
+                pl.BlockSpec((bq, 1), qmap),        # sq (query scale)
                 pl.BlockSpec((bq, 1), qmap),        # cap
                 pl.BlockSpec((bq, k), qmap),        # global value seed
                 pl.BlockSpec((1, bq, k), omap),     # seed top-k dists
@@ -756,6 +942,9 @@ def stacked_sweep(
                 pl.BlockSpec((1, 1, n0), tmap),     # rx
                 pl.BlockSpec((1, 1, n0), tmap),     # xcos
                 pl.BlockSpec((1, 1, n0), tmap),     # xsin
+                pl.BlockSpec((1, 1, 1), tmap),      # tile scale
+                pl.BlockSpec((1, 1, 1), tmap),      # slack_a
+                pl.BlockSpec((1, 1, 1), tmap),      # slack_b
             ],
             out_specs=[
                 pl.BlockSpec((1, bq, k), omap),
@@ -775,9 +964,9 @@ def stacked_sweep(
             jax.ShapeDtypeStruct((N, nqb, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(visit, queries, qnorm, cap, global_seed, seed_d, seed_i, leaf_ip,
-      leaf_lb, leaf_cnorm, pts_tiles, ids_tiles, rx_tiles, xc_tiles,
-      xs_tiles)
+    )(visit, queries, qnorm, sq, cap, global_seed, seed_d, seed_i,
+      leaf_ip, leaf_lb, leaf_cnorm, pts_tiles, ids_tiles, rx_tiles,
+      xc_tiles, xs_tiles, tile_scale, slack_a, slack_b)
     return out_d, out_i, out_s
 
 
@@ -786,16 +975,54 @@ def stacked_sweep(
 # ======================================================================
 
 
+def _quant_probe_operands(probe_dtype, ops, qpts, qscale, radii, cnorm,
+                          d):
+    """The probe pass's quantized operand overrides: the low-precision
+    points/queries planes plus the dequant + slack scalars
+    (:func:`quantization_slack`).  Returns ``(qops, quant_kw)`` --
+    ``run(**dict(qops, ...), **quant_kw)`` is the quantized pass A."""
+    if probe_dtype == "bf16":
+        qq = ops["queries"].astype(jnp.bfloat16)
+        sqv = jnp.zeros_like(ops["qnorm"])
+        ts = None
+    else:  # int8: per-query scale, zero-guarded like the tile scales
+        qf = ops["queries"]
+        mq = jnp.max(jnp.abs(qf), axis=1, keepdims=True)
+        sqv = jnp.where(mq > 0.0, mq / 127.0, 1.0)
+        qq = jnp.clip(jnp.round(qf / sqv), -127.0, 127.0).astype(jnp.int8)
+        ts = qscale
+    sa, sb = quantization_slack(probe_dtype, d=d, leaf_cnorm=cnorm,
+                                leaf_radii=radii, tile_scale=qscale)
+    qops = dict(ops, pts_tiles=qpts, queries=qq)
+    return qops, dict(probe_dtype=probe_dtype, sq=sqv, tile_scale=ts,
+                      slack_a=sa, slack_b=sb)
+
+
+def _widened_probe_cap(cap, pd, k):
+    """``lambda_probe`` of the quantized probe: the merged widened k-th,
+    nudged *strictly* above itself.  The quantized pass's candidates are
+    widened bounds, not exact distances, so they cannot seed the f32
+    main pass -- it rescans the full visit list cold, and a candidate
+    whose true distance exactly equals the cap must survive the strict
+    ``<`` prunes (the f32 two-pass form tolerates equality because the
+    probed candidates ride its seeds; here the margin restores that).
+    Entry-cap ties need no margin: the caller that supplies a cap also
+    feeds its supporting candidates through the final merge."""
+    kth = pd[:, k - 1:k]
+    return jnp.minimum(cap, kth * (1.0 + 2.0 ** -16) + 1e-30)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n0", "d", "k", "frac", "bq", "use_ball", "use_cone",
                      "use_kernel", "interpret", "probe_tiles",
-                     "num_shards", "has_extra", "sort_planes"),
+                     "probe_dtype", "num_shards", "has_extra",
+                     "sort_planes"),
 )
 def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, seg_shard,
                  n_true, *, n0, d, k, frac, bq, use_ball, use_cone,
-                 use_kernel, interpret, probe_tiles, num_shards, has_extra,
-                 sort_planes):
+                 use_kernel, interpret, probe_tiles, probe_dtype,
+                 num_shards, has_extra, sort_planes):
     """One device program end to end: probe pass + main pass + in-launch
     global merge.
 
@@ -829,6 +1056,9 @@ def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, seg_shard,
     from repro.core import search
     from repro.kernels import ref
 
+    arrays = dict(arrays)
+    qpts = arrays.pop("qpts", None)
+    qscale = arrays.pop("qscale", None)
     stk = StackedLeaves(**arrays, uids=(), n0=n0, d=d)
     ops, B0 = prepare_stacked_operands(
         stk, queries, frac=frac, bq=bq, lambda_cap=lambda_cap,
@@ -859,7 +1089,28 @@ def _run_stacked(arrays, queries, lambda_cap, extra_d, extra_i, seg_shard,
                  else -jax.lax.top_k(-extra_d, k)[0])
     else:
         extra_d = extra_i = gseed = None
-    if 0 < p < n_visit:
+    if probe_dtype != "f32" and p > 0:
+        # quantized pass A: score the probe tiles from the low-precision
+        # plane, every candidate *widened* by the per-tile slack before
+        # top-k insertion (see quantization_slack) -- the merged k-th is
+        # then >= the k-th true distance over the scanned set, i.e.
+        # still a valid global cap.  Widened values are bounds, not
+        # distances, so they cannot seed pass B: the f32 main pass
+        # rescans the FULL visit list cold-seeded, which also keeps the
+        # pass-B skip counters covering the whole visit list exactly
+        # once (the counter invariant the f32 two-pass gets from its
+        # disjoint-passes union).
+        qops, quant_kw = _quant_probe_operands(
+            probe_dtype, ops, qpts, qscale, arrays["leaf_radii"],
+            arrays["leaf_cnorm"], d)
+        da, ia, skips_a = run(**dict(qops, visit=visit[:, :, :p]),
+                              global_seed=gseed, **quant_kw)
+        pd, _ = search.merge_topk_planes(da, ia, k)
+        cap_b = _widened_probe_cap(ops["cap"], pd, k)
+        bd, bi, skips = run(**dict(ops, cap=cap_b), global_seed=gseed)
+        probe_skips = jnp.sum(
+            jnp.where(true_row[:, None, None], skips_a, 0))
+    elif 0 < p < n_visit:
         # pass A: probe the top-p preference tiles of every segment
         da, ia, skips_a = run(**dict(ops, visit=visit[:, :, :p]),
                               global_seed=gseed)
@@ -945,13 +1196,14 @@ def _finish_stacked(bd, bi, skips, probe_skips, extra_d, extra_i,
     jax.jit,
     static_argnames=("mesh", "mesh_axis", "n0", "d", "k", "frac", "bq",
                      "use_ball", "use_cone", "use_kernel", "interpret",
-                     "probe_tiles", "num_shards", "has_extra",
-                     "sort_planes"),
+                     "probe_tiles", "probe_dtype", "num_shards",
+                     "has_extra", "sort_planes"),
 )
 def _run_stacked_mesh(arrays, queries, lambda_cap, extra_d, extra_i,
                       seg_shard, n_true, *, mesh, mesh_axis, n0, d, k,
                       frac, bq, use_ball, use_cone, use_kernel, interpret,
-                      probe_tiles, num_shards, has_extra, sort_planes):
+                      probe_tiles, probe_dtype, num_shards, has_extra,
+                      sort_planes):
     """The stacked program mapped onto a device mesh: the (bucket- and
     device-count-padded) segment axis of ``arrays`` is sharded across
     ``mesh_axis`` via ``shard_map``, every device sweeps its own
@@ -1001,6 +1253,9 @@ def _run_stacked_mesh(arrays, queries, lambda_cap, extra_d, extra_i,
         gseed = jnp.full((Bp, k), _NEG_FILL, jnp.float32)
 
     def local(arrs, q, cap, gs):
+        arrs = dict(arrs)
+        qpts_l = arrs.pop("qpts", None)
+        qscale_l = arrs.pop("qscale", None)
         stk_l = StackedLeaves(**arrs, uids=(), n0=n0, d=d)
         ops, _ = prepare_stacked_operands(
             stk_l, q, frac=frac, bq=bq, lambda_cap=cap,
@@ -1013,7 +1268,23 @@ def _run_stacked_mesh(arrays, queries, lambda_cap, extra_d, extra_i,
         gather = functools.partial(jax.lax.all_gather,
                                    axis_name=mesh_axis, axis=0,
                                    tiled=True)
-        if 0 < p < n_visit:
+        if probe_dtype != "f32" and p > 0:
+            # quantized probe as a collective: every device's *widened*
+            # pass-A planes meet in the gather-merge, so lambda_probe
+            # stays a valid global cap for the same reason as the
+            # single-launch form; pass B rescans the full local visit
+            # list in f32, cold-seeded (widened values never seed).
+            qops, quant_kw = _quant_probe_operands(
+                probe_dtype, ops, qpts_l, qscale_l, arrs["leaf_radii"],
+                arrs["leaf_cnorm"], d)
+            da, ia, sk_a = run(**dict(qops, visit=visit[:, :, :p]),
+                               global_seed=gs, **quant_kw)
+            pd, _ = search.merge_topk_planes(gather(da), gather(ia), k)
+            cap_b = _widened_probe_cap(ops["cap"], pd, k)
+            bd_l, bi_l, sk_l = run(**dict(ops, cap=cap_b),
+                                   global_seed=gs)
+            psk_l = sk_a
+        elif 0 < p < n_visit:
             da, ia, sk_a = run(**dict(ops, visit=visit[:, :, :p]),
                                global_seed=gs)
             # the lambda exchange as a collective: every device's probe
@@ -1068,6 +1339,26 @@ def resolve_probe_tiles(probe_tiles, n_visit: int,
     return max(0, min(int(probe_tiles), n_visit))
 
 
+def resolve_probe_dtype(probe_dtype, probe_tiles_resolved: int) -> str:
+    """Normalize the probe-precision knob at the launch boundary:
+    ``None`` -> ``"f32"`` (the historical all-f32 launch, and the
+    library default for forced routes), ``"auto"`` -> ``"bf16"`` (the
+    quantized default wherever a probe pass actually runs), and *any*
+    dtype degrades to ``"f32"`` when the resolved probe width is 0 -- a
+    single-pass launch has no probe to quantize, and folding that into
+    the resolution keeps spurious bf16/int8 trace variants of the same
+    all-f32 program out of the compile registry (e.g. the exchange's
+    round-2 route, whose probe default is 0)."""
+    if probe_dtype is None:
+        probe_dtype = "f32"
+    elif probe_dtype == "auto":
+        probe_dtype = "bf16"
+    if probe_dtype not in PROBE_DTYPES:
+        raise ValueError(
+            f"probe_dtype {probe_dtype!r} not in {PROBE_DTYPES}")
+    return "f32" if probe_tiles_resolved == 0 else probe_dtype
+
+
 def _pad_rows(a, pad: int, fill):
     """Append ``pad`` constant-filled rows along the leading axis."""
     if pad == 0:
@@ -1077,7 +1368,7 @@ def _pad_rows(a, pad: int, fill):
 
 
 def _bucketed_arrays(stk: StackedLeaves, *, use_kernel: bool,
-                     multiple: int = 1):
+                     multiple: int = 1, probe_dtype: str = "f32"):
     """The launch's arrays dict with the segment axis padded to the
     :func:`_bucket_segments` bucket.  Pad rows are dead (``valid=False``,
     ``n_leaves=0``, ids -1) so the sweep force-skips them; the padded
@@ -1087,18 +1378,39 @@ def _bucketed_arrays(stk: StackedLeaves, *, use_kernel: bool,
     move).  ``multiple`` further rounds the bucket up (the mesh path
     needs the segment axis divisible by the device count; pad rows are
     free dead weight, and the memo keys already carry ``Np`` so bucket
-    variants coexist).  Returns ``(arrays, padded segment count)``."""
+    variants coexist).  ``probe_dtype`` != "f32" adds the quantized
+    probe plane (``qpts``, zero-padded: exact zeros quantize exactly)
+    and the int8 per-tile scales (``qscale``, pad 1.0 -- the zero-guard
+    convention of :meth:`StackedLeaves.quantized_pts`).  Returns
+    ``(arrays, padded segment count)``."""
     N = stk.num_segments
     Np = _bucket_segments(N)
     if multiple > 1:
         Np = _ceil_to(Np, multiple)
     pad = Np - N
     pts = stk.padded_pts() if use_kernel else stk.pts
+    quant = {}
+    if probe_dtype != "f32":
+        qpts, qscale = stk.quantized_pts(probe_dtype,
+                                         lane_pad=use_kernel)
+        if pad == 0:
+            quant = dict(qpts=qpts)
+            if qscale is not None:
+                quant["qscale"] = qscale
+        else:
+            qkey = (f"geom:quant:bucket:{Np}:{probe_dtype}:"
+                    f"{'lane' if use_kernel else 'raw'}")
+            quant = stk._derived.get(qkey)
+            if quant is None:
+                quant = dict(qpts=_pad_rows(qpts, pad, 0))
+                if qscale is not None:
+                    quant["qscale"] = _pad_rows(qscale, pad, 1.0)
+                stk._derived[qkey] = quant
     if pad == 0:
         return dict(pts=pts, ids=stk.ids, rx=stk.rx, xc=stk.xc,
                     xs=stk.xs, leaf_centers=stk.leaf_centers,
                     leaf_radii=stk.leaf_radii, leaf_cnorm=stk.leaf_cnorm,
-                    valid=stk.valid, n_leaves=stk.n_leaves), Np
+                    valid=stk.valid, n_leaves=stk.n_leaves, **quant), Np
     gkey = f"geom:bucket:{Np}:{'lane' if use_kernel else 'raw'}"
     geom = stk._derived.get(gkey)
     if geom is None:
@@ -1117,7 +1429,7 @@ def _bucketed_arrays(stk: StackedLeaves, *, use_kernel: bool,
                     valid=_pad_rows(stk.valid, pad, False),
                     n_leaves=_pad_rows(stk.n_leaves, pad, 0))
         stk._derived[lkey] = live
-    return {**geom, **live}, Np
+    return {**geom, **live, **quant}, Np
 
 
 #: arrays-dict fields whose pad/placement rides tombstone republishes
@@ -1129,7 +1441,8 @@ _IDS_FIELDS = ("ids", "valid", "n_leaves")
 
 
 def _placed_arrays(stk: StackedLeaves, arrays: dict, Np: int, mesh,
-                   axis: str, use_kernel: bool) -> dict:
+                   axis: str, use_kernel: bool,
+                   probe_dtype: str = "f32") -> dict:
     """``arrays`` with every plane committed to ``mesh`` sharded along
     ``axis`` on the leading segment dimension (contiguous blocks of
     ``Np // mesh.shape[axis]`` segments per device, in stack order).
@@ -1159,7 +1472,17 @@ def _placed_arrays(stk: StackedLeaves, arrays: dict, Np: int, mesh,
     if live is None:
         live = {f: put(arrays[f]) for f in _IDS_FIELDS}
         stk._derived[lkey] = live
-    return {**geom, **live}
+    quant = {}
+    if probe_dtype != "f32":
+        # the quantized probe plane is pure geometry: placement memo
+        # rides tombstone republishes like the f32 planes above
+        qkey = f"geom:quant:mesh:{sig}:{axis}:{Np}:{probe_dtype}:{tag}"
+        quant = stk._derived.get(qkey)
+        if quant is None:
+            quant = {f: put(arrays[f]) for f in ("qpts", "qscale")
+                     if f in arrays}
+            stk._derived[qkey] = quant
+    return {**geom, **live, **quant}
 
 
 # ----------------------------------------------------------------------
@@ -1240,14 +1563,12 @@ def _mesh_axis_size(mesh, mesh_axis: str) -> int:
 
 def _call_run_stacked(stk: StackedLeaves, queries, k, *, frac, bq,
                       use_ball, use_cone, lambda_cap, probe_tiles,
-                      probe_route="snapshot", extra_d=None, extra_i=None,
+                      probe_route="snapshot", probe_dtype=None,
+                      extra_d=None, extra_i=None,
                       shard_bounds=None, use_kernel=None, interpret=None,
                       sort_planes=True, mesh=None, mesh_axis="shard",
                       _warm=False):
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    use_kernel, interpret = resolve_stacked_backend(use_kernel, interpret)
     D = _mesh_axis_size(mesh, mesh_axis)
     if D <= 1:
         mesh = None  # a 1-device (or axis-less) mesh IS the single
@@ -1255,12 +1576,14 @@ def _call_run_stacked(stk: StackedLeaves, queries, k, *, frac, bq,
         D = 0
     p = resolve_probe_tiles(probe_tiles, _n_visit(stk, frac),
                             route=probe_route)
+    pdt = resolve_probe_dtype(probe_dtype, p)
     N = stk.num_segments
     arrays, Np = _bucketed_arrays(stk, use_kernel=bool(use_kernel),
-                                  multiple=(D if mesh is not None else 1))
+                                  multiple=(D if mesh is not None else 1),
+                                  probe_dtype=pdt)
     if mesh is not None:
         arrays = _placed_arrays(stk, arrays, Np, mesh, mesh_axis,
-                                bool(use_kernel))
+                                bool(use_kernel), probe_dtype=pdt)
     bounds = tuple(int(x) for x in shard_bounds) if shard_bounds else ()
     num_shards = len(bounds)
     seg_shard = np.full((Np,), -1, np.int32)
@@ -1284,12 +1607,12 @@ def _call_run_stacked(stk: StackedLeaves, queries, k, *, frac, bq,
     template = (B, k, float(frac), int(bq), bool(use_ball),
                 bool(use_cone), bool(use_kernel), bool(interpret),
                 None if probe_tiles is None else int(probe_tiles),
-                probe_route, num_shards, has_extra, extra_k, has_cap,
-                bool(sort_planes), mesh, mesh_axis)
+                probe_route, probe_dtype, num_shards, has_extra, extra_k,
+                has_cap, bool(sort_planes), mesh, mesh_axis)
     sig = (Np, stk.num_tiles, stk.n0, stk.d, B, k, float(frac), int(bq),
            bool(use_ball), bool(use_cone), bool(use_kernel),
-           bool(interpret), p, num_shards, has_extra, extra_k, has_cap,
-           bool(sort_planes), mesh_signature(mesh), mesh_axis)
+           bool(interpret), p, pdt, num_shards, has_extra, extra_k,
+           has_cap, bool(sort_planes), mesh_signature(mesh), mesh_axis)
     _record_sig(sig, template, _warm)
     runner = (_run_stacked if mesh is None
               else functools.partial(_run_stacked_mesh, mesh=mesh,
@@ -1302,13 +1625,13 @@ def _call_run_stacked(stk: StackedLeaves, queries, k, *, frac, bq,
                  use_ball=use_ball, use_cone=use_cone,
                  use_kernel=bool(use_kernel),
                  interpret=bool(interpret), probe_tiles=p,
-                 num_shards=num_shards,
+                 probe_dtype=pdt, num_shards=num_shards,
                  has_extra=has_extra, sort_planes=sort_planes)
     if Np != N:  # per-segment outputs slice back to the true rows
         bd, bi, fd, fi, counters, seg_skips, shard_kth, probe_skips = out
         out = (bd[:N], bi[:N], fd, fi, counters, seg_skips[:N],
                shard_kth, probe_skips)
-    return out, p
+    return out, p, pdt
 
 
 def warm_stacked(stk: StackedLeaves, templates=None) -> int:
@@ -1329,8 +1652,8 @@ def warm_stacked(stk: StackedLeaves, templates=None) -> int:
     n = 0
     for t in templates:
         (B, k, frac, bq, use_ball, use_cone, use_kernel, interpret,
-         probe_tiles, probe_route, num_shards, has_extra, extra_k,
-         has_cap, sort_planes, mesh, mesh_axis) = t
+         probe_tiles, probe_route, probe_dtype, num_shards, has_extra,
+         extra_k, has_cap, sort_planes, mesh, mesh_axis) = t
         q = np.ones((B, stk.d), np.float32)
         cap = np.full((B,), np.inf, np.float32) if has_cap else None
         ed = (np.full((B, extra_k), np.inf, np.float32)
@@ -1343,6 +1666,7 @@ def warm_stacked(stk: StackedLeaves, templates=None) -> int:
                 stk, q, k, frac=frac, bq=bq, use_ball=use_ball,
                 use_cone=use_cone, lambda_cap=cap,
                 probe_tiles=probe_tiles, probe_route=probe_route,
+                probe_dtype=probe_dtype,
                 extra_d=ed, extra_i=ei, shard_bounds=sb,
                 use_kernel=use_kernel, interpret=interpret,
                 sort_planes=sort_planes, mesh=mesh, mesh_axis=mesh_axis,
@@ -1357,6 +1681,7 @@ def stacked_sweep_search(stk: StackedLeaves, queries, k: int = 1, *,
                          frac: float = 1.0, bq: int = 8,
                          use_ball: bool = True, use_cone: bool = True,
                          lambda_cap=None, probe_tiles: int = 0,
+                         probe_dtype: str | None = None,
                          use_kernel: bool | None = None,
                          interpret: bool | None = None,
                          mesh=None, mesh_axis: str = "shard"):
@@ -1373,12 +1698,14 @@ def stacked_sweep_search(stk: StackedLeaves, queries, k: int = 1, *,
     The serving entry point (in-launch global merge, no host merge) is
     :func:`stacked_sweep_query`.
     """
-    out, _ = _call_run_stacked(stk, queries, k, frac=frac, bq=bq,
-                               use_ball=use_ball, use_cone=use_cone,
-                               lambda_cap=lambda_cap,
-                               probe_tiles=probe_tiles,
-                               use_kernel=use_kernel, interpret=interpret,
-                               mesh=mesh, mesh_axis=mesh_axis)
+    out, _, _ = _call_run_stacked(stk, queries, k, frac=frac, bq=bq,
+                                  use_ball=use_ball, use_cone=use_cone,
+                                  lambda_cap=lambda_cap,
+                                  probe_tiles=probe_tiles,
+                                  probe_dtype=probe_dtype,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret,
+                                  mesh=mesh, mesh_axis=mesh_axis)
     bd, bi, _, _, counters, seg_skips, _, _ = out
     return bd, bi, counters, seg_skips
 
@@ -1388,6 +1715,7 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
                         use_ball: bool = True, use_cone: bool = True,
                         lambda_cap=None, probe_tiles: int | None = None,
                         probe_route: str = "snapshot",
+                        probe_dtype: str | None = None,
                         extra_d=None, extra_i=None, shard_bounds=None,
                         use_kernel: bool | None = None,
                         interpret: bool | None = None,
@@ -1417,16 +1745,18 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
     launch actually spanned (1 = the single-device program; see
     :func:`_run_stacked_mesh` for the ``mesh=`` form).
     """
-    out, p = _call_run_stacked(stk, queries, k, frac=frac, bq=bq,
-                               use_ball=use_ball, use_cone=use_cone,
-                               lambda_cap=lambda_cap,
-                               probe_tiles=probe_tiles,
-                               probe_route=probe_route,
-                               extra_d=extra_d, extra_i=extra_i,
-                               shard_bounds=shard_bounds,
-                               use_kernel=use_kernel, interpret=interpret,
-                               sort_planes=False,
-                               mesh=mesh, mesh_axis=mesh_axis)
+    out, p, pdt = _call_run_stacked(stk, queries, k, frac=frac, bq=bq,
+                                    use_ball=use_ball, use_cone=use_cone,
+                                    lambda_cap=lambda_cap,
+                                    probe_tiles=probe_tiles,
+                                    probe_route=probe_route,
+                                    probe_dtype=probe_dtype,
+                                    extra_d=extra_d, extra_i=extra_i,
+                                    shard_bounds=shard_bounds,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret,
+                                    sort_planes=False,
+                                    mesh=mesh, mesh_axis=mesh_axis)
     _, _, fd, fi, counters, seg_skips, shard_kth, probe_skips = out
     B = int(np.atleast_2d(np.asarray(queries)).shape[0])
     nqb = -(-B // bq)
@@ -1442,7 +1772,7 @@ def stacked_sweep_query(stk: StackedLeaves, queries, k: int = 1, *,
         "forced_skips": forced,
         "shard_kth": shard_kth,
         "probe": {"tiles": p, "scanned": probe_scanned,
-                  "skipped": int(probe_skips)},
+                  "skipped": int(probe_skips), "dtype": pdt},
         "mesh_devices": max(1, _mesh_axis_size(mesh, mesh_axis)),
     }
     return fd, fi, counters, info

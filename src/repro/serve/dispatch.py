@@ -41,6 +41,10 @@ class Route:
     #: probe-pass width for the two-pass stacked program (None = library
     #: default); only meaningful on the "stacked" route
     probe_tiles: int | None = None
+    #: probe-pass precision for the stacked program ("f32" | "bf16" |
+    #: "int8"; None = library default f32).  Pass B always rescans in
+    #: f32, so this changes probe bandwidth, never answers.
+    probe_dtype: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +99,14 @@ class DispatchPolicy:
     # registered bench configs -- bench_serve / bench_stream_sharded
     # sweep the knob and report p50 + live-tile skips per setting.
     probe_tiles: int | None = None
+    # probe-pass precision on the stacked route.  "auto" (default)
+    # resolves to bf16 exactly when the stacked route is chosen -- the
+    # stacked crossover *is* the fan-out floor the tentpole's auto rule
+    # keys on (bandwidth-bound probe, f32 pass B keeps answers
+    # bit-exact; probe bytes/tile halve).  "f32"/"bf16"/"int8" force a
+    # precision; the probe-width 0 degenerate case falls back to f32
+    # inside the kernel layer (resolve_probe_dtype), never here.
+    probe_dtype: str = "auto"
 
     def frac_for_recall(self, recall_target: float) -> float:
         for floor, frac in self.frac_table:
@@ -159,6 +171,9 @@ class DispatchPolicy:
             mesh_note = (f", mesh={mesh_devices}" if mesh_devices > 1
                          else "")
             return Route("stacked", probe_tiles=self.probe_tiles,
+                         probe_dtype=("bf16"
+                                      if self.probe_dtype == "auto"
+                                      else self.probe_dtype),
                          reason=f"fanout={stackable}>={thr} "
                                 f"(delta={delta_frac:.2f}, "
                                 f"dead={tombstone_frac:.2f}"

@@ -235,14 +235,16 @@ class P2HEngine:
             bd, bi, cnt, info = snap.query(
                 mb.queries, mb.k, method=route.method, frac=route.frac,
                 lambda_cap=caps, return_counters=True, return_info=True,
-                stacked=use_stacked, probe_tiles=route.probe_tiles)
+                stacked=use_stacked, probe_tiles=route.probe_tiles,
+                probe_dtype=route.probe_dtype)
             shard_kth = info["shard_kth"]  # (S, B)
         elif snap is not None:
             bd, bi, cnt = snap.query(mb.queries, mb.k, method=route.method,
                                      frac=route.frac, lambda_cap=caps,
                                      return_counters=True,
                                      stacked=use_stacked,
-                                     probe_tiles=route.probe_tiles)
+                                     probe_tiles=route.probe_tiles,
+                                     probe_dtype=route.probe_dtype)
         else:
             bd, bi, cnt = self._run_backend(route, mb.queries, mb.k, caps)
         bd, bi = np.asarray(bd), np.asarray(bi)

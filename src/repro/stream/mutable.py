@@ -477,9 +477,10 @@ class MutableP2HIndex:
         :class:`repro.serve.P2HEngine` constructed over this index
         (micro-batching + epoch-tagged lambda warm start), where
         ``method=None`` means auto-dispatch and an explicit method forces
-        that route.  ``stacked=`` / ``probe_tiles=`` (forwarded to
-        :meth:`Snapshot.query`) control the segment-parallel two-pass
-        device program and its probe-pass width.
+        that route.  ``stacked=`` / ``probe_tiles=`` / ``probe_dtype=``
+        (forwarded to :meth:`Snapshot.query`) control the
+        segment-parallel two-pass device program, its probe-pass width,
+        and the probe's precision (f32/bf16/int8; answers bit-exact).
         """
         if engine is not None:
             return query_via_engine(self, engine, queries, k,

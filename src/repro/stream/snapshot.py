@@ -275,6 +275,7 @@ class Snapshot:
               frac: float = 1.0, lambda_cap=None,
               return_counters: bool = False, include_deltas: bool = True,
               stacked: bool | None = None, probe_tiles: int | None = None,
+              probe_dtype: str | None = None,
               mesh=None, mesh_axis: str = "shard"):
         """Exact (or beam-budgeted) top-k over the snapshot's live set.
 
@@ -299,7 +300,10 @@ class Snapshot:
         ``True`` forces it, ``False`` forbids it.  ``method="stacked"``
         is the explicit dispatch-route spelling of ``stacked=True``.
         ``probe_tiles`` is the probe-pass width (None = library default;
-        0 = the single-pass entry-cap-only sweep).  ``mesh`` (a 1-D
+        0 = the single-pass entry-cap-only sweep) and ``probe_dtype``
+        its precision ("f32"/"bf16"/"int8", None = f32: the quantized
+        probe reads half/quarter the tile bytes, pass B rescans in f32,
+        answers stay bit-exact).  ``mesh`` (a 1-D
         device mesh, see ``repro.launch.mesh.make_serving_mesh``) shards
         the stacked launch's segment axis over ``mesh_axis`` -- only the
         stacked route consumes it; the sequential walk ignores it.
@@ -328,6 +332,7 @@ class Snapshot:
                 cap = jnp.minimum(cap, ext)
             bd, bi, cnt = self._stacked_query(
                 q, k, method=method, cap=cap, probe_tiles=probe_tiles,
+                probe_dtype=probe_dtype,
                 extra_d=bd, extra_i=bi, mesh=mesh, mesh_axis=mesh_axis)
             counters += np.asarray(cnt, np.int64)
         else:
@@ -395,7 +400,8 @@ class Snapshot:
                 and tile_density(self.segments) >= STACKED_DENSITY_DEFAULT)
 
     def _stacked_query(self, q, k: int, *, method: str, cap,
-                       probe_tiles=None, extra_d=None, extra_i=None,
+                       probe_tiles=None, probe_dtype=None,
+                       extra_d=None, extra_i=None,
                        mesh=None, mesh_axis: str = "shard"):
         """One two-pass stacked launch over all segments (probe + main +
         in-launch merge with the ``extra`` delta candidates); returns the
@@ -408,7 +414,8 @@ class Snapshot:
         use_kernel = True if method == "pallas" else None
         fd, fi, cnt, _ = stacked_sweep_query(
             self.stacked_leaves(), q, k, lambda_cap=cap,
-            probe_tiles=probe_tiles, extra_d=extra_d, extra_i=extra_i,
+            probe_tiles=probe_tiles, probe_dtype=probe_dtype,
+            extra_d=extra_d, extra_i=extra_i,
             use_ball=is_bc, use_cone=is_bc, use_kernel=use_kernel,
             mesh=mesh, mesh_axis=mesh_axis)
         return fd, fi, cnt
@@ -500,7 +507,8 @@ class ShardedSnapshot:
     def query(self, queries, k: int = 1, *, method: str = "sweep",
               frac: float = 1.0, frac1: float = 0.25, lambda_cap=None,
               return_counters: bool = False, return_info: bool = False,
-              stacked: bool | None = None, probe_tiles: int | None = None):
+              stacked: bool | None = None, probe_tiles: int | None = None,
+              probe_dtype: str | None = None):
         """Top-k over the cross-shard live set via the two-round lambda
         exchange; same contract as :meth:`Snapshot.query` (normalized
         queries in, global ids out) plus ``frac1``, the round-1 prefix
@@ -510,7 +518,8 @@ class ShardedSnapshot:
         (all shards' segments in one two-pass device program under
         lambda0 -- probe-tightened cap, in-launch merge, see
         :func:`repro.core.distributed.two_round_exchange`);
-        ``probe_tiles`` is that program's probe-pass width."""
+        ``probe_tiles`` is that program's probe-pass width and
+        ``probe_dtype`` its precision (answers bit-exact either way)."""
         from repro.core.distributed import two_round_exchange
 
         out = two_round_exchange(self.shards, queries, k, frac1=frac1,
@@ -518,6 +527,7 @@ class ShardedSnapshot:
                                  lambda_cap=lambda_cap,
                                  return_info=return_info, stacked=stacked,
                                  probe_tiles=probe_tiles,
+                                 probe_dtype=probe_dtype,
                                  mesh=self.mesh, mesh_axis=self.mesh_axis)
         if return_info:
             bd, bi, cnt, info = out

@@ -18,17 +18,28 @@ def _minimal_serve():
     """Smallest document satisfying the BENCH_serve.json schema."""
     num = {"qps": 1.0, "p50_ms": 1.0, "p99_ms": 2.0, "tiles_skipped": 3}
     mode = {"p50_ms": 1.0, "p99_ms": 2.0, "tiles_skipped": 3}
-    probe = {"tiles": 4, "scanned": 10, "skipped": 2}
+    probe = {"tiles": 4, "scanned": 10, "skipped": 2, "dtype": "f32"}
     prof = {"skip_frac": 0.1}
+    quant = {
+        "quantized_exact": True,
+        "exact": {"bf16": True, "int8": True},
+        "bytes_per_tile": {"f32": 4160, "bf16": 2084, "int8": 1052},
+        "bytes_tile_reduction": {"bf16": 2.0, "int8": 3.95},
+        "p50_delta_ms": {"bf16": 0.1, "int8": 0.2},
+        "skip_delta": {"bf16": -2, "int8": -2},
+    }
     return {
         "naive": num, "cold": num, "warm": num,
         "compile_count": 2, "cache_hit": 5,
         "stacked": {
             "fanout": 6, "mode_seq": mode, "mode_pr4": mode,
-            "mode_stacked": mode,
+            "mode_stacked": mode, "mode_bf16": mode, "mode_int8": mode,
             "best_probe_mode": "mode_stacked",
+            "quantized": quant,
             "skip_profile": {"seq": prof,
-                             "stacked": {**prof, "probe": probe}},
+                             "stacked": {**prof, "probe": probe},
+                             "stacked_bf16": prof,
+                             "stacked_int8": prof},
         },
     }
 
@@ -47,10 +58,22 @@ def _minimal_stream_sharded():
         "stacked_sweep_p50_ms": 1.0, "stacked_sweep_p99_ms": 2.0,
         "stacked_tiles_skipped": 3,
         "probe_speedup_p50": 1.0,
+        "stacked_bf16_sweep_p50_ms": 1.0,
+        "stacked_int8_sweep_p50_ms": 1.0,
         "compile_count": 0, "cache_hit": 7,
         "skip_profile": {"seq": prof,
                          "stacked": {**prof,
-                                     "probe": {"tiles": 4}}},
+                                     "probe": {"tiles": 4,
+                                               "dtype": "f32"}},
+                         "stacked_bf16": prof, "stacked_int8": prof},
+        "quantized": {
+            "quantized_exact": True,
+            "exact": {"bf16": True, "int8": True},
+            "bytes_per_tile": {"f32": 4160},
+            "bytes_tile_reduction": {"bf16": 2.0, "int8": 3.95},
+            "p50_delta_ms": {"bf16": 0.1},
+            "skip_delta": {"bf16": -2},
+        },
     }
 
 
@@ -85,7 +108,10 @@ def test_check_bench_json_rejects_missing_and_malformed(tmp_path):
 @pytest.mark.parametrize("drop", ["stacked.mode_pr4.p50_ms",
                                   "stacked.skip_profile.stacked.probe",
                                   "warm.tiles_skipped",
-                                  "compile_count"])
+                                  "compile_count",
+                                  "stacked.quantized.quantized_exact",
+                                  "stacked.quantized.bytes_tile_reduction",
+                                  "stacked.mode_bf16"])
 def test_check_bench_json_rejects_lost_keys(tmp_path, drop):
     doc = _minimal_serve()
     node = doc
@@ -139,6 +165,47 @@ def test_check_bench_json_rejects_nonzero_invariant(tmp_path, key):
     # disabling the ratio check must leave the invariant enforced
     assert check_bench_json.main(
         ["--max-p99-p50-ratio", "0", str(path)]) == 1
+
+
+@pytest.mark.parametrize("mk,name,key", [
+    (_minimal_serve, "BENCH_serve.json",
+     ("stacked", "quantized", "quantized_exact")),
+    (_minimal_stream_sharded, "BENCH_stream_sharded.json",
+     ("quantized", "quantized_exact"))])
+def test_check_bench_json_rejects_inexact_quantized(tmp_path, mk, name,
+                                                    key):
+    """quantized_exact is a correctness claim, not a tunable: a launch
+    whose quantized-probe answers diverge from f32 fails the lane at
+    any config size (and no flag relaxes it)."""
+    doc = mk()
+    node = doc
+    for part in key[:-1]:
+        node = node[part]
+    node[key[-1]] = False
+    path = tmp_path / name
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1
+    assert check_bench_json.main(
+        ["--max-p99-p50-ratio", "0", str(path)]) == 1
+
+
+@pytest.mark.parametrize("mk,name,key", [
+    (_minimal_serve, "BENCH_serve.json",
+     ("stacked", "quantized", "bytes_tile_reduction")),
+    (_minimal_stream_sharded, "BENCH_stream_sharded.json",
+     ("quantized", "bytes_tile_reduction"))])
+def test_check_bench_json_rejects_bytes_reduction_below_floor(
+        tmp_path, mk, name, key):
+    """The quantized probe's acceptance floor: bf16 must cut probe
+    bytes/tile by >= 1.8x vs f32."""
+    doc = mk()
+    node = doc
+    for part in key[:-1]:
+        node = node[part]
+    node[key[-1]] = {**node[key[-1]], "bf16": 1.5}
+    path = tmp_path / name
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1
 
 
 def test_check_bench_json_ratio_guards_degenerate_p50(tmp_path):

@@ -1,0 +1,375 @@
+"""Conservative-bound fence for the quantized probe pass + GPU lowering.
+
+The two-pass stacked sweep's probe pass may score tiles in bf16 or int8
+(``probe_dtype``); exactness then hangs on ONE inequality: every widened
+probe score (quantized |score| + per-tile slack) must stay >= the true
+f32 distance, so the probe's merged k-th remains a valid global cap for
+the f32 main pass.  This suite is the fence:
+
+  * conservative bound -- over random data scales (1e-3..1e3), ragged /
+    tombstoned / all-pad stacks, and insert/delete/compaction churn, the
+    quantized probe's lambda (widened k-th) is >= the f32 probe's lambda
+    (hypothesis property with seeded fallback via ``_hyp``);
+  * bit-exactness -- ``probe_dtype`` in {bf16, int8} produces final
+    answers bit-identical to the all-f32 launch on every backend (jnp
+    twin -- the GPU lowering -- and the interpreted kernel), and exact
+    vs the brute-force oracle;
+  * pruning stays real -- on planted low-intrinsic-dimension data the
+    live-tile skip fraction is >= 0.3 for f32 *and* quantized probes
+    (quantization must not silently pay for its bytes with lost skips);
+  * the int8 zero-scale guard -- all-pad / all-tombstone tiles carry
+    scale 1.0 (never 0), so no NaN/inf can leak out of tiles that only
+    pruning keeps out of the answer;
+  * cache semantics -- quantized planes are geometry-keyed: tombstone
+    republishes (``with_updated_ids``) share them, like ``padded_pts``;
+  * the platform/backed dispatch helpers (``repro.launch``,
+    ``resolve_stacked_backend``, ``resolve_probe_dtype``) and the
+    bytes-per-tile roofline the quantization attacks.
+
+CI's GPU-route matrix runs this file once per ``REPRO_PROBE_DTYPE`` in
+{f32, bf16, int8} under ``JAX_PLATFORMS=cpu``: the jnp twin the matrix
+exercises *is* the GPU lowering (see ``repro/launch/platform.py``).
+"""
+import os
+import types
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from _hyp import given_int_seed
+from repro.core.balltree import normalize_query
+from repro.core.search import merge_topk_planes
+from repro.kernels import ref
+from repro.kernels import stacked_sweep as ss
+from repro.kernels.stacked_sweep import (PROBE_DTYPES, StackedLeaves,
+                                         prepare_stacked_operands,
+                                         probe_bytes_per_tile,
+                                         resolve_probe_dtype,
+                                         resolve_stacked_backend,
+                                         stacked_sweep_query)
+from repro.launch import (GPU_XLA_FLAGS, platform_diagnostics,
+                          set_host_cpu_devices, set_platform)
+from repro.launch.platform import _merge_xla_flags
+from repro.serve.dispatch import DispatchPolicy
+from repro.data import make_p2h_dataset
+from test_stacked_sweep import _Seg, _mk_churned_clustered, _ragged_segments
+from test_stream import DIM, _mkdata, _oracle
+
+# the CI matrix pins one probe dtype per lane via REPRO_PROBE_DTYPE;
+# unset runs the full set.
+_ENV = os.environ.get("REPRO_PROBE_DTYPE", "")
+
+
+def _dtypes(*cands):
+    live = [d for d in cands if _ENV in ("", d)]
+    return live or [pytest.param(cands[0], marks=pytest.mark.skip(
+        reason=f"REPRO_PROBE_DTYPE={_ENV} excludes {cands}"))]
+
+
+QUANT_DTYPES = tuple(d for d in ("bf16", "int8") if _ENV in ("", d))
+
+
+def _scaled_ragged(seed, scale):
+    """Ragged stack (large / small / single-point / all-tombstone
+    segments) with data magnitudes scaled by ``scale`` -- the int8
+    tile scales and bf16 slack must track it."""
+    rng = np.random.default_rng(seed)
+    sizes = [120, 57, 1, 64, 40]
+    segs, gid = [], 0
+    for u, n in enumerate(sizes):
+        raw = (rng.normal(size=(n, DIM)) * scale).astype(np.float32)
+        segs.append(_Seg(u, raw, np.arange(gid, gid + n),
+                         tombstone_all=(u == len(sizes) - 1)))
+        gid += n
+    return segs
+
+
+def _probe_lambda(stk, qn, k, p, probe_dtype, bq=8):
+    """The probe pass alone, via the jnp oracle: merged k-th per query
+    (the widened value for quantized dtypes -- exactly what pass B's
+    cap is derived from)."""
+    ops, B0 = prepare_stacked_operands(stk, jnp.asarray(qn), bq=bq,
+                                       lane_pad=False)
+    ops = dict(ops, visit=ops["visit"][:, :, :p])
+    kw = {}
+    if probe_dtype != "f32":
+        qpts, qscale = stk.quantized_pts(probe_dtype, lane_pad=False)
+        ops, kw = ss._quant_probe_operands(probe_dtype, ops, qpts, qscale,
+                                           stk.leaf_radii, stk.leaf_cnorm,
+                                           stk.d)
+    da, ia, _ = ref.stacked_sweep_ref(**ops, k=k, bq=bq, **kw)
+    pd, _ = merge_topk_planes(da, ia, k)
+    return np.asarray(pd)[:B0, k - 1]
+
+
+# ================================================ conservative bound
+@pytest.mark.parametrize("dtype", _dtypes("bf16", "int8"))
+@given_int_seed(max_examples=6, hi=2**31 - 1, fallback_seeds=(0, 1, 2))
+def test_quantized_probe_lambda_is_conservative(dtype, seed):
+    """The headline inequality: the quantized probe's lambda (widened
+    k-th: |quantized score| + slack) is >= the f32 probe's lambda, over
+    random data scales spanning 1e-3..1e3 and every ragged/tombstone
+    padding edge.  If this ever fails, pass B runs under an invalid cap
+    and the exactness contract is gone."""
+    rng = np.random.default_rng(seed)
+    scale = float(10.0 ** rng.uniform(-3.0, 3.0))
+    stk = StackedLeaves.from_segments(_scaled_ragged(seed, scale))
+    q = normalize_query(rng.normal(size=(5, DIM + 1)).astype(np.float32))
+    k = 5
+    for p in (2, 4):
+        lam_f = _probe_lambda(stk, q, k, p, "f32")
+        lam_q = _probe_lambda(stk, q, k, p, dtype)
+        assert (lam_q >= lam_f).all(), (scale, p, lam_q - lam_f)
+
+
+@pytest.mark.parametrize("dtype", _dtypes("bf16", "int8"))
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 1e3])
+def test_quantized_launch_bitexact_across_scales(dtype, scale):
+    """End-to-end at extreme data scales: the quantized-probe launch's
+    final answers are bit-identical to the all-f32 launch (same widened
+    -> rescan structure regardless of magnitude)."""
+    stk = StackedLeaves.from_segments(_scaled_ragged(7, scale))
+    q = normalize_query(_mkdata(6, seed=8, dim=DIM + 1))
+    fd0, fi0, _, _ = stacked_sweep_query(stk, jnp.asarray(q), 5,
+                                         probe_tiles=4, probe_dtype="f32")
+    fd, fi, _, info = stacked_sweep_query(stk, jnp.asarray(q), 5,
+                                          probe_tiles=4, probe_dtype=dtype)
+    np.testing.assert_array_equal(np.asarray(fd), np.asarray(fd0))
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(fi0))
+    assert info["probe"]["dtype"] == dtype
+
+
+@pytest.mark.parametrize("dtype", _dtypes("bf16", "int8"))
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_quantized_launch_bitexact_per_backend(dtype, use_kernel):
+    """Backend matrix on the ragged stack: the jnp twin (the GPU
+    lowering) and the interpreted kernel each produce quantized-probe
+    answers bit-identical to their own f32 launch."""
+    stk = StackedLeaves.from_segments(_ragged_segments(seed=13))
+    q = normalize_query(_mkdata(9, seed=14, dim=DIM + 1))  # 9: pad path
+    kw = dict(probe_tiles=4, use_kernel=use_kernel, interpret=True)
+    fd0, fi0, c0, _ = stacked_sweep_query(stk, jnp.asarray(q), 5,
+                                          probe_dtype="f32", **kw)
+    fd, fi, cnt, _ = stacked_sweep_query(stk, jnp.asarray(q), 5,
+                                         probe_dtype=dtype, **kw)
+    np.testing.assert_array_equal(np.asarray(fd), np.asarray(fd0))
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(fi0))
+    # visit accounting invariant: counters[2] still balances the grid
+    assert int(np.asarray(cnt)[2]) == int(np.asarray(c0)[2])
+
+
+@given_int_seed(max_examples=4, hi=2**31 - 1, fallback_seeds=(0, 1, 2))
+def test_quantized_serving_route_exact_on_churn(seed):
+    """The serving route (delta candidates + entry cap + in-launch
+    merge) under insert/delete/compaction churn: every quantized
+    ``probe_dtype`` is bit-identical to the f32-probe route and exact
+    vs the brute-force oracle over the live set."""
+    m = _mk_churned_clustered(seed)
+    snap = m.snapshot()
+    q = normalize_query(np.random.default_rng(seed + 100)
+                        .normal(size=(6, DIM + 1)).astype(np.float32))
+    k = 5
+    fd0, fi0 = snap.query(q, k, stacked=True, probe_dtype="f32")
+    ed, eg = _oracle(snap, q, k)
+    for dtype in QUANT_DTYPES:
+        fd, fi = snap.query(q, k, stacked=True, probe_dtype=dtype)
+        np.testing.assert_array_equal(np.asarray(fd), np.asarray(fd0))
+        np.testing.assert_array_equal(np.asarray(fi), np.asarray(fi0))
+    np.testing.assert_allclose(np.asarray(fd0), ed, rtol=1e-4, atol=1e-5)
+    mism = np.asarray(fi0) != eg
+    if mism.any():  # id disagreements must be exact-distance ties
+        tol = 1e-4 * np.abs(ed) + 1e-6
+        assert (np.abs(np.asarray(fd0) - ed)[mism] <= tol[mism]).all()
+
+
+# ==================================================== pruning fence
+def _planted_stack(seed=3, *, n=2000, d=16, chunks=4, n0=16, nq=8):
+    x, q = make_p2h_dataset(n, d, kind="planted", n_queries=nq, seed=seed)
+    chunk = n // chunks
+    segs = [_Seg(u, x[u * chunk:(u + 1) * chunk],
+                 np.arange(u * chunk, (u + 1) * chunk), n0=n0)
+            for u in range(chunks)]
+    return StackedLeaves.from_segments(segs), normalize_query(q)
+
+
+@pytest.mark.parametrize("dtype", _dtypes("f32", "bf16", "int8"))
+def test_planted_live_skip_fraction_floor(dtype):
+    """Planted low-intrinsic-dimension data is the regime where the
+    ball/cone bounds actually prune; the quantized probe must not trade
+    that away (slack loosens the probe cap, but only by quantization
+    error).  Fence: live-tile skip fraction >= 0.3 at per-query
+    granularity, f32 and quantized alike."""
+    stk, q = _planted_stack(seed=3)
+    _, _, _, info = stacked_sweep_query(stk, jnp.asarray(q), 5, bq=1,
+                                        probe_tiles=8, probe_dtype=dtype)
+    live_skips = int(np.asarray(info["seg_skips"]).sum()
+                     - np.asarray(info["forced_skips"]).sum())
+    covered = q.shape[0] * int(np.asarray(stk.valid).sum())
+    frac = live_skips / covered
+    assert frac >= 0.3, (dtype, frac, live_skips, covered)
+
+
+# ============================================== int8 zero-scale guard
+def test_int8_zero_scale_guard_on_all_pad_tiles():
+    """Regression fence for the quantization-pad audit: grid rows past a
+    segment's real leaves (and the all-tombstone segment's tiles) are
+    all-zero points; their int8 scale must be forced to 1.0 -- a 0
+    scale would put 0/0 NaN into the plane at build time or inf at
+    dequantization, and only *pruning* keeps those tiles out of the
+    answer."""
+    segs = _ragged_segments(seed=11)  # last segment all-tombstone
+    stk = StackedLeaves.from_segments(segs)
+    _, scale = stk.quantized_pts("int8", lane_pad=False)
+    s = np.asarray(scale)[..., 0]
+    assert np.isfinite(s).all() and (s > 0).all()
+    nl = np.asarray(stk.n_leaves)
+    for i in range(stk.num_segments):
+        assert (s[i, nl[i]:] == 1.0).all()  # all-pad rows: guarded
+    qpts, _ = stk.quantized_pts("int8", lane_pad=False)
+    assert np.isfinite(np.asarray(qpts, np.float32)).all()
+
+
+def test_int8_all_tombstone_segment_stays_exact_and_finite():
+    """The would-have-caught-it regression: an all-tombstone segment
+    under the int8 probe (zero-scale tiles force-skipped before
+    dequantization) leaks no NaN/inf and the launch stays bit-exact vs
+    f32."""
+    segs = _ragged_segments(seed=17)
+    stk = StackedLeaves.from_segments(segs)
+    q = normalize_query(_mkdata(6, seed=18, dim=DIM + 1))
+    fd0, fi0, _, _ = stacked_sweep_query(stk, jnp.asarray(q), 5,
+                                         probe_tiles=4, probe_dtype="f32")
+    fd, fi, _, _ = stacked_sweep_query(stk, jnp.asarray(q), 5,
+                                       probe_tiles=4, probe_dtype="int8")
+    assert np.isfinite(np.asarray(fd)).all()
+    np.testing.assert_array_equal(np.asarray(fd), np.asarray(fd0))
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(fi0))
+
+
+# ==================================================== cache semantics
+def test_quantized_plane_cache_shared_across_tombstone_republish():
+    """Quantized planes are geometry-derived: a tombstone-only
+    republish (``with_updated_ids``) must share them object-identically
+    -- quantization is paid once per compaction, not per delete."""
+    segs = _ragged_segments(seed=5)
+    stk = StackedLeaves.from_segments(segs)
+    qi0, si0 = stk.quantized_pts("int8", lane_pad=False)
+    qb0, _ = stk.quantized_pts("bf16", lane_pad=False)
+    pid = np.array(segs[0].tree.point_ids)
+    pid[0] = -1  # tombstone one row of segment 0
+    seg2 = types.SimpleNamespace(
+        uid=999, tree=dataclasses.replace(segs[0].tree, point_ids=pid),
+        gids=segs[0].gids)
+    stk2 = stk.with_updated_ids({0: seg2})
+    qi1, si1 = stk2.quantized_pts("int8", lane_pad=False)
+    qb1, _ = stk2.quantized_pts("bf16", lane_pad=False)
+    assert qi1 is qi0 and si1 is si0 and qb1 is qb0
+    # and the ids plane actually moved
+    assert stk2.uids[0] == 999 and stk.uids[0] != 999
+
+
+# ============================================ dispatch + platform unit
+def test_resolve_probe_dtype_rules():
+    assert resolve_probe_dtype(None, 4) == "f32"
+    assert resolve_probe_dtype("auto", 4) == "bf16"
+    for d in PROBE_DTYPES:
+        assert resolve_probe_dtype(d, 4) == d
+    # no probe pass -> no quantized trace variant
+    assert resolve_probe_dtype("auto", 0) == "f32"
+    assert resolve_probe_dtype("int8", 0) == "f32"
+    with pytest.raises(ValueError, match="probe_dtype"):
+        resolve_probe_dtype("fp8", 4)
+
+
+def test_resolve_stacked_backend_rules(monkeypatch):
+    # the real host resolution is self-consistent
+    on_tpu = jax.default_backend() == "tpu"
+    uk, it = resolve_stacked_backend(None, None)
+    assert uk is on_tpu and it is (not on_tpu)
+    # explicit settings pass through
+    assert resolve_stacked_backend(False, False) == (False, False)
+    # the GPU route: jnp twin by default; forced kernel degrades to the
+    # interpreter (TPU-shaped grid spec has no Triton lowering)
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    assert resolve_stacked_backend(None, None) == (False, True)
+    assert resolve_stacked_backend(True, False) == (True, True)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert resolve_stacked_backend(None, None) == (True, False)
+
+
+def test_dispatch_policy_auto_probe_dtype():
+    pol = DispatchPolicy()
+    r = pol.route(8, 5, stackable=4, tile_density=0.9)
+    assert r.method == "stacked" and r.probe_dtype == "bf16"
+    forced = DispatchPolicy(probe_dtype="int8").route(
+        8, 5, stackable=4, tile_density=0.9)
+    assert forced.method == "stacked" and forced.probe_dtype == "int8"
+    # non-stacked routes carry no probe dtype
+    assert pol.route(1, 5).probe_dtype is None
+
+
+def test_probe_bytes_per_tile_roofline():
+    n0, d = 16, 65
+    f32 = probe_bytes_per_tile("f32", n0, d)
+    bf16 = probe_bytes_per_tile("bf16", n0, d)
+    i8 = probe_bytes_per_tile("int8", n0, d)
+    assert f32 == n0 * d * 4
+    # the acceptance floor: bf16 cuts probe bytes/tile by >= 1.8x
+    assert f32 / bf16 >= 1.8
+    assert f32 / i8 >= 3.5
+    assert bf16 > n0 * d * 2 and i8 > n0 * d  # scalar operands counted
+
+
+def test_merge_xla_flags_user_settings_win(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_gpu_triton_gemm_any=False")
+    _merge_xla_flags(GPU_XLA_FLAGS)
+    flags = os.environ["XLA_FLAGS"].split()
+    # the user's value survives, un-duplicated
+    assert flags.count("--xla_gpu_triton_gemm_any=False") == 1
+    assert not any(f == "--xla_gpu_triton_gemm_any=True" for f in flags)
+    # the rest of the recipe is merged in
+    assert "--xla_gpu_enable_latency_hiding_scheduler=true" in flags
+
+
+def test_set_platform_validates_and_warns_after_init(monkeypatch):
+    with pytest.raises(ValueError, match="platform"):
+        set_platform("cuda")
+    # backends are initialized in this process (jax was used above):
+    # the pin warns instead of silently doing nothing
+    monkeypatch.setenv("XLA_FLAGS", "")
+    old = jax.config.read("jax_platform_name")
+    try:
+        with pytest.warns(RuntimeWarning, match="backend initialization"):
+            set_platform("gpu")
+        # the GPU flag recipe was merged regardless (next process reuse)
+        assert "--xla_gpu_triton_gemm_any=True" in os.environ["XLA_FLAGS"]
+    finally:
+        jax.config.update("jax_platform_name", old)
+
+
+def test_set_host_cpu_devices_replaces_count_flag(monkeypatch):
+    monkeypatch.setenv(
+        "XLA_FLAGS",
+        "--xla_force_host_platform_device_count=2 --xla_dump_to=/tmp/x")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        set_host_cpu_devices(4)
+    flags = os.environ["XLA_FLAGS"].split()
+    assert "--xla_force_host_platform_device_count=4" in flags
+    assert "--xla_force_host_platform_device_count=2" not in flags
+    assert "--xla_dump_to=/tmp/x" in flags  # unrelated flags survive
+    with pytest.raises(ValueError):
+        set_host_cpu_devices(0)
+
+
+def test_platform_diagnostics_reports_route():
+    diag = platform_diagnostics()
+    assert diag["backend"] == jax.default_backend()
+    assert diag["device_count"] == jax.device_count()
+    assert (diag["use_kernel"], diag["interpret"]) == \
+        resolve_stacked_backend(None, None)
+    assert isinstance(diag["devices"], list) and diag["devices"]

@@ -64,6 +64,21 @@ SCHEMAS = {
         "stacked.skip_profile.stacked.probe.tiles": _NUM,
         "stacked.skip_profile.stacked.probe.scanned": _NUM,
         "stacked.skip_profile.stacked.probe.skipped": _NUM,
+        "stacked.skip_profile.stacked.probe.dtype": str,
+        "stacked.skip_profile.stacked_bf16.skip_frac": _NUM,
+        "stacked.skip_profile.stacked_int8.skip_frac": _NUM,
+        "stacked.mode_bf16.p50_ms": _NUM,
+        "stacked.mode_int8.p50_ms": _NUM,
+        "stacked.quantized.quantized_exact": bool,
+        "stacked.quantized.exact.bf16": bool,
+        "stacked.quantized.exact.int8": bool,
+        "stacked.quantized.bytes_per_tile.f32": _NUM,
+        "stacked.quantized.bytes_per_tile.bf16": _NUM,
+        "stacked.quantized.bytes_per_tile.int8": _NUM,
+        "stacked.quantized.bytes_tile_reduction.bf16": _NUM,
+        "stacked.quantized.bytes_tile_reduction.int8": _NUM,
+        "stacked.quantized.p50_delta_ms.bf16": _NUM,
+        "stacked.quantized.skip_delta.bf16": _NUM,
     },
     "BENCH_durability.json": {
         "rounds": _NUM,
@@ -92,6 +107,19 @@ SCHEMAS = {
         "skip_profile.seq.skip_frac": _NUM,
         "skip_profile.stacked.skip_frac": _NUM,
         "skip_profile.stacked.probe.tiles": _NUM,
+        "skip_profile.stacked.probe.dtype": str,
+        "skip_profile.stacked_bf16.skip_frac": _NUM,
+        "skip_profile.stacked_int8.skip_frac": _NUM,
+        "stacked_bf16_sweep_p50_ms": _NUM,
+        "stacked_int8_sweep_p50_ms": _NUM,
+        "quantized.quantized_exact": bool,
+        "quantized.exact.bf16": bool,
+        "quantized.exact.int8": bool,
+        "quantized.bytes_per_tile.f32": _NUM,
+        "quantized.bytes_tile_reduction.bf16": _NUM,
+        "quantized.bytes_tile_reduction.int8": _NUM,
+        "quantized.p50_delta_ms.bf16": _NUM,
+        "quantized.skip_delta.bf16": _NUM,
     },
     "BENCH_mesh.json": {
         "device_counts": list,
@@ -136,6 +164,26 @@ ZERO_KEYS = {
 TRUE_KEYS = {
     "BENCH_mesh.json": ("devices_1.exact", "devices_2.exact",
                         "devices_4.exact", "qps_monotone"),
+    # the quantized probe's exactness contract: final answers
+    # bit-identical to the all-f32 launch on every bench config --
+    # quantization buys bandwidth, never answers
+    "BENCH_serve.json": ("stacked.quantized.quantized_exact",),
+    "BENCH_stream_sharded.json": ("quantized.quantized_exact",),
+}
+
+#: dotted paths with a hard numeric floor, keyed by file basename --
+#: the quantized probe's acceptance bar: bf16 must cut the probe pass's
+#: streamed bytes/tile by >= 1.8x vs f32 (int8 strictly more).  Like
+#: ZERO_KEYS/TRUE_KEYS these are config-independent claims (the ratio
+#: is a function of dtype widths + scalar operands, not workload size),
+#: so they are always enforced.
+FLOOR_KEYS = {
+    "BENCH_serve.json": {
+        "stacked.quantized.bytes_tile_reduction.bf16": 1.8,
+    },
+    "BENCH_stream_sharded.json": {
+        "quantized.bytes_tile_reduction.bf16": 1.8,
+    },
 }
 
 
@@ -211,8 +259,14 @@ def check_file(path: str, max_ratio: float = 0.0) -> list:
         val = _dotted(doc, key)
         if isinstance(val, bool) and val is not True:
             errors.append(f"{path}: invariant {key!r} = {val} (must be "
-                          "true -- mesh exactness/scaling contract "
-                          "violated)")
+                          "true -- exactness/scaling contract violated)")
+    for key, floor in FLOOR_KEYS.get(name, {}).items():
+        val = _dotted(doc, key)
+        if (isinstance(val, _NUM) and not isinstance(val, bool)
+                and val == val and val < floor):
+            errors.append(f"{path}: {key!r} = {val:.3f} below floor "
+                          f"{floor:g} (quantized probe bytes/tile "
+                          "reduction regressed)")
     return errors
 
 
