@@ -1,0 +1,309 @@
+"""Read-path resilience benchmark: the chaos-lane fences for the
+serving engine's failure-domain layer.
+
+Four sections, each a correctness claim first and a latency number
+second (smoke configs shrink the numbers, never the claims):
+
+  * ``nofault`` -- the zero-overhead invariant: with no faults injected,
+    the resilient exchange answers **bit-identically** to the plain
+    two-round exchange (``exact``), degrades nothing (``missing`` = 0),
+    and its p50 overhead is reported (supervised calls add thread
+    hand-offs, not algorithm changes);
+  * ``straggler`` -- one shard hangs on every call: every query must
+    return a *degraded* answer before its deadline (``p99_bounded``,
+    ``deadline_violations`` = 0), the answer must be exactly the oracle
+    over the live shards (``degraded_exact_live``), and the loss must be
+    reported (``complete_false``, ``missing_shards``);
+  * ``breaker`` -- a shard errors through a bounded window, then heals:
+    the per-shard circuit breaker must trip (fast-failing follow-up
+    queries, sparing the backend), half-open probe, and close again
+    (``cycle_ok`` = tripped AND recovered AND final answer complete);
+  * ``shed`` -- admission control under overload: queue-depth
+    rejections, exhausted-budget rejections at submit, and
+    expired-in-queue batches shed at execute with inf results instead
+    of an exception (``observed`` = all three counters fired).
+
+Run:
+
+    PYTHONPATH=src python benchmarks/bench_resilience.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.common import pct
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from common import pct
+
+
+def _live_oracle(snaps, qn, k):
+    import jax.numpy as jnp
+
+    from repro.core import exact_search
+
+    Xs, Gs = [], []
+    for sn in snaps:
+        X, G = sn.live_points()
+        if len(X):
+            Xs.append(X)
+            Gs.append(G)
+    if not Xs:
+        B = qn.shape[0]
+        return (np.full((B, k), np.inf, np.float32),
+                np.full((B, k), -1, np.int32))
+    X, G = np.concatenate(Xs), np.concatenate(Gs)
+    ed, ei = exact_search(jnp.asarray(X), jnp.asarray(qn), k=k)
+    ed, ei = np.asarray(ed), np.asarray(ei)
+    return ed, np.where(ei >= 0, G[np.clip(ei, 0, len(G) - 1)], -1)
+
+
+def bench_nofault(m, q, k, *, iters):
+    """Zero-overhead invariant: plain vs resilient, no faults."""
+    from repro.serve.resilience import ResilienceConfig, ShardSupervisor
+
+    sup = ShardSupervisor(ResilienceConfig(shard_timeout_s=60.0))
+    m.query(q, k=k, method="sweep")                    # warm plain
+    m.query(q, k=k, method="sweep", resilience=sup)    # warm resilient
+    plain_lat, res_lat, exact, missing = [], [], True, 0
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        bd0, bi0 = m.query(q, k=k, method="sweep")
+        plain_lat.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bd1, bi1, info = m.query(q, k=k, method="sweep",
+                                 return_info=True, resilience=sup)
+        res_lat.append(time.perf_counter() - t0)
+        exact = exact and bool(np.array_equal(bd0, bd1)
+                               and np.array_equal(bi0, bi1))
+        missing += len(info["missing_shards"])
+    p50_plain = pct(plain_lat, 50) * 1e3
+    p50_res = pct(res_lat, 50) * 1e3
+    return {
+        "iters": iters,
+        "p50_plain_ms": p50_plain,
+        "p50_resilient_ms": p50_res,
+        "overhead_frac": (p50_res - p50_plain) / max(p50_plain, 1e-9),
+        "exact": exact,
+        "missing": missing,
+        "supervisor": sup.stats(),
+    }
+
+
+def bench_straggler(m, q, k, *, iters, shard_timeout_s, deadline_s):
+    """One shard hangs on every call: degraded answers, on time."""
+    from repro.runtime.fault_tolerance import RetryPolicy
+    from repro.core.balltree import normalize_query
+    from repro.serve.resilience import (FaultInjector, FaultSpec,
+                                        ResilienceConfig, ShardSupervisor)
+
+    m.query(q, k=k, method="sweep")  # warm every per-shard program
+    snaps = [sh.snapshot() for sh in m.shards]
+    qn = normalize_query(q).astype(np.float32)
+    inj = FaultInjector({0: [FaultSpec("hang")]}, hang_s=60.0)
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=shard_timeout_s, fault_injector=inj,
+        retry=RetryPolicy(max_restarts=0)))
+    lat, violations, exact_live, complete_false = [], 0, True, True
+    missing_seen = set()
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        bd, bi, info = m.query(q, k=k, method="sweep", return_info=True,
+                               resilience=sup, deadline_s=deadline_s)
+        dt = time.perf_counter() - t0
+        lat.append(dt)
+        if dt > deadline_s:
+            violations += 1
+        missing_seen.update(info["missing_shards"])
+        complete_false = complete_false and not info["complete"]
+        live = [snaps[si] for si in range(len(snaps))
+                if si not in info["missing_shards"]]
+        ed, _ = _live_oracle(live, qn, k)
+        exact_live = exact_live and bool(
+            np.allclose(bd, ed, rtol=1e-4, atol=1e-5))
+    inj.release()
+    time.sleep(0.2)  # drain abandoned workers
+    p99 = pct(lat, 99)
+    return {
+        "queries": iters,
+        "deadline_s": deadline_s,
+        "shard_timeout_s": shard_timeout_s,
+        "p50_ms": pct(lat, 50) * 1e3,
+        "p99_ms": p99 * 1e3,
+        "p99_bounded": bool(p99 <= deadline_s),
+        "deadline_violations": violations,
+        "degraded_exact_live": exact_live,
+        "complete_false": complete_false,
+        "missing_shards": sorted(missing_seen),
+        "supervisor": sup.stats(),
+    }
+
+
+def bench_breaker(m, q, k, *, error_window=4, reset_s=0.2, max_rounds=12):
+    """Trip -> fast-fail -> half-open probe -> recover, end to end."""
+    from repro.runtime.fault_tolerance import RetryPolicy
+    from repro.serve.resilience import (FaultInjector, FaultSpec,
+                                        ResilienceConfig, ShardSupervisor)
+
+    m.query(q, k=k, method="sweep")  # warm
+    inj = FaultInjector({1: [FaultSpec("error", until=error_window)]})
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=60.0, breaker_failures=2, breaker_reset_s=reset_s,
+        fault_injector=inj, retry=RetryPolicy(max_restarts=0)))
+    rounds, healed = 0, False
+    degraded_rounds = 0
+    t0 = time.perf_counter()
+    for rounds in range(1, max_rounds + 1):
+        _, _, info = m.query(q, k=k, method="sweep", return_info=True,
+                             resilience=sup)
+        if info["missing_shards"]:
+            degraded_rounds += 1
+            time.sleep(reset_s + 0.05)  # let the breaker reach half-open
+        else:
+            healed = bool(info["complete"])
+            break
+    st = sup.stats()
+    return {
+        "rounds": rounds,
+        "degraded_rounds": degraded_rounds,
+        "heal_s": time.perf_counter() - t0,
+        "trips": st["breaker_trips"],
+        "recoveries": st["breaker_recoveries"],
+        "open_skips": st["breaker_open_skips"],
+        "cycle_ok": bool(st["breaker_trips"] >= 1
+                         and st["breaker_recoveries"] >= 1 and healed),
+        "supervisor": st,
+    }
+
+
+def bench_shed(m, q, k, *, burst=8, max_pending=2):
+    """Admission control: queue-depth + budget shedding, expired-batch
+    shed at execute."""
+    from repro.serve import P2HEngine
+    from repro.serve.resilience import QueryRejected, ResilienceConfig
+
+    eng = P2HEngine(m, slot_size=4,
+                    resilience=ResilienceConfig(shard_timeout_s=60.0,
+                                                max_pending=max_pending))
+    eng.query(q[:4], k=k)  # warm the engine route
+    admitted = rejected = 0
+    for i in range(burst):
+        try:
+            eng.submit(q[i % len(q)], k=k)
+            admitted += 1
+        except QueryRejected:
+            rejected += 1
+    eng.flush()
+    try:
+        eng.submit(q[0], k=k, deadline_s=0.0)
+    except QueryRejected:
+        pass
+    # a batch whose budget dies in the queue is shed at execute
+    t_exp = eng.submit(q[0], k=k, deadline_s=0.005)
+    time.sleep(0.02)
+    eng.flush()
+    meta = eng.result_meta(t_exp)
+    bd, _ = eng.result(t_exp)
+    st = eng.stats()["resilience"]
+    return {
+        "burst": burst,
+        "max_pending": max_pending,
+        "admitted": admitted,
+        "queue_full": st["shed_queue_full"],
+        "deadline": st["shed_deadline"],
+        "expired_batches": st["shed_expired_batches"],
+        "expired_shed_inf": bool(np.all(np.isinf(bd)) and meta["shed"]),
+        "observed": bool(st["shed_queue_full"] > 0
+                         and st["shed_deadline"] > 0
+                         and st["shed_expired_batches"] > 0),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=9000)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--n0", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=3)
+    ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--straggler-iters", type=int, default=8)
+    ap.add_argument("--shard-timeout-s", type=float, default=0.15)
+    ap.add_argument("--deadline-s", type=float, default=2.0)
+    ap.add_argument("--kind", default="planted",
+                    choices=["normal", "clustered", "planted", "unit",
+                             "heavy"])
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+
+    from repro.data import make_p2h_dataset
+    from repro.stream import CompactionPolicy, ShardedMutableP2HIndex
+
+    data, q = make_p2h_dataset(args.n, args.d, kind=args.kind,
+                               n_queries=args.queries, seed=args.seed)
+    m = ShardedMutableP2HIndex.from_data(
+        data, args.shards, n0=args.n0,
+        policy=CompactionPolicy(delta_capacity=64))
+
+    nofault = bench_nofault(m, q, args.k, iters=args.iters)
+    print(f"nofault: plain p50 {nofault['p50_plain_ms']:.2f} ms, "
+          f"resilient p50 {nofault['p50_resilient_ms']:.2f} ms "
+          f"({nofault['overhead_frac']:+.1%}); bit-exact="
+          f"{nofault['exact']}, missing={nofault['missing']}")
+    assert nofault["exact"], \
+        "no-fault resilient exchange must be bit-exact vs the plain path"
+
+    straggler = bench_straggler(
+        m, q, args.k, iters=args.straggler_iters,
+        shard_timeout_s=args.shard_timeout_s, deadline_s=args.deadline_s)
+    print(f"straggler: p50 {straggler['p50_ms']:.0f} ms, "
+          f"p99 {straggler['p99_ms']:.0f} ms vs deadline "
+          f"{straggler['deadline_s']*1e3:.0f} ms "
+          f"(violations={straggler['deadline_violations']}); "
+          f"degraded answers exact over live shards="
+          f"{straggler['degraded_exact_live']}, missing="
+          f"{straggler['missing_shards']}")
+    assert straggler["degraded_exact_live"], \
+        "degraded answers must equal the oracle over the live shards"
+
+    breaker = bench_breaker(m, q, args.k)
+    print(f"breaker: tripped {breaker['trips']}x, "
+          f"{breaker['open_skips']} fast-fails while open, recovered "
+          f"{breaker['recoveries']}x in {breaker['rounds']} rounds "
+          f"({breaker['heal_s']:.2f}s); cycle_ok={breaker['cycle_ok']}")
+
+    shed = bench_shed(m, q, args.k)
+    print(f"shed: burst {shed['burst']} -> admitted {shed['admitted']}, "
+          f"queue_full={shed['queue_full']}, deadline={shed['deadline']}, "
+          f"expired_batches={shed['expired_batches']} "
+          f"(inf-result shed={shed['expired_shed_inf']})")
+
+    res = {"nofault": nofault, "straggler": straggler,
+           "breaker": breaker, "shed": shed,
+           "shards": args.shards, "n": args.n, "kind": args.kind}
+    m.close()
+    return res
+
+
+def run(csv, *, smoke: bool = False) -> dict:
+    """benchmarks.run registry entry point: CSV rows for bench_output
+    plus the returned dict serialized to ``BENCH_resilience.json``.
+    ``smoke=True`` shrinks the workload to a CI-sized config (same
+    shape, same JSON schema -- and the same correctness fences: the
+    exactness/boundedness claims are config-independent)."""
+    res = main(["--n", "2500", "--iters", "8", "--straggler-iters", "4",
+                "--deadline-s", "3.0"] if smoke else [])
+    csv("resilience,section,metric,value")
+    for section in ("nofault", "straggler", "breaker", "shed"):
+        for key, val in res[section].items():
+            if isinstance(val, (bool, int, float)):
+                csv(f"resilience,{section},{key},{val}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -286,6 +286,11 @@ def run_sharded_stream(args):
         "query_misses": cst["misses"],
         "recent_misses": [list(s) for s in cst["recent_misses"]],
         "admission": admission,
+        # uniform degradation surface: routed-write correctness
+        # (misroutes must stay 0) + the resilience counter block
+        # BENCH_resilience.json fences -- all-zero here, no faults
+        "misroutes": m.misroutes,
+        "resilience": eng.stats()["resilience"],
     }
     m.close()
     return res

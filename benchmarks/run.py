@@ -9,9 +9,11 @@ compare against (today: ``BENCH_serve.json`` with qps / p50 / p99 /
 tile-skip / probe-overhead numbers, ``BENCH_stream_sharded.json`` with
 the sharded equivalents, ``BENCH_durability.json`` with WAL replay
 throughput / recovery latency / the zero-invariant loss counters, and
-``BENCH_mesh.json`` with the 1/2/4-device qps/p50/p99 scaling curve).
-``--only serve,stream_sharded,durability,mesh --smoke`` is the CI
-bench-smoke entry point: tiny registered configs, same JSON schema,
+``BENCH_mesh.json`` with the 1/2/4-device qps/p50/p99 scaling curve, and
+``BENCH_resilience.json`` with the read-path chaos fences: no-fault
+bit-exactness, degraded-answer oracles, breaker cycles, shed counters).
+``--only serve,stream_sharded,durability,mesh,resilience --smoke`` is the
+CI bench-smoke entry point: tiny registered configs, same JSON schema,
 validated by ``tools/check_bench_json.py``.
 """
 from __future__ import annotations
@@ -58,8 +60,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_ablations, bench_distributed,
                             bench_durability, bench_indexing, bench_kernel,
-                            bench_mesh, bench_query, bench_serve,
-                            bench_stream, bench_stream_sharded)
+                            bench_mesh, bench_query, bench_resilience,
+                            bench_serve, bench_stream, bench_stream_sharded)
 
     t0 = time.time()
     emitted = []
@@ -83,6 +85,8 @@ def main(argv=None) -> None:
          bench_durability),
         ("Multi-device serving mesh (sharded stacked sweep)", "mesh",
          bench_mesh),
+        ("Serving resilience (read-path chaos)", "resilience",
+         bench_resilience),
     ]
     only = (None if args.only is None
             else {s.strip() for s in args.only.split(",") if s.strip()})

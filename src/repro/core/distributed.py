@@ -192,7 +192,8 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
                        stacked: bool | None = None,
                        probe_tiles: int | None = None,
                        probe_dtype: str | None = None,
-                       mesh=None, mesh_axis: str = "shard"):
+                       mesh=None, mesh_axis: str = "shard",
+                       deadline=None, resilience=None):
     """Host-orchestrated two-round lambda exchange over *callable shard
     backends* -- the frozen forest's exchange generalized to heterogeneous
     per-shard states.
@@ -273,8 +274,24 @@ def two_round_exchange(shards, queries, k: int = 1, *, frac1: float = 0.25,
     (the running ``min`` into ``lambda0``) is order-insensitive, so the
     collective replacement lives where the compute is: round 2.  Exact
     regardless of mesh: same candidates, same merge.
+
+    ``deadline`` (a :class:`repro.serve.resilience.Deadline`) and/or
+    ``resilience`` (a :class:`repro.serve.resilience.ShardSupervisor`)
+    switch to the degraded-capable twin :func:`_resilient_exchange`:
+    per-shard calls run supervised (timeouts, breakers, hedging) and a
+    failing shard yields bounded degradation instead of an exception.
+    Both ``None`` (the default) keeps this body byte-for-byte on the
+    historical path -- the zero-overhead invariant the resilience bench
+    fences.
     """
     shards = tuple(shards)  # iterated once per round: reject generators
+    if resilience is not None or deadline is not None:
+        return _resilient_exchange(
+            shards, queries, k, frac1=frac1, method=method, frac=frac,
+            return_info=return_info, stacked=stacked,
+            probe_tiles=probe_tiles, probe_dtype=probe_dtype,
+            mesh=mesh, mesh_axis=mesh_axis, deadline=deadline,
+            sup=resilience)
     q = jnp.asarray(np.atleast_2d(np.asarray(queries)), jnp.float32)
     B = q.shape[0]
     counters = np.zeros((8,), np.int64)
@@ -403,6 +420,201 @@ def _stacked_round2(shards, q, k, *, method, stacked, lam0, probe_tiles,
     shard_kth = np.asarray(info["shard_kth"])  # (S_stackable, B)
     kths = {si: shard_kth[row] for row, (si, _) in enumerate(stackable)}
     return (fd, fi), kths, np.asarray(cnt, np.int64)
+
+
+def _resilient_exchange(shards, queries, k, *, frac1, method, frac,
+                        return_info, stacked, probe_tiles, probe_dtype,
+                        mesh, mesh_axis, deadline, sup):
+    """Degraded-capable twin of the two-round exchange: every shard call
+    runs through a :class:`~repro.serve.resilience.ShardSupervisor`
+    (per-call budget clamped by ``deadline``, circuit breakers, one
+    hedged duplicate for stragglers) and a failing shard produces
+    **bounded degradation**, never an exception.
+
+    Exactness contract: the returned neighbors are exactly the oracle's
+    answers restricted to the live shards.  Three rules make that hold:
+
+    * A shard missing from round 1 merely loosens ``lambda0`` -- the
+      min over the *responding* shards' round-1 k-ths is still a valid
+      upper bound for the surviving set (each responding shard's beam
+      k-th is a real-point distance, and its round-1 candidates reach
+      the merge, so >= k merged candidates sit at or below the min).
+      The engine's external ``lambda_cap`` is deliberately **not**
+      consumed here: it bounds the *full*-set k-th, which can undercut
+      the live-shard-restricted k-th and would prune live answers.
+    * A shard contributes fully-exact or not at all: when its round 2
+      fails, its round-1 candidates are dropped too (a beam prefix is
+      not the shard's exact answer), and the shard is reported in
+      ``missing_shards``.
+    * Dropping a shard can loosen ``lambda0`` after other shards
+      already swept under the tighter cap, so the loop re-runs any
+      surviving shard whose capped result still has pruned (+inf)
+      slots under the stale cap.  Each pass either finishes cleanly or
+      strictly grows the missing set, so it terminates in <= S passes;
+      an exhausted deadline fast-fails the re-runs into the missing
+      set, keeping latency bounded by the deadline.
+
+    The stacked round 2 runs as ONE supervised multi-shard call (its
+    failure falls back to per-shard sequential calls, isolating the
+    culprit).  ``info`` gains ``missing_shards`` (sorted tuple),
+    ``degraded`` and ``complete`` -- ``complete`` is False iff some
+    missing shard *could* hold a closer point, i.e. iff it has (or is
+    not known not to have) live points.
+    """
+    if sup is None:
+        from repro.serve.resilience import ShardSupervisor
+
+        sup = ShardSupervisor()
+    q = jnp.asarray(np.atleast_2d(np.asarray(queries)), jnp.float32)
+    B = q.shape[0]
+    S = len(shards)
+    counters = np.zeros((8,), np.int64)
+    missing: set[int] = set()
+    r1_d, r1_i, r1_kth = {}, {}, {}
+    if method != "beam":
+        _record_round1(B, k, frac1)  # template for pre-publish warmup
+
+        def mk_r1(s):
+            return lambda: s.query(q, k, method="beam", frac=frac1,
+                                   return_counters=True)
+
+        # parallel round 1: a straggler costs min(budget, straggler),
+        # not the sum over shards; the min-fold is order-insensitive
+        res1 = sup.call_parallel(
+            [((si,), mk_r1(s)) for si, s in enumerate(shards)],
+            deadline=deadline)
+        for si, (ok, val, _why) in enumerate(res1):
+            if not ok:
+                # not missing yet: the shard gets a round-2 attempt with
+                # include_deltas=True (a full exact scan under lam0 needs
+                # no beam prefix; only a round-2 failure loses the shard)
+                continue
+            bd1, bi1, c1 = val
+            counters += np.asarray(c1, np.int64)
+            r1_d[si] = jnp.asarray(bd1)
+            r1_i[si] = jnp.asarray(bi1)
+            r1_kth[si] = np.asarray(r1_d[si][:, k - 1])
+    base = "sweep" if method == "stacked" else method
+    done2: dict[int, tuple] = {}   # si -> (bd, bi, kth (B,), gen)
+    stk_units: list[tuple] = []    # (members, fd, fi, {si: kth}, gen)
+    lam0 = None
+    while True:
+        gen = len(missing)
+        lamk = [r1_kth[si] for si in sorted(r1_kth)]
+        lam0 = (jnp.asarray(np.minimum.reduce(lamk), jnp.float32)
+                if (method != "beam" and lamk) else None)
+        # retire results computed under a now-stale (tighter) cap whose
+        # pruned +inf slots a looser lambda0 could fill in
+        for si in [si for si, (_, _, kth, g) in done2.items()
+                   if g != gen and bool(np.isinf(kth).any())]:
+            del done2[si]
+        stk_units = [u for u in stk_units
+                     if not (u[4] != gen
+                             and any(bool(np.isinf(np.asarray(v)).any())
+                                     for v in u[3].values()))]
+        covered = set(done2) | {si for u in stk_units for si in u[0]}
+        todo = [si for si in range(S)
+                if si not in missing and si not in covered]
+        if not todo:
+            break
+        failed = False
+        # combined stacked unit: stackable todo shards with round-1
+        # results (an r1-failed shard needs include_deltas=True, which
+        # the stacked program does not do -- it goes sequential below)
+        cand = [si for si in todo if si in r1_kth]
+        if cand and lam0 is not None and stacked is not False:
+            sub = tuple(shards[si] for si in cand)
+            lam_stk = lam0
+
+            def stk_fn(sub=sub, lam_stk=lam_stk):
+                return _stacked_round2(
+                    sub, q, k, method=method, stacked=stacked,
+                    lam0=lam_stk, probe_tiles=probe_tiles,
+                    probe_dtype=probe_dtype, mesh=mesh,
+                    mesh_axis=mesh_axis)
+
+            ok, val, _why = sup.call(tuple(cand), stk_fn,
+                                     deadline=deadline)
+            if ok:
+                merged, kths_local, cnt = val
+                if merged is not None:
+                    kths = {cand[li]: v for li, v in kths_local.items()}
+                    stk_units.append((tuple(sorted(kths)),
+                                      jnp.asarray(merged[0]),
+                                      jnp.asarray(merged[1]), kths, gen))
+                    counters += cnt
+                    todo = [si for si in todo if si not in kths]
+            # on failure every cand member stays in todo: each gets an
+            # individual supervised attempt (and verdict) below
+        for si in todo:
+            s = shards[si]
+            kw = ({"stacked": stacked, "probe_dtype": probe_dtype}
+                  if hasattr(s, "stacked_leaves") else {})
+            inc = (method == "beam") or si not in r1_kth
+
+            def fn(s=s, cap=lam0, inc=inc, kw=kw):
+                return s.query(q, k, method=base, frac=frac,
+                               lambda_cap=cap, return_counters=True,
+                               include_deltas=inc, **kw)
+
+            ok, val, _why = sup.call((si,), fn, deadline=deadline)
+            if ok:
+                bd, bi, cnt = val
+                counters += np.asarray(cnt, np.int64)
+                done2[si] = (jnp.asarray(bd), jnp.asarray(bi),
+                             np.asarray(jnp.asarray(bd)[:, k - 1]), gen)
+            else:
+                # fully-exact or not at all: drop the beam prefix too
+                missing.add(si)
+                r1_d.pop(si, None)
+                r1_i.pop(si, None)
+                r1_kth.pop(si, None)
+                failed = True
+        if not failed:
+            break
+    parts_d = [r1_d[si] for si in range(S) if si in r1_d]
+    parts_i = [r1_i[si] for si in range(S) if si in r1_i]
+    for _mem, fd, fi, _kths, _g in stk_units:
+        parts_d.append(fd)
+        parts_i.append(fi)
+    for si in sorted(done2):
+        parts_d.append(done2[si][0])
+        parts_i.append(done2[si][1])
+    if parts_d:
+        bd, bi = search.merge_topk(jnp.concatenate(parts_d, axis=1),
+                                   jnp.concatenate(parts_i, axis=1), k)
+        bd, bi = np.asarray(bd), np.asarray(bi)
+    else:
+        bd = np.full((B, k), np.inf, np.float32)
+        bi = np.full((B, k), -1, np.int32)
+    if missing:
+        sup.count("degraded_batches")
+    if not return_info:
+        return bd, bi, counters
+    complete = True
+    for si in sorted(missing):
+        live = getattr(shards[si], "live_count", None)
+        if live is None or live > 0:  # unknown -> assume it could
+            complete = False
+            break
+    r1 = np.full((S, B), np.inf, np.float32)
+    for si, v in r1_kth.items():
+        r1[si] = v
+    r2 = np.full((S, B), np.inf, np.float32)
+    for si in done2:
+        r2[si] = done2[si][2]
+    for _mem, _fd, _fi, kths, _g in stk_units:
+        for si, v in kths.items():
+            r2[si] = np.asarray(v)
+    info = {
+        "lambda0": None if lam0 is None else np.asarray(lam0),
+        "round1_kth": r1,
+        "shard_kth": np.minimum(r1, r2),
+        "missing_shards": tuple(sorted(missing)),
+        "complete": complete,
+        "degraded": bool(missing),
+    }
+    return bd, bi, counters, info
 
 
 @dataclasses.dataclass

@@ -31,6 +31,10 @@ class RetryPolicy:
     backoff_s: float = 0.0        # container tests: no sleep
     restartable: tuple = (RuntimeError, IOError, TimeoutError)
 
+    def retryable(self, exc: BaseException) -> bool:
+        """Does this exception class earn a restart/retry?"""
+        return isinstance(exc, tuple(self.restartable))
+
 
 def run_with_restarts(make_state: Callable[[], Any],
                       train: Callable[[Any], Any],
@@ -86,6 +90,13 @@ class StepWatchdog:
         if self._timer is not None:
             self._timer.cancel()
             self._timer = None
+
+    def __enter__(self) -> "StepWatchdog":
+        self.beat()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
 
 class StragglerMonitor:

@@ -68,11 +68,27 @@ Sharded mutable indexes (``repro.stream.sharded``)
     store per-shard local k-th bounds tagged with per-shard epochs, so
     one shard's delete drops one component instead of evicting the
     entry (see ``lambda_cache``).
+
+Resilience (resilience.py)
+    The read path's failure-domain layer: per-request ``Deadline``
+    budgets threaded engine -> batcher -> exchange -> per-shard calls,
+    a ``ShardSupervisor`` running each shard call under a watchdogged
+    worker thread (timeouts, per-shard ``CircuitBreaker``, one hedged
+    duplicate for stragglers), bounded degradation (a failed shard's
+    answer is dropped and the result is the exact oracle over the live
+    shards, with ``missing_shards``/``complete`` metadata), admission
+    control (``QueryRejected`` on queue-depth or exhausted budget), and
+    a deterministic ``FaultInjector`` for the chaos suite.
 """
 from repro.serve.batcher import MicroBatcher, MicroBatch, Request
 from repro.serve.dispatch import DispatchPolicy, Route
 from repro.serve.engine import P2HEngine
 from repro.serve.lambda_cache import LambdaCache
+from repro.serve.resilience import (CircuitBreaker, Deadline, FaultError,
+                                    FaultInjector, FaultSpec, QueryRejected,
+                                    ResilienceConfig, ShardSupervisor)
 
 __all__ = ["P2HEngine", "DispatchPolicy", "Route", "LambdaCache",
-           "MicroBatcher", "MicroBatch", "Request"]
+           "MicroBatcher", "MicroBatch", "Request", "Deadline",
+           "CircuitBreaker", "FaultError", "FaultInjector", "FaultSpec",
+           "QueryRejected", "ResilienceConfig", "ShardSupervisor"]

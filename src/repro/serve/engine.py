@@ -33,8 +33,15 @@ from repro.core.balltree import normalize_query
 from repro.serve.batcher import MicroBatcher
 from repro.serve.dispatch import DispatchPolicy, Route
 from repro.serve.lambda_cache import LambdaCache
+from repro.serve.resilience import (RESILIENCE_COUNTERS, Deadline,
+                                    QueryRejected, ResilienceConfig,
+                                    ShardSupervisor)
 
 __all__ = ["P2HEngine"]
+
+#: result metadata for a batch served with nothing missing
+_META_COMPLETE = {"complete": True, "degraded": False, "shed": False,
+                  "missing_shards": ()}
 
 
 class P2HEngine:
@@ -50,11 +57,23 @@ class P2HEngine:
     ``use_cache=False`` disables the lambda warm start (cold dispatch);
     with it enabled, answers are still bit-identical to cold (the cache
     only ever supplies *valid* caps, see ``lambda_cache``).
+
+    ``resilience`` (a :class:`repro.serve.resilience.ResilienceConfig`)
+    arms the read-path resilience layer: per-request deadlines
+    (``deadline_s=`` on submit/query) propagate into per-shard budgets,
+    shard timeouts/errors degrade to exact-over-live-shards partial
+    results (``result_meta`` / ``return_meta=True`` expose
+    ``missing_shards`` and ``complete``), per-shard circuit breakers
+    fast-fail wedged shards, and ``max_pending`` sheds at admission
+    with :class:`~repro.serve.resilience.QueryRejected`.  Left at None
+    (the default) the engine runs the historical fail-fast path
+    bit-for-bit.
     """
 
     def __init__(self, index, *, sharded=None, slot_size: int = 8,
                  policy: DispatchPolicy | None = None, use_cache: bool = True,
-                 cache_bits: int = 14, seed: int = 0):
+                 cache_bits: int = 14, seed: int = 0,
+                 resilience: ResilienceConfig | None = None):
         import dataclasses
 
         import jax
@@ -90,10 +109,17 @@ class P2HEngine:
             self.policy = dataclasses.replace(
                 self.policy,
                 prefer_pallas=jax.default_backend() == "tpu")
-        self.batcher = MicroBatcher(d, slot_size)
+        self.resilience = resilience
+        self._supervisor = (ShardSupervisor(resilience)
+                            if resilience is not None else None)
+        self.batcher = MicroBatcher(
+            d, slot_size,
+            max_pending=resilience.max_pending if resilience else None)
         self.cache = (LambdaCache(d, self.max_norm, n_bits=cache_bits,
                                   seed=seed) if use_cache else None)
         self._results: dict[int, tuple] = {}
+        self._meta: dict[int, dict] = {}
+        self._shed = {"queue_full": 0, "deadline": 0, "expired_batches": 0}
         self._route_counts: dict[str, int] = {}
         self._counters: dict[str, np.ndarray] = {}
         self._latencies_s: list[float] = []
@@ -115,12 +141,27 @@ class P2HEngine:
     # streaming API
     # ------------------------------------------------------------------
     def submit(self, query, k: int = 1, *, recall_target: float = 1.0,
-               normalize: bool = True) -> int:
-        """Enqueue one hyperplane query; returns a ticket for result()."""
+               normalize: bool = True,
+               deadline_s: float | None = None) -> int:
+        """Enqueue one hyperplane query; returns a ticket for result().
+
+        ``deadline_s`` gives the request a latency budget from now:
+        exhausted-at-submit requests (and, with
+        ``resilience.max_pending`` set, submits into a full queue) are
+        rejected with :class:`~repro.serve.resilience.QueryRejected`
+        instead of queueing -- the rejection is counted in
+        ``stats()["resilience"]``."""
         q = np.asarray(query, np.float32).reshape(1, -1)
         if normalize:
             q = normalize_query(q)
-        return self.batcher.submit(q[0], k, recall_target)
+        deadline = (Deadline.after(deadline_s)
+                    if deadline_s is not None else None)
+        try:
+            return self.batcher.submit(q[0], k, recall_target,
+                                       deadline=deadline)
+        except QueryRejected as e:
+            self._shed[e.reason] = self._shed.get(e.reason, 0) + 1
+            raise
 
     def flush(self) -> int:
         """Serve every pending request; returns the number of batches."""
@@ -131,36 +172,89 @@ class P2HEngine:
         return n
 
     def result(self, ticket: int):
-        """(dists (k,), ids (k,)) for a served ticket (pops it)."""
+        """(dists (k,), ids (k,)) for a served ticket (pops it, along
+        with its metadata -- read :meth:`result_meta` first)."""
+        self._meta.pop(ticket, None)
         return self._results.pop(ticket)
+
+    def result_meta(self, ticket: int) -> dict:
+        """Degradation metadata for a served-but-not-yet-popped ticket:
+        ``complete`` (False iff a missing shard could hold a closer
+        point), ``missing_shards``, ``degraded``, ``shed``."""
+        return self._meta.get(ticket, _META_COMPLETE)
 
     # ------------------------------------------------------------------
     # drop-in API
     # ------------------------------------------------------------------
     def query(self, queries, k: int = 1, *, recall_target: float = 1.0,
               method: str | None = None, normalize: bool = True,
-              return_stats: bool = False):
+              return_stats: bool = False, deadline_s: float | None = None,
+              return_meta: bool = False):
         """Batch query with the same contract as ``P2HIndex.query``.
 
         ``method`` forces a dispatch route (None = auto).
-        """
+        ``deadline_s`` bounds the whole call's latency budget (shared by
+        every row); with the resilience layer armed, shards that cannot
+        answer in time degrade the result instead of stalling it --
+        ``return_meta=True`` appends the per-batch degradation metadata
+        (``complete``/``missing_shards``, see :meth:`result_meta`)."""
+        deadline = (Deadline.after(deadline_s)
+                    if deadline_s is not None else None)
+        if deadline is not None and deadline.expired:
+            self._shed["deadline"] += 1
+            raise QueryRejected("deadline")
         q = np.atleast_2d(np.asarray(queries))
         if normalize:
             q = normalize_query(q)
         q = q.astype(np.float32)
-        tickets = [self.batcher.submit(row, k, recall_target) for row in q]
+        # force=True: the drop-in path drains immediately, so its own
+        # rows are in-flight work, not backlog the queue bound guards
+        tickets = [self.batcher.submit(row, k, recall_target,
+                                       deadline=deadline, force=True)
+                   for row in q]
         for mb in self.batcher.drain():
             self._execute(mb, method=method)
-        ds, is_ = zip(*(self._results.pop(t) for t in tickets))
+        metas = [self.result_meta(t) for t in tickets]
+        ds, is_ = zip(*(self.result(t) for t in tickets))
         bd, bi = np.stack(ds), np.stack(is_)
+        out = (bd, bi)
         if return_stats:
-            return bd, bi, self.stats()
-        return bd, bi
+            out += (self.stats(),)
+        if return_meta:
+            out += (metas,)
+        return out
 
     # ------------------------------------------------------------------
     # execution
     # ------------------------------------------------------------------
     def _execute(self, mb, *, method: str | None = None):
+        deadline = mb.deadline
+        if (mb.deadlines and all(d is not None and d.expired
+                                 for d in mb.deadlines)):
+            # every member's budget burned while queued: shed the batch
+            # (inf/-1 + shed metadata, never an exception -- the callers
+            # already hold tickets) instead of running work nobody can
+            # use within its budget
+            empty = (np.full((mb.k,), np.inf, np.float32),
+                     np.full((mb.k,), -1, np.int32))
+            meta = {"complete": False, "degraded": True, "shed": True,
+                    "missing_shards": ()}
+            for ticket in mb.tickets:
+                self._results[ticket] = empty
+                self._meta[ticket] = meta
+            self._shed["expired_batches"] += 1
+            self._batches += 1
+            self._queries_served += mb.occupancy
+            return
+        # resilient exchange iff this batch carries a deadline or the
+        # engine was armed -- otherwise the historical path, bit-for-bit
+        resilient = (self._sharded_mutable
+                     and (self._supervisor is not None
+                          or deadline is not None))
+        if resilient and self._supervisor is None:
+            # deadline on an unarmed engine: default supervision, kept
+            # so breaker state and counters persist across batches
+            self._supervisor = ShardSupervisor()
         # pin one consistent view for the whole micro-batch: concurrent
         # inserts/deletes publish new snapshots, this batch never sees them
         snap = self.mutable.snapshot() if self.mutable is not None else None
@@ -205,8 +299,12 @@ class P2HEngine:
         # warm start: valid caps only for exact routes (a cap bounds the
         # *exact* k-th distance; applying it to a budgeted beam could prune
         # candidates the direct beam would have returned)
+        # ... and never for the resilient exchange: the cache's caps
+        # bound the *full*-set k-th, which can undercut the
+        # live-shard-restricted k-th a degraded answer must match
         caps = None
-        if self.cache is not None and route.method != "beam":
+        if self.cache is not None and route.method != "beam" \
+                and not resilient:
             if snap is not None:
                 # inserts may have grown max ||x||; the cap formula needs
                 # the current bound (monotone, so only ever grows)
@@ -229,6 +327,8 @@ class P2HEngine:
         # truthful about which schedule actually ran.  The policy's
         # probe_tiles knob rides along for the two-pass program.
         use_stacked = route.method == "stacked"
+        meta = None
+        degraded = False
         if snap is not None and self._sharded_mutable:
             # epoch-vector pin: the two-round exchange also reports each
             # shard's local k-th bound for per-shard cache components
@@ -236,8 +336,16 @@ class P2HEngine:
                 mb.queries, mb.k, method=route.method, frac=route.frac,
                 lambda_cap=caps, return_counters=True, return_info=True,
                 stacked=use_stacked, probe_tiles=route.probe_tiles,
-                probe_dtype=route.probe_dtype)
+                probe_dtype=route.probe_dtype,
+                deadline=deadline if resilient else None,
+                resilience=self._supervisor if resilient else None)
             shard_kth = info["shard_kth"]  # (S, B)
+            degraded = bool(info.get("degraded", False))
+            if resilient:
+                meta = {"complete": bool(info.get("complete", True)),
+                        "degraded": degraded, "shed": False,
+                        "missing_shards": tuple(
+                            info.get("missing_shards", ()))}
         elif snap is not None:
             bd, bi, cnt = snap.query(mb.queries, mb.k, method=route.method,
                                      frac=route.frac, lambda_cap=caps,
@@ -252,7 +360,12 @@ class P2HEngine:
 
         for slot, ticket in enumerate(mb.tickets):
             self._results[ticket] = (bd[slot], bi[slot])
-        if self.cache is not None:
+            if meta is not None:
+                self._meta[ticket] = meta
+        # a degraded batch's per-shard k-ths are restricted-set bounds
+        # with +inf rows for the missing shards: skip the cache update
+        # entirely rather than reason about partial validity
+        if self.cache is not None and not degraded:
             live = slice(0, mb.occupancy)
             if shard_kth is not None:
                 self.cache.update_sharded(
@@ -346,6 +459,20 @@ class P2HEngine:
             # mutable index: the serving-side view of whether compaction
             # backpressure ever stalled an acknowledged write
             out["admission"] = admission()
+        # uniform resilience surface: zero-filled when the layer never
+        # armed, so dashboards/benches key the same fields either way
+        res: dict[str, Any] = {k: 0 for k in RESILIENCE_COUNTERS}
+        if self._supervisor is not None:
+            res.update(self._supervisor.stats())
+        res["shed_queue_full"] = self._shed["queue_full"]
+        res["shed_deadline"] = self._shed["deadline"]
+        res["shed_expired_batches"] = self._shed["expired_batches"]
+        out["resilience"] = res
+        if self._sharded_mutable:
+            # router-drift tripwire (PR 7): deletes whose gid no shard
+            # owned -- surfaced next to the degradation counters so
+            # "observable, not just survivable" covers writes too
+            out["misroutes"] = self.mutable.misroutes
         return out
 
     def reset_stats(self):
@@ -354,3 +481,4 @@ class P2HEngine:
         self._latencies_s.clear()
         self._batches = 0
         self._queries_served = 0
+        self._shed = {"queue_full": 0, "deadline": 0, "expired_batches": 0}

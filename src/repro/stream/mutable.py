@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import logging
 import threading
 import time
 from typing import Any
@@ -50,6 +51,8 @@ from repro.stream.delta import DeltaBuffer
 from repro.stream.snapshot import DeltaView, Segment, Snapshot
 
 __all__ = ["MutableP2HIndex"]
+
+logger = logging.getLogger(__name__)
 
 _STATE_FORMAT = "p2h-stream"
 _STATE_VERSION = 1
@@ -103,7 +106,8 @@ class MutableP2HIndex:
         self._compact_errors: list[BaseException] = []
         self.compaction_log: list[dict] = []  # wall/rows/reason per run
         self._tl = threading.local()  # delete-path compaction tripwire
-        self._admission = {"seals": 0, "stalls": 0}  # write admission
+        # write admission + close() leak tripwire
+        self._admission = {"seals": 0, "stalls": 0, "compactor_leaked": 0}
         #: optional repro.stream.wal.ShardWal -- when attached, every
         #: insert/delete appends a record (under the writer lock, which
         #: also serializes the single-writer log) and the public write
@@ -462,7 +466,9 @@ class MutableP2HIndex:
         """Write-admission counters: ``seals`` (full deltas sealed
         without blocking the writer), ``stalls`` (writer had to wait for
         the compactor -- only once ``max_pending_seals`` sealed buffers
-        piled up), ``pending_seals`` (current backlog)."""
+        piled up), ``pending_seals`` (current backlog), and
+        ``compactor_leaked`` (close() timed out waiting for the
+        compactor thread and abandoned it)."""
         with self._lock:
             return dict(self._admission,
                         pending_seals=len(self._sealed))
@@ -537,13 +543,26 @@ class MutableP2HIndex:
         if self._compact_errors:
             raise self._compact_errors.pop(0)
 
-    def close(self) -> None:
+    def close(self, *, timeout_s: float = 5.0) -> None:
         """Stop the background compactor (if any) and close the attached
-        WAL (final group commit included); safe to call twice."""
+        WAL (final group commit included); safe to call twice.
+
+        A compactor that fails to stop within ``timeout_s`` (e.g. a
+        wedged ``_warmup_hook``) is *leaked* -- it is a daemon thread,
+        so the interpreter can still exit -- but no longer silently:
+        the leak is logged and counted (``compactor_leaked`` in
+        :meth:`admission_stats`)."""
         self._stop = True
         self._compact_event.set()
         if self._compactor is not None:
-            self._compactor.join(timeout=5.0)
+            self._compactor.join(timeout=timeout_s)
+            if self._compactor.is_alive():
+                with self._lock:
+                    self._admission["compactor_leaked"] += 1
+                logger.warning(
+                    "compactor thread still alive %.1fs after close(); "
+                    "leaking daemon thread %s", timeout_s,
+                    self._compactor.name)
             self._compactor = None
         if self._wal is not None:
             self._wal.close()

@@ -185,6 +185,9 @@ class ShardedMutableP2HIndex:
         self._mig_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         self._misroutes = 0  # deletes that found their gid in no owner
+        #: read-path supervisor (see :meth:`set_resilience`); None =
+        #: historical fail-fast exchange
+        self._resilience = None
         #: serving device mesh (see :meth:`set_mesh`); None = single
         #: program.  Snapshots pin the reference at snapshot() time, so
         #: in-flight queries are unaffected by a later set_mesh.
@@ -429,11 +432,25 @@ class ShardedMutableP2HIndex:
     def admission_stats(self) -> dict:
         """Cross-shard write-admission counters (sums of each shard's
         :meth:`MutableP2HIndex.admission_stats`)."""
-        out = {"seals": 0, "stalls": 0, "pending_seals": 0}
+        out = {"seals": 0, "stalls": 0, "pending_seals": 0,
+               "compactor_leaked": 0}
         for sh in self.shards:
             for key, val in sh.admission_stats().items():
-                out[key] += val
+                out[key] = out.get(key, 0) + val
         return out
+
+    @property
+    def misroutes(self) -> int:
+        """Deletes whose gid no shard owned (router drift tripwire)."""
+        with self._stats_lock:
+            return self._misroutes
+
+    def set_resilience(self, supervisor) -> None:
+        """Attach a :class:`repro.serve.resilience.ShardSupervisor` for
+        direct-path queries (``None`` detaches): per-shard calls run
+        supervised and shard failures degrade instead of raising.
+        Engine-owned supervisors are passed per call instead."""
+        self._resilience = supervisor
 
     # ------------------------------------------------------------------
     # live resharding (repro.stream.resharding)
@@ -656,14 +673,24 @@ class ShardedMutableP2HIndex:
               frac: float = 1.0, frac1: float = 0.25,
               normalize: bool = True, lambda_cap=None,
               return_stats: bool = False, return_info: bool = False,
-              engine: Any = None, **kw: Any):
+              engine: Any = None, deadline_s: float | None = None,
+              resilience: Any = None, **kw: Any):
         """Top-k over the cross-shard live set; same contract as
         ``MutableP2HIndex.query`` plus ``frac1`` (round-1 prefix
         fraction), ``lambda_cap`` (externally-valid caps, tightening
         both exchange rounds), and ``return_info`` (append the
         exchange's lambda0 / per-shard k-th diagnostics; direct path
         only).  ``engine=`` routes through a
-        :class:`repro.serve.P2HEngine` constructed over this index."""
+        :class:`repro.serve.P2HEngine` constructed over this index.
+
+        ``deadline_s`` (seconds of budget from now) and/or
+        ``resilience`` (a supervisor; defaults to the one attached via
+        :meth:`set_resilience`) run the exchange's degraded-capable
+        branch: per-shard timeouts/breakers/hedging, and shard failures
+        surface as ``missing_shards``/``complete`` in the
+        ``return_info`` dict instead of raising.  ``lambda_cap`` is
+        rejected there -- external caps bound the *full*-set k-th and
+        could prune live-shard answers from a degraded result."""
         if engine is not None:
             if lambda_cap is not None:
                 raise ValueError(
@@ -675,6 +702,18 @@ class ShardedMutableP2HIndex:
             return query_via_engine(self, engine, queries, k,
                                     method=method, normalize=normalize,
                                     return_stats=return_stats, kw=kw)
+        resilience = resilience if resilience is not None else self._resilience
+        deadline = None
+        if deadline_s is not None:
+            from repro.serve.resilience import Deadline
+
+            deadline = Deadline.after(deadline_s)
+        if (deadline is not None or resilience is not None) \
+                and lambda_cap is not None:
+            raise ValueError(
+                "lambda_cap is not honored on the resilient exchange "
+                "(external caps bound the full-set k-th, not the "
+                "live-shard-restricted one); drop it or the deadline")
         q = np.atleast_2d(np.asarray(queries))
         if normalize:
             q = normalize_query(q)
@@ -683,6 +722,7 @@ class ShardedMutableP2HIndex:
                          method=method or "sweep", frac=frac,
                          frac1=frac1, lambda_cap=lambda_cap,
                          return_counters=True, return_info=return_info,
+                         deadline=deadline, resilience=resilience,
                          **kw)
         if return_info:
             bd, bi, cnt, info = out
@@ -713,10 +753,12 @@ class ShardedMutableP2HIndex:
         for sh in self.shards:
             sh.wait_compaction()
 
-    def close(self) -> None:
-        """Stop every shard's background compactor; safe to call twice."""
+    def close(self, *, timeout_s: float = 5.0) -> None:
+        """Stop every shard's background compactor; safe to call twice.
+        Wedged compactors are leaked-and-counted per shard (see
+        :meth:`MutableP2HIndex.close`)."""
         for sh in self.shards:
-            sh.close()
+            sh.close(timeout_s=timeout_s)
 
     # ------------------------------------------------------------------
     # persistence: per-shard checkpoints + one top-level manifest
@@ -886,6 +928,8 @@ class ShardedMutableP2HIndex:
             "mesh": None if mesh is None else mesh_signature(mesh),
             "misroutes": misroutes,
             "admission": self.admission_stats(),
+            "resilience": (None if self._resilience is None
+                           else self._resilience.stats()),
             "per_shard": [
                 {"live": p.live_count, "epoch": p.epoch,
                  "segments": len(p.segments),

@@ -508,7 +508,8 @@ class ShardedSnapshot:
               frac: float = 1.0, frac1: float = 0.25, lambda_cap=None,
               return_counters: bool = False, return_info: bool = False,
               stacked: bool | None = None, probe_tiles: int | None = None,
-              probe_dtype: str | None = None):
+              probe_dtype: str | None = None, deadline=None,
+              resilience=None):
         """Top-k over the cross-shard live set via the two-round lambda
         exchange; same contract as :meth:`Snapshot.query` (normalized
         queries in, global ids out) plus ``frac1``, the round-1 prefix
@@ -519,7 +520,11 @@ class ShardedSnapshot:
         lambda0 -- probe-tightened cap, in-launch merge, see
         :func:`repro.core.distributed.two_round_exchange`);
         ``probe_tiles`` is that program's probe-pass width and
-        ``probe_dtype`` its precision (answers bit-exact either way)."""
+        ``probe_dtype`` its precision (answers bit-exact either way).
+        ``deadline`` / ``resilience`` route through the exchange's
+        degraded-capable branch (supervised per-shard calls, bounded
+        degradation -- see
+        :func:`repro.core.distributed.two_round_exchange`)."""
         from repro.core.distributed import two_round_exchange
 
         out = two_round_exchange(self.shards, queries, k, frac1=frac1,
@@ -528,7 +533,8 @@ class ShardedSnapshot:
                                  return_info=return_info, stacked=stacked,
                                  probe_tiles=probe_tiles,
                                  probe_dtype=probe_dtype,
-                                 mesh=self.mesh, mesh_axis=self.mesh_axis)
+                                 mesh=self.mesh, mesh_axis=self.mesh_axis,
+                                 deadline=deadline, resilience=resilience)
         if return_info:
             bd, bi, cnt, info = out
             return (bd, bi, cnt, info) if return_counters else (bd, bi, info)

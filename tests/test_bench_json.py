@@ -17,6 +17,7 @@ import check_bench_json  # noqa: E402
 def _minimal_serve():
     """Smallest document satisfying the BENCH_serve.json schema."""
     num = {"qps": 1.0, "p50_ms": 1.0, "p99_ms": 2.0, "tiles_skipped": 3}
+    warm = {**num, "resilience": {"timeouts": 0}}
     mode = {"p50_ms": 1.0, "p99_ms": 2.0, "tiles_skipped": 3}
     probe = {"tiles": 4, "scanned": 10, "skipped": 2, "dtype": "f32"}
     prof = {"skip_frac": 0.1}
@@ -29,7 +30,7 @@ def _minimal_serve():
         "skip_delta": {"bf16": -2, "int8": -2},
     }
     return {
-        "naive": num, "cold": num, "warm": num,
+        "naive": num, "cold": num, "warm": warm, "kind": "planted",
         "compile_count": 2, "cache_hit": 5,
         "stacked": {
             "fanout": 6, "mode_seq": mode, "mode_pr4": mode,
@@ -74,6 +75,9 @@ def _minimal_stream_sharded():
             "p50_delta_ms": {"bf16": 0.1},
             "skip_delta": {"bf16": -2},
         },
+        "misroutes": 0,
+        "resilience": {"timeouts": 0, "errors": 0, "breaker_trips": 0,
+                       "shed_queue_full": 0, "degraded_batches": 0},
     }
 
 
@@ -86,6 +90,25 @@ def _minimal_durability():
         "recovery_p50_s": 0.05, "recovery_max_s": 0.1,
         "restarts": 0,
         "acked_loss": 0, "dup_gids": 0, "epoch_regressions": 0,
+    }
+
+
+def _minimal_resilience():
+    """Smallest document satisfying the BENCH_resilience.json schema,
+    with every correctness flag at its only legal value."""
+    return {
+        "shards": 3,
+        "nofault": {"p50_plain_ms": 1.0, "p50_resilient_ms": 1.1,
+                    "overhead_frac": 0.1, "exact": True, "missing": 0},
+        "straggler": {"p50_ms": 10.0, "p99_ms": 200.0,
+                      "p99_bounded": True, "deadline_violations": 0,
+                      "degraded_exact_live": True, "complete_false": True,
+                      "missing_shards": [0],
+                      "supervisor": {"timeouts": 3}},
+        "breaker": {"trips": 1, "recoveries": 1, "open_skips": 2,
+                    "cycle_ok": True},
+        "shed": {"queue_full": 6, "deadline": 1, "expired_batches": 1,
+                 "expired_shed_inf": True, "observed": True},
     }
 
 
@@ -204,6 +227,57 @@ def test_check_bench_json_rejects_bytes_reduction_below_floor(
         node = node[part]
     node[key[-1]] = {**node[key[-1]], "bf16": 1.5}
     path = tmp_path / name
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1
+
+
+def test_check_bench_json_accepts_clean_resilience(tmp_path):
+    path = tmp_path / "BENCH_resilience.json"
+    path.write_text(json.dumps(_minimal_resilience()))
+    assert check_bench_json.main([str(path)]) == 0
+
+
+@pytest.mark.parametrize("key", ["nofault.exact", "straggler.p99_bounded",
+                                 "straggler.degraded_exact_live",
+                                 "straggler.complete_false",
+                                 "breaker.cycle_ok", "shed.observed"])
+def test_check_bench_json_rejects_false_resilience_flag(tmp_path, key):
+    """The resilience flags are correctness claims (bit-exactness,
+    live-shard oracles, breaker cycles): false fails at any config size
+    and no flag relaxes it."""
+    doc = _minimal_resilience()
+    node = doc
+    *parents, leaf = key.split(".")
+    for part in parents:
+        node = node[part]
+    node[leaf] = False
+    path = tmp_path / "BENCH_resilience.json"
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1
+    assert check_bench_json.main(
+        ["--max-p99-p50-ratio", "0", str(path)]) == 1
+
+
+@pytest.mark.parametrize("key", ["nofault.missing",
+                                 "straggler.deadline_violations"])
+def test_check_bench_json_rejects_nonzero_dotted_invariant(tmp_path, key):
+    """ZERO_KEYS resolve dotted paths: a no-fault run that degraded, or
+    a straggler run that blew its deadline, fails the lane."""
+    doc = _minimal_resilience()
+    node = doc
+    *parents, leaf = key.split(".")
+    for part in parents:
+        node = node[part]
+    node[leaf] = 2
+    path = tmp_path / "BENCH_resilience.json"
+    path.write_text(json.dumps(doc))
+    assert check_bench_json.main([str(path)]) == 1
+
+
+def test_check_bench_json_rejects_nonzero_misroutes(tmp_path):
+    doc = _minimal_stream_sharded()
+    doc["misroutes"] = 1
+    path = tmp_path / "BENCH_stream_sharded.json"
     path.write_text(json.dumps(doc))
     assert check_bench_json.main([str(path)]) == 1
 

@@ -1,0 +1,632 @@
+"""Read-path resilience suite: deadlines, circuit breakers, the shard
+supervisor, deterministic fault injection, bounded degradation, and
+engine load shedding.
+
+Acceptance surface of the resilience PR:
+
+  * unit determinism -- seeded ``FaultInjector`` schedules replay
+    identically (the chaos suite's reproducibility contract), breaker
+    state machine under an injected clock;
+  * zero-overhead invariant -- with no faults, the resilient exchange
+    and an armed engine answer **bit-identically** to the plain path;
+  * bounded degradation (the property test) -- for *every* subset of
+    shards failing, the returned neighbors are exactly the brute-force
+    oracle restricted to the live shards, ``missing_shards`` names the
+    failed subset, and ``complete`` is False iff a missing shard could
+    hold a closer point (an *empty* missing shard keeps ``complete``
+    True);
+  * chaos (``-m resilience``, real sleeps) -- a hung shard degrades
+    before the deadline instead of raising, breakers trip -> half-open
+    -> recover end to end, a flapping shard serves throughout;
+  * shedding -- queue-depth and exhausted-budget rejections at submit,
+    expired batches shed at execute (inf results + ``shed`` metadata,
+    never an exception);
+  * compactor-leak regression -- ``close()`` on an index whose
+    background compactor is wedged returns within its timeout and
+    *counts* the leak instead of hanging or staying silent.
+
+First use of a shard composition pays a jit compile (~0.4 s); chaos
+tests therefore warm the no-fault path first and use budgets comfortably
+above compile time, so timeouts measure injected faults, not tracing.
+"""
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import exact_search
+from repro.core.balltree import normalize_query
+from repro.core.distributed import two_round_exchange
+from repro.runtime.fault_tolerance import RetryPolicy, StepWatchdog
+from repro.serve import P2HEngine
+from repro.serve.resilience import (CircuitBreaker, Deadline, FaultError,
+                                    FaultInjector, FaultSpec, QueryRejected,
+                                    RESILIENCE_COUNTERS, ResilienceConfig,
+                                    ShardSupervisor)
+from repro.stream import (CompactionPolicy, MutableP2HIndex,
+                          ShardedMutableP2HIndex)
+from test_stream import DIM, _live_points, _mkdata
+
+K = 5
+
+
+def _mk_sharded(n=210, num_shards=3, seed=0):
+    return ShardedMutableP2HIndex.from_data(
+        _mkdata(n, seed=seed), num_shards, n0=32, seed=seed,
+        policy=CompactionPolicy(delta_capacity=16))
+
+
+def _queries(b=3, seed=7):
+    return np.random.default_rng(seed).normal(
+        size=(b, DIM + 1)).astype(np.float32)
+
+
+def _live_oracle(shard_snaps, q, k):
+    """Brute force restricted to the given shard snapshots' live sets."""
+    Xs, Gs = [], []
+    for sn in shard_snaps:
+        X, G = sn.live_points()
+        if len(X):
+            Xs.append(X)
+            Gs.append(G)
+    B = np.atleast_2d(q).shape[0]
+    if not Xs:
+        return (np.full((B, k), np.inf, np.float32),
+                np.full((B, k), -1, np.int32))
+    X, G = np.concatenate(Xs), np.concatenate(Gs)
+    ed, ei = exact_search(jnp.asarray(X),
+                          jnp.asarray(normalize_query(np.atleast_2d(q))), k=k)
+    ed, ei = np.asarray(ed), np.asarray(ei)
+    return ed, np.where(ei >= 0, G[np.clip(ei, 0, len(G) - 1)], -1)
+
+
+def _assert_matches_live(bd, bi, shard_snaps, q, k, tag=""):
+    """Degraded-exactness assert: answers == oracle over the live shards
+    (id swaps tolerated only across f32-level distance ties)."""
+    ed, eg = _live_oracle(shard_snaps, q, k)
+    np.testing.assert_allclose(bd, ed, rtol=1e-4, atol=1e-5, err_msg=tag)
+    tie_tol = 1e-4 * np.where(np.isfinite(ed), np.abs(ed), 0) + 1e-6
+    qn = normalize_query(np.atleast_2d(q)).astype(np.float32)
+    live = None
+    for r in range(len(eg)):
+        mism = bi[r] != eg[r]
+        if not mism.any():
+            continue
+        assert (np.abs(np.where(np.isfinite(ed[r]), bd[r] - ed[r], 0))[mism]
+                <= tie_tol[r][mism]).all(), (tag, r)
+        if live is None:
+            live = {}
+            for sn in shard_snaps:
+                live.update(_live_points(sn))
+        for j in np.nonzero(mism)[0]:
+            gid = int(bi[r][j])
+            if gid < 0 and eg[r][j] < 0:
+                continue  # both padded (fewer than k live points)
+            assert gid in live, (tag, r, gid)
+            true_d = abs(float(live[gid] @ qn[r]))
+            assert abs(true_d - ed[r][j]) <= tie_tol[r][j], (
+                tag, r, gid, true_d, ed[r][j])
+
+
+# ---------------------------------------------------------------- deadline
+def test_deadline_basics():
+    d = Deadline.after(60.0)
+    assert not d.expired and 59.0 < d.remaining() <= 60.0
+    past = Deadline(0.0)  # monotonic epoch is long gone
+    assert past.expired and past.remaining() < 0
+    assert "remaining" in repr(d)
+
+
+# ----------------------------------------------------------------- breaker
+def test_breaker_trips_resets_and_recovers():
+    clk = [0.0]
+    br = CircuitBreaker(failures=3, reset_s=2.0, clock=lambda: clk[0])
+    assert br.state == "closed" and br.admit()
+    br.record_failure()
+    br.record_failure()
+    assert br.state == "closed"  # 2 < 3 consecutive
+    br.record_success()
+    br.record_failure()
+    br.record_failure()
+    br.record_failure()  # success reset the streak; 3 fresh ones trip
+    assert br.state == "open" and br.trips == 1
+    assert not br.admit()
+    clk[0] = 1.9
+    assert not br.admit()  # reset_s not yet elapsed
+    clk[0] = 2.0
+    assert br.state == "half_open"
+    assert br.admit()       # the single half-open probe
+    assert not br.admit()   # slot taken until its outcome lands
+    br.record_success()
+    assert br.state == "closed" and br.recoveries == 1
+
+
+def test_breaker_probe_failure_reopens_and_abandon_releases():
+    clk = [0.0]
+    br = CircuitBreaker(failures=1, reset_s=1.0, clock=lambda: clk[0])
+    br.record_failure()
+    assert br.state == "open" and br.trips == 1
+    clk[0] = 1.0
+    assert br.admit()
+    br.record_failure()  # probe failed -> re-open, fresh reset window
+    assert br.state == "open" and br.trips == 2
+    clk[0] = 2.0
+    assert br.admit() and not br.admit()
+    br.abandon()         # probe never ran (e.g. sibling breaker open)
+    assert br.admit()    # slot is free again
+    br.record_success()
+    assert br.state == "closed" and br.recoveries == 1
+
+
+# ---------------------------------------------------------- fault injector
+def _drive(inj, schedule):
+    """Apply ``inj.act`` per (shard, repeats), swallowing FaultErrors."""
+    for shard, reps in schedule:
+        for _ in range(reps):
+            try:
+                inj.act(shard)
+            except FaultError:
+                pass
+
+
+def test_fault_injector_deterministic_replay():
+    plans = {0: [FaultSpec("error", after=1, until=3)],
+             1: [FaultSpec("error", p=0.5)],
+             2: [FaultSpec("flap", period=2, after=1)]}
+    schedule = [(0, 2), (1, 3), (2, 4), (0, 2), (1, 2), (2, 3)]
+    inj_a = FaultInjector(plans, seed=42)
+    inj_b = FaultInjector(plans, seed=42)
+    _drive(inj_a, schedule)
+    _drive(inj_b, schedule)
+    assert inj_a.log == inj_b.log          # same seed => identical log
+    assert len(inj_a.log) == sum(r for _, r in schedule)
+    replay = list(inj_a.log)
+    inj_a.reset()
+    _drive(inj_a, schedule)
+    assert inj_a.log == replay             # reset() replays exactly
+    inj_c = FaultInjector(plans, seed=43)
+    _drive(inj_c, schedule)
+    # p=0.5 shard must depend on the seed (else p is being ignored)
+    assert [e for e in inj_c.log if e[0] == 1] != \
+        [e for e in inj_a.log if e[0] == 1]
+
+
+def test_fault_injector_windows_and_flap():
+    inj = FaultInjector({0: [FaultSpec("error", after=2, until=4)],
+                         1: [FaultSpec("flap", period=2, after=0)]})
+    acts0 = []
+    for _ in range(6):
+        try:
+            acts0.append(inj.act(0))
+        except FaultError:
+            acts0.append("error")
+    assert acts0 == ["ok", "ok", "error", "error", "ok", "ok"]
+    acts1 = []
+    for _ in range(8):
+        try:
+            acts1.append(inj.act(1))
+        except FaultError:
+            acts1.append("error")
+    # faulty/healthy windows of `period` calls, starting faulty
+    assert acts1 == ["error", "error", "ok", "ok",
+                     "error", "error", "ok", "ok"]
+
+
+def test_fault_injector_hang_blocks_until_release():
+    inj = FaultInjector({0: [FaultSpec("hang")]}, hang_s=5.0)
+    t0 = time.monotonic()
+    threading.Timer(0.05, inj.release).start()
+    with pytest.raises(FaultError):
+        inj.act(0)
+    dt = time.monotonic() - t0
+    assert 0.04 <= dt < 2.0  # released early, not the full hang_s
+
+
+def test_retry_policy_retryable_and_watchdog_context():
+    pol = RetryPolicy(max_restarts=1, restartable=(FaultError, IOError))
+    assert pol.retryable(FaultError("x")) and pol.retryable(IOError("y"))
+    assert not pol.retryable(ValueError("z"))
+    fired = []
+    with StepWatchdog(30.0, on_expire=lambda: fired.append(1)) as wd:
+        wd.beat()
+    assert not fired and not wd.expired
+
+
+# -------------------------------------------------------------- supervisor
+def test_supervisor_timeout_error_and_retry():
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=0.15, retry=RetryPolicy(max_restarts=0)))
+    ok, val, why = sup.call([0], lambda: "fine")
+    assert (ok, val, why) == (True, "fine", "ok")
+    ok, _, why = sup.call([0], lambda: time.sleep(1.0))
+    assert not ok and why == "timeout"
+
+    def boom():
+        raise ValueError("not transient")
+
+    ok, _, why = sup.call([0], boom)
+    assert not ok and why == "error:ValueError"
+    st = sup.stats()
+    assert st["calls"] == 3 and st["ok"] == 1
+    assert st["timeouts"] == 1 and st["errors"] == 1 and st["retries"] == 0
+
+    # a transient first failure earns one in-budget relaunch
+    inj = FaultInjector({3: [FaultSpec("error", until=1)]})
+    sup2 = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=2.0, fault_injector=inj,
+        retry=RetryPolicy(max_restarts=1, restartable=(FaultError,))))
+    ok, val, why = sup2.call([3], lambda: "recovered")
+    assert (ok, val, why) == (True, "recovered", "ok")
+    assert sup2.stats()["retries"] == 1 and sup2.stats()["errors"] == 0
+    assert [a for _, _, a in inj.log] == ["error", "ok"]
+
+
+def test_supervisor_deadline_clamps_budget():
+    sup = ShardSupervisor(ResilienceConfig(shard_timeout_s=30.0))
+    t0 = time.monotonic()
+    ok, _, why = sup.call([0], lambda: time.sleep(5.0),
+                          deadline=Deadline.after(0.15))
+    assert not ok and why == "timeout"
+    assert time.monotonic() - t0 < 2.0  # clamped to the deadline, not 30 s
+    ok, _, why = sup.call([0], lambda: "x", deadline=Deadline(0.0))
+    assert not ok and why == "deadline"  # exhausted before launch
+
+
+def test_supervisor_hedge_beats_straggler():
+    # call 0 on shard 5 is slow (injected latency), the hedge is not:
+    # the duplicate must win well before the straggler finishes
+    inj = FaultInjector({5: [FaultSpec("latency", latency_s=0.8, until=1)]})
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=5.0, hedge_after_s=0.05, fault_injector=inj,
+        retry=RetryPolicy(max_restarts=1, restartable=(FaultError,))))
+    t0 = time.monotonic()
+    ok, val, why = sup.call([5], lambda: "answer")
+    dt = time.monotonic() - t0
+    assert (ok, val, why) == (True, "answer", "ok")
+    assert dt < 0.7, dt  # did not wait out the straggler
+    st = sup.stats()
+    assert st["hedges"] == 1 and st["hedge_wins"] == 1
+    time.sleep(0.9)  # let the straggler drain before teardown
+
+
+def test_supervisor_breaker_fast_fails_without_calling():
+    inj = FaultInjector({2: [FaultSpec("error")]})
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=2.0, breaker_failures=2, breaker_reset_s=60.0,
+        fault_injector=inj, retry=RetryPolicy(max_restarts=0)))
+    for _ in range(2):
+        ok, _, why = sup.call([2], lambda: "x")
+        assert not ok and why == "error:FaultError"
+    n_log = len(inj.log)
+    ok, _, why = sup.call([2], lambda: "x")
+    assert not ok and why == "breaker_open"
+    assert len(inj.log) == n_log  # fast-fail: the backend was never hit
+    st = sup.stats()
+    assert st["breaker_open_skips"] == 1 and st["breaker_trips"] == 1
+    assert st["breaker_states"] == {2: "open"}
+
+
+# ----------------------------------------------------- batcher / shedding
+def test_batcher_sheds_and_batches_carry_deadlines():
+    from repro.serve.batcher import MicroBatcher
+
+    b = MicroBatcher(d=3, slot_size=4, max_pending=2)
+    b.submit(np.zeros(3, np.float32), k=1)
+    b.submit(np.zeros(3, np.float32), k=1,
+             deadline=Deadline.after(30.0))
+    with pytest.raises(QueryRejected) as e:
+        b.submit(np.zeros(3, np.float32), k=1)
+    assert e.value.reason == "queue_full"
+    # an exhausted budget outranks queue state in the rejection reason
+    with pytest.raises(QueryRejected) as e:
+        b.submit(np.zeros(3, np.float32), k=1, deadline=Deadline(0.0))
+    assert e.value.reason == "deadline"
+    # force=True bypasses admission control (the engine's drop-in path)
+    near = Deadline.after(5.0)
+    b.submit(np.zeros(3, np.float32), k=1, deadline=near, force=True)
+    (mb,) = list(b.drain())
+    assert mb.occupancy == 3 and len(mb.deadlines) == 3
+    assert mb.deadline is near  # earliest across the batch
+
+
+# --------------------------------------------------- exchange: zero fault
+def test_exchange_nofault_bitexact_vs_plain():
+    m = _mk_sharded()
+    q = _queries()
+    bd0, bi0 = m.query(q, k=K, method="sweep")
+    sup = ShardSupervisor(ResilienceConfig(shard_timeout_s=60.0))
+    bd1, bi1, info = m.query(q, k=K, method="sweep", return_info=True,
+                             resilience=sup)
+    assert np.array_equal(bd0, bd1) and np.array_equal(bi0, bi1)
+    assert info["missing_shards"] == () and info["complete"]
+    assert not info["degraded"]
+    st = sup.stats()
+    assert st["degraded_batches"] == 0 and st["timeouts"] == 0
+    # deadline alone (no supervisor) also routes resiliently, bit-exact
+    bd2, bi2, info2 = m.query(q, k=K, method="sweep", return_info=True,
+                              deadline_s=60.0)
+    assert np.array_equal(bd0, bd2) and np.array_equal(bi0, bi2)
+    assert info2["complete"]
+    m.close()
+
+
+def test_exchange_rejects_lambda_cap_on_resilient_path():
+    m = _mk_sharded(n=90)
+    with pytest.raises(ValueError, match="lambda_cap"):
+        m.query(_queries(1), k=3, deadline_s=1.0,
+                lambda_cap=np.full((1,), 1.0, np.float32))
+    m.close()
+
+
+# --------------------------------------- exchange: degraded (property)
+def test_exchange_degraded_matches_live_oracle_all_subsets():
+    """The bounded-degradation property, exhaustively: for EVERY subset
+    of shards failing, answers == oracle over the live shards,
+    ``missing_shards`` == the subset, and ``complete`` is False iff a
+    live point went missing."""
+    m = _mk_sharded()
+    q = _queries()
+    snaps = [sh.snapshot() for sh in m.shards]
+    S = len(snaps)
+    for mask in range(2 ** S):
+        subset = {si for si in range(S) if mask >> si & 1}
+        inj = FaultInjector({si: [FaultSpec("error")] for si in subset})
+        sup = ShardSupervisor(ResilienceConfig(
+            shard_timeout_s=60.0, breaker_failures=99, fault_injector=inj,
+            retry=RetryPolicy(max_restarts=0)))
+        bd, bi, info = m.query(q, k=K, method="sweep", return_info=True,
+                               resilience=sup)
+        assert set(info["missing_shards"]) == subset, mask
+        assert info["degraded"] == bool(subset)
+        # every shard here has live points, so completeness == no loss
+        assert info["complete"] == (not subset), mask
+        live = [snaps[si] for si in range(S) if si not in subset]
+        _assert_matches_live(bd, bi, live, q, K, tag=f"subset={subset}")
+        if subset == set(range(S)):
+            assert np.all(np.isinf(bd)) and np.all(bi == -1)
+        assert sup.stats()["degraded_batches"] == (1 if subset else 0)
+    m.close()
+
+
+def test_exchange_empty_missing_shard_stays_complete():
+    """A missing shard with zero live points cannot hold a closer point:
+    the result is still byte-complete and ``complete`` stays True."""
+    # distinct gid ranges: the exchange merges by *global* id, and the
+    # sharded front-end never hands two shards the same gid
+    a = MutableP2HIndex.from_data(_mkdata(80, seed=1), n0=32,
+                                  gids=np.arange(80, dtype=np.int32))
+    b = MutableP2HIndex.from_data(_mkdata(80, seed=2), n0=32,
+                                  gids=np.arange(80, 160, dtype=np.int32))
+    empty = MutableP2HIndex(DIM, n0=32)
+    snaps = (a.snapshot(), b.snapshot(), empty.snapshot())
+    qn = normalize_query(_queries()).astype(np.float32)
+    inj = FaultInjector({2: [FaultSpec("error")]})
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=60.0, breaker_failures=99, fault_injector=inj,
+        retry=RetryPolicy(max_restarts=0)))
+    bd, bi, _cnt, info = two_round_exchange(
+        snaps, qn, K, method="sweep", return_info=True, resilience=sup)
+    assert info["missing_shards"] == (2,)
+    assert info["degraded"] and info["complete"]  # nothing was lost
+    _assert_matches_live(np.asarray(bd), np.asarray(bi), snaps[:2],
+                         qn, K, tag="empty-missing")
+
+
+def test_exchange_round1_failure_redeemed_by_round2():
+    """A transient round-1 blip must not lose the shard: round 2 runs a
+    full scan with include_deltas=True and the answer stays complete."""
+    m = _mk_sharded()
+    q = _queries()
+    bd0, bi0 = m.query(q, k=K, method="sweep")
+    # shard 1 errors exactly once -- its round-1 beam -- then heals
+    inj = FaultInjector({1: [FaultSpec("error", until=1)]})
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=60.0, breaker_failures=99, fault_injector=inj,
+        retry=RetryPolicy(max_restarts=0)))
+    bd, bi, info = m.query(q, k=K, method="sweep", return_info=True,
+                           resilience=sup)
+    assert info["missing_shards"] == () and info["complete"]
+    np.testing.assert_allclose(bd, bd0, rtol=1e-4, atol=1e-5)
+    _assert_matches_live(bd, bi, [sh.snapshot() for sh in m.shards],
+                         q, K, tag="r1-redeemed")
+    m.close()
+
+
+# ----------------------------------------------------------------- engine
+def test_engine_nofault_bitexact_and_uniform_stats():
+    m = _mk_sharded()
+    q = _queries(4)
+    plain = P2HEngine(m, slot_size=4)
+    bd0, bi0 = plain.query(q, k=K)
+    armed = P2HEngine(m, slot_size=4,
+                      resilience=ResilienceConfig(shard_timeout_s=60.0))
+    bd1, bi1, metas = armed.query(q, k=K, return_meta=True)
+    assert np.array_equal(bd0, bd1) and np.array_equal(bi0, bi1)
+    assert all(mt["complete"] and not mt["degraded"] for mt in metas)
+    # the stats surface is uniform: both engines expose every counter
+    for eng in (plain, armed):
+        st = eng.stats()
+        assert set(RESILIENCE_COUNTERS) <= set(st["resilience"])
+        assert st["misroutes"] == 0
+    assert plain.stats()["resilience"]["calls"] == 0  # layer never armed
+    assert armed.stats()["resilience"]["ok"] > 0
+    m.close()
+
+
+def test_engine_sheds_queue_full_and_expired_deadline():
+    idx_m = MutableP2HIndex.from_data(_mkdata(64, seed=3), n0=32)
+    eng = P2HEngine(idx_m, slot_size=4,
+                    resilience=ResilienceConfig(max_pending=1))
+    q = _queries(1)[0]
+    eng.submit(q, k=2)
+    with pytest.raises(QueryRejected) as e:
+        eng.submit(q, k=2)
+    assert e.value.reason == "queue_full"
+    eng.flush()
+    with pytest.raises(QueryRejected) as e:
+        eng.submit(q, k=2, deadline_s=0.0)
+    assert e.value.reason == "deadline"
+    with pytest.raises(QueryRejected):
+        eng.query(q, k=2, deadline_s=0.0)
+    res = eng.stats()["resilience"]
+    assert res["shed_queue_full"] == 1 and res["shed_deadline"] == 2
+    idx_m.close()
+
+
+def test_engine_expired_batch_shed_returns_inf_not_exception():
+    idx_m = MutableP2HIndex.from_data(_mkdata(64, seed=4), n0=32)
+    eng = P2HEngine(idx_m, slot_size=4)
+    t = eng.submit(_queries(1)[0], k=2, deadline_s=0.02)
+    time.sleep(0.06)  # the budget dies in the queue
+    eng.flush()
+    mt = eng.result_meta(t)  # meta travels with the result: read it first
+    assert mt["shed"] and not mt["complete"]
+    bd, bi = eng.result(t)
+    assert np.all(np.isinf(bd)) and np.all(bi == -1)
+    assert eng.stats()["resilience"]["shed_expired_batches"] == 1
+    # an unmetadata'd ticket reads as complete (zero-fault default)
+    t2 = eng.submit(_queries(1)[0], k=2)
+    eng.flush()
+    assert eng.result_meta(t2)["complete"]
+    eng.result(t2)
+    idx_m.close()
+
+
+# -------------------------------------------------- compactor-leak fence
+def test_close_detects_wedged_compactor_instead_of_hanging():
+    m = MutableP2HIndex.from_data(
+        _mkdata(120, seed=5), n0=32, background=True,
+        policy=CompactionPolicy(delta_capacity=8))
+    entered, blocker = threading.Event(), threading.Event()
+
+    def wedge(_stk):
+        entered.set()
+        blocker.wait(30.0)
+
+    m._warmup_hook = wedge
+    for i in range(12):  # overflow the delta: triggers a background run
+        m.insert(_mkdata(1, seed=100 + i)[0])
+    assert entered.wait(10.0), "compactor never reached the warmup hook"
+    t0 = time.monotonic()
+    m.close(timeout_s=0.2)
+    assert time.monotonic() - t0 < 2.0  # returned, did not hang
+    assert m.admission_stats()["compactor_leaked"] == 1
+    blocker.set()  # unwedge the leaked daemon so teardown is clean
+
+
+def test_sharded_admission_stats_aggregate_leak_counter():
+    m = _mk_sharded(n=90)
+    st = m.admission_stats()
+    assert st["compactor_leaked"] == 0  # key present even when healthy
+    m.close(timeout_s=1.0)
+
+
+# ------------------------------------------------------ chaos (-m resilience)
+@pytest.mark.resilience
+def test_hung_shard_degrades_before_deadline():
+    m = _mk_sharded()
+    q = _queries()
+    m.query(q, k=K, method="sweep")  # warm every per-shard program
+    snaps = [sh.snapshot() for sh in m.shards]
+    inj = FaultInjector({0: [FaultSpec("hang")]}, hang_s=10.0)
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=0.3, fault_injector=inj,
+        retry=RetryPolicy(max_restarts=0)))
+    t0 = time.monotonic()
+    bd, bi, info = m.query(q, k=K, method="sweep", return_info=True,
+                           resilience=sup, deadline_s=2.5)
+    dt = time.monotonic() - t0
+    assert dt < 2.5 + 0.5, dt  # bounded by the deadline, not the hang
+    assert 0 in info["missing_shards"] and not info["complete"]
+    _assert_matches_live(bd, bi, [snaps[si] for si in range(3)
+                                  if si not in info["missing_shards"]],
+                         q, K, tag="hung-shard")
+    assert sup.stats()["timeouts"] >= 1
+    inj.release()
+    time.sleep(0.3)  # let abandoned workers drain before teardown
+    m.close()
+
+
+@pytest.mark.resilience
+def test_breaker_trip_and_recover_end_to_end():
+    m = _mk_sharded()
+    q = _queries(1)
+    m.query(q, k=K, method="sweep")  # warm
+    # shard 1: errors for its first 3 calls, healthy afterwards
+    inj = FaultInjector({1: [FaultSpec("error", until=3)]})
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=30.0, breaker_failures=2, breaker_reset_s=0.3,
+        fault_injector=inj, retry=RetryPolicy(max_restarts=0)))
+    _, _, info = m.query(q, k=K, method="sweep", return_info=True,
+                         resilience=sup)
+    assert info["missing_shards"] == (1,)        # r1 + r2 failed -> trip
+    assert sup.stats()["breaker_trips"] >= 1
+    _, _, info = m.query(q, k=K, method="sweep", return_info=True,
+                         resilience=sup)
+    assert info["missing_shards"] == (1,)        # still failing or open
+    # while open, backend calls on shard 1 are spared entirely; at most
+    # one half-open probe per reset window may have slipped in
+    assert len([e for e in inj.log if e[0] == 1]) <= 3
+    # the error window (3 calls) drains through half-open probes, then
+    # a probe succeeds and the breaker closes: the shard is back
+    healed = False
+    for _ in range(8):
+        time.sleep(0.35)
+        _, _, info = m.query(q, k=K, method="sweep", return_info=True,
+                             resilience=sup)
+        if info["missing_shards"] == ():
+            healed = True
+            break
+    assert healed and info["complete"]
+    st = sup.stats()
+    assert st["breaker_open_skips"] >= 1
+    assert st["breaker_recoveries"] >= 1
+    assert st["breaker_states"][1] == "closed"
+    m.close()
+
+
+@pytest.mark.resilience
+def test_flapping_shard_serves_throughout():
+    m = _mk_sharded()
+    q = _queries(2)
+    m.query(q, k=K, method="sweep")  # warm
+    snaps = [sh.snapshot() for sh in m.shards]
+    inj = FaultInjector({2: [FaultSpec("flap", period=2)]})
+    sup = ShardSupervisor(ResilienceConfig(
+        shard_timeout_s=30.0, breaker_failures=99,
+        fault_injector=inj, retry=RetryPolicy(max_restarts=0)))
+    outcomes = []
+    for i in range(6):
+        bd, bi, info = m.query(q, k=K, method="sweep", return_info=True,
+                               resilience=sup)
+        outcomes.append(info["missing_shards"])
+        live = [snaps[si] for si in range(3)
+                if si not in info["missing_shards"]]
+        _assert_matches_live(bd, bi, live, q, K, tag=f"flap-{i}")
+    # the flap produced both degraded and complete windows
+    assert any(ms for ms in outcomes) and any(not ms for ms in outcomes)
+    m.close()
+
+
+@pytest.mark.resilience
+def test_engine_degraded_meta_under_hang():
+    m = _mk_sharded()
+    q = _queries(2)
+    cfg = ResilienceConfig(shard_timeout_s=0.3,
+                           retry=RetryPolicy(max_restarts=0))
+    eng = P2HEngine(m, slot_size=2, resilience=cfg)
+    eng.query(q, k=K)  # warm the engine's route
+    inj = FaultInjector({1: [FaultSpec("hang")]}, hang_s=10.0)
+    cfg.fault_injector = inj
+    t0 = time.monotonic()
+    bd, bi, metas = eng.query(q, k=K, deadline_s=2.5, return_meta=True)
+    assert time.monotonic() - t0 < 3.0
+    assert all(1 in mt["missing_shards"] and not mt["complete"]
+               and mt["degraded"] for mt in metas)
+    st = eng.stats()["resilience"]
+    assert st["timeouts"] >= 1 and st["degraded_batches"] >= 1
+    inj.release()
+    time.sleep(0.3)
+    m.close()

@@ -21,13 +21,15 @@ tunables, so any non-zero value fails the lane at any config size.
 
 Usage (CI bench-smoke lane; see .github/workflows/ci.yml):
 
-    python -m benchmarks.run --only serve,stream_sharded,durability,mesh \
+    python -m benchmarks.run \
+        --only serve,stream_sharded,durability,mesh,resilience \
         --smoke --out-dir bench-json
     python tools/check_bench_json.py --max-p99-p50-ratio 10 \
         bench-json/BENCH_serve.json \
         bench-json/BENCH_stream_sharded.json \
         bench-json/BENCH_durability.json \
-        bench-json/BENCH_mesh.json
+        bench-json/BENCH_mesh.json \
+        bench-json/BENCH_resilience.json
 """
 from __future__ import annotations
 
@@ -46,6 +48,8 @@ SCHEMAS = {
         "cold.qps": _NUM, "cold.tiles_skipped": _NUM,
         "warm.qps": _NUM, "warm.p50_ms": _NUM, "warm.p99_ms": _NUM,
         "warm.tiles_skipped": _NUM,
+        "warm.resilience.timeouts": _NUM,
+        "kind": str,
         "stacked.fanout": _NUM,
         # probe-mode keys carry a "mode_" prefix: the section is named
         # "stacked" and one of its modes used to be too, making the
@@ -120,6 +124,10 @@ SCHEMAS = {
         "quantized.bytes_tile_reduction.int8": _NUM,
         "quantized.p50_delta_ms.bf16": _NUM,
         "quantized.skip_delta.bf16": _NUM,
+        "misroutes": _NUM,
+        "resilience.timeouts": _NUM,
+        "resilience.breaker_trips": _NUM,
+        "resilience.shed_queue_full": _NUM,
     },
     "BENCH_mesh.json": {
         "device_counts": list,
@@ -130,6 +138,31 @@ SCHEMAS = {
         "devices_4.qps": _NUM, "devices_4.p50_ms": _NUM,
         "devices_4.p99_ms": _NUM, "devices_4.exact": bool,
         "qps_monotone": bool,
+    },
+    "BENCH_resilience.json": {
+        "shards": _NUM,
+        "nofault.p50_plain_ms": _NUM,
+        "nofault.p50_resilient_ms": _NUM,
+        "nofault.overhead_frac": _NUM,
+        "nofault.exact": bool,
+        "nofault.missing": _NUM,
+        "straggler.p50_ms": _NUM,
+        "straggler.p99_ms": _NUM,
+        "straggler.p99_bounded": bool,
+        "straggler.deadline_violations": _NUM,
+        "straggler.degraded_exact_live": bool,
+        "straggler.complete_false": bool,
+        "straggler.missing_shards": list,
+        "straggler.supervisor.timeouts": _NUM,
+        "breaker.trips": _NUM,
+        "breaker.recoveries": _NUM,
+        "breaker.open_skips": _NUM,
+        "breaker.cycle_ok": bool,
+        "shed.queue_full": _NUM,
+        "shed.deadline": _NUM,
+        "shed.expired_batches": _NUM,
+        "shed.expired_shed_inf": bool,
+        "shed.observed": bool,
     },
 }
 
@@ -153,6 +186,14 @@ RATIO_KEYS = {
 ZERO_KEYS = {
     "BENCH_durability.json": ("acked_loss", "dup_gids",
                               "epoch_regressions"),
+    # the no-fault sections of the fault-free benches must report zero
+    # faults: a misrouted write, a spurious timeout, or a degraded batch
+    # on a healthy run is a bug, not a tunable
+    "BENCH_stream_sharded.json": ("misroutes", "resilience.timeouts",
+                                  "resilience.errors",
+                                  "resilience.degraded_batches"),
+    "BENCH_resilience.json": ("nofault.missing",
+                              "straggler.deadline_violations"),
 }
 
 #: dotted paths that must be exactly ``true`` -- same always-enforced
@@ -169,6 +210,15 @@ TRUE_KEYS = {
     # quantization buys bandwidth, never answers
     "BENCH_serve.json": ("stacked.quantized.quantized_exact",),
     "BENCH_stream_sharded.json": ("quantized.quantized_exact",),
+    # the resilience fences: no-fault answers bit-exact vs the plain
+    # exchange, degraded answers exactly the oracle over the live
+    # shards, p99 under a straggler bounded by the deadline, breaker
+    # trip -> half-open probe -> recover observed end-to-end, and all
+    # three shed counters fired
+    "BENCH_resilience.json": (
+        "nofault.exact", "straggler.p99_bounded",
+        "straggler.degraded_exact_live", "straggler.complete_false",
+        "breaker.cycle_ok", "shed.expired_shed_inf", "shed.observed"),
 }
 
 #: dotted paths with a hard numeric floor, keyed by file basename --
@@ -251,10 +301,10 @@ def check_file(path: str, max_ratio: float = 0.0) -> list:
                     f"= {ratio:.1f}x exceeds --max-p99-p50-ratio "
                     f"{max_ratio:g} (tail-latency regression)")
     for key in ZERO_KEYS.get(name, ()):
-        val = doc.get(key)
+        val = _dotted(doc, key)  # top-level keys are a 1-part dotted path
         if isinstance(val, _NUM) and not isinstance(val, bool) and val != 0:
             errors.append(f"{path}: invariant {key!r} = {val} (must be 0 "
-                          "-- durability contract violated)")
+                          "-- zero-fault contract violated)")
     for key in TRUE_KEYS.get(name, ()):
         val = _dotted(doc, key)
         if isinstance(val, bool) and val is not True:
